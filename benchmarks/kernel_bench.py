@@ -1,0 +1,78 @@
+"""Kernel micro-bench: GRAU epilogue fusion traffic accounting + wall time.
+
+On this CPU container the Pallas kernels run in interpret mode, so wall time
+is NOT a TPU number; the TPU-relevant output is the HBM-traffic model of the
+fused int8 GEMM + GRAU epilogue vs. the unfused (matmul -> int32 out ->
+requant pass) baseline — the quantity the §Perf memory-roofline claims use.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.build import build_grau
+from repro.core.folding import fold
+from repro.kernels import ops
+from repro.kernels.ref import grau_ref, matmul_grau_ref
+
+
+def traffic_model(m, k, n):
+    """Bytes to/from HBM for fused vs unfused MAC->quant path."""
+    fused = m * k + k * n + m * n                # int8 in, int8 out
+    unfused = (m * k + k * n + 4 * m * n         # GEMM writes int32
+               + 4 * m * n + m * n)              # requant reads int32, writes int8
+    return fused, unfused
+
+
+def _time(f, *args, reps=3):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else None
+    outs = f(*args)
+    jax.block_until_ready(outs)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(quick: bool = False):
+    rows = []
+    spec = build_grau(fold("silu", s_in=2**-10, s_out=2**-4, out_bits=8),
+                      mac_range=(-30000, 30000), segments=6, num_exponents=8,
+                      mode="apot", bias_mode="lsq").spec
+    shapes = [(256, 512, 256)] if quick else [(256, 512, 256), (512, 1024, 512)]
+    for m, k, n in shapes:
+        key = jax.random.PRNGKey(0)
+        x = jax.random.randint(key, (m, k), -128, 128, dtype=jnp.int8)
+        w = jax.random.randint(key, (k, n), -128, 128, dtype=jnp.int8)
+
+        us_fused = _time(lambda: ops.matmul_grau(x, w, spec,
+                                                 tiles=(128, 128, 128),
+                                                 interpret=True))
+        us_ref = _time(lambda: matmul_grau_ref(x, w, spec))
+        ok = bool(jnp.all(ops.matmul_grau(x, w, spec, tiles=(128, 128, 128),
+                                          interpret=True)
+                          == matmul_grau_ref(x, w, spec)))
+        fused_b, unfused_b = traffic_model(m, k, n)
+        rows.append({"shape": (m, k, n), "us_fused_interp": us_fused,
+                     "us_ref": us_ref, "bitexact": ok,
+                     "traffic_saving": 1 - fused_b / unfused_b})
+        print(f"kernel,matmul_grau,{m}x{k}x{n},us_interp={us_fused:.0f},"
+              f"us_ref={us_ref:.0f},bitexact={ok},"
+              f"hbm_traffic_saving={100 * (1 - fused_b / unfused_b):.1f}%",
+              flush=True)
+
+    # standalone GRAU unit vs element count (throughput of the epilogue alone)
+    xq = jax.random.randint(jax.random.PRNGKey(1), (512, 1024), -60000, 60000,
+                            dtype=jnp.int32)
+    us = _time(lambda: ops.grau(xq, spec, interpret=True))
+    ok = bool(jnp.all(ops.grau(xq, spec, interpret=True) == grau_ref(xq, spec)))
+    print(f"kernel,grau,512x1024,us_interp={us:.0f},bitexact={ok}", flush=True)
+    rows.append({"shape": (512, 1024), "us_fused_interp": us, "bitexact": ok})
+    return rows
+
+
+if __name__ == "__main__":
+    run()

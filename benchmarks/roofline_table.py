@@ -1,0 +1,77 @@
+"""§Roofline table: aggregate the dry-run JSON records into the per-cell
+three-term roofline + MODEL_FLOPS ratio (EXPERIMENTS.md §Roofline source)."""
+from __future__ import annotations
+
+import json
+import math
+import pathlib
+
+import jax
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+# active params (B) for MODEL_FLOPS = 6*N_active*D (train) / 2*N_active (decode)
+_ACTIVE_B = {}
+
+
+def active_params(arch: str) -> float:
+    if arch not in _ACTIVE_B:
+        from repro.configs.archs import get_config
+        from repro.launch.steps import abstract_params
+        cfg = get_config(arch)
+        shapes, _ = abstract_params(cfg)
+        total = sum(math.prod(s.shape) for s in jax.tree.leaves(shapes))
+        # subtract inactive routed experts
+        if cfg.moe is not None:
+            import numpy as np
+            expert = 0
+            for key in ("w_gate", "w_up", "w_down"):
+                pass
+            # routed expert params: find leaves with leading dim == num_experts
+            e, k = cfg.moe.num_experts, cfg.moe.top_k
+            routed = sum(math.prod(s.shape) for p, s in
+                         jax.tree_util.tree_flatten_with_path(shapes)[0]
+                         if s.ndim >= 3 and s.shape[-3] == e)
+            total = total - routed + routed * (k / e)
+        _ACTIVE_B[arch] = total
+    return _ACTIVE_B[arch]
+
+
+def tokens_for(shape: str) -> float:
+    from repro.configs.shapes import SHAPES
+    sp = SHAPES[shape]
+    if sp.kind == "train":
+        return sp.seq_len * sp.global_batch
+    if sp.kind == "prefill":
+        return sp.seq_len * sp.global_batch
+    return 1 * sp.global_batch      # decode: one token per sequence
+
+
+def run(quick: bool = False, mesh: str = "single", tag: str = ""):
+    rows = []
+    suffix = f"__{tag}" if tag else ""
+    for p in sorted(DRYRUN_DIR.glob(f"*__{mesh}{suffix}.json")):
+        r = json.loads(p.read_text())
+        if (r.get("tag") or "") != tag:
+            continue
+        arch, shape = r["arch"], r["shape"]
+        n = active_params(arch)
+        train = shape.startswith("train")
+        mf = (6.0 if train else 2.0) * n * tokens_for(shape) / r["chips"]
+        ratio = mf / r["flops"] if r["flops"] else 0.0
+        rl = r["roofline"]
+        dom_t = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+        frac = rl["compute_s"] / dom_t if dom_t else 0.0
+        rows.append({**rl, "arch": arch, "shape": shape,
+                     "model_flops_ratio": ratio, "roofline_frac": frac,
+                     "dominant": rl["dominant"]})
+        print(f"roofline,{arch},{shape},{mesh},compute={rl['compute_s']:.4f}s,"
+              f"memory={rl['memory_s']:.4f}s,coll={rl['collective_s']:.4f}s,"
+              f"dom={rl['dominant']},useful_ratio={ratio:.2f},"
+              f"roofline_frac={frac:.3f}", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    run(mesh=sys.argv[1] if len(sys.argv) > 1 else "single")

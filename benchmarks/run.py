@@ -1,0 +1,40 @@
+"""Benchmark driver — one section per paper table + roofline + kernels.
+
+``PYTHONPATH=src python -m benchmarks.run [--quick]``
+Prints ``name,...`` CSV lines per benchmark (see each module).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: table3,table45,table6,kernels,roofline")
+    args = ap.parse_args()
+    want = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (kernel_bench, roofline_table, table3_small_models,
+                            table45_sweep, table6_hwcost)
+
+    sections = [
+        ("table6", table6_hwcost.run),          # instant: cost model
+        ("table45", table45_sweep.run),         # seconds: fit sweep
+        ("kernels", kernel_bench.run),          # ~1 min: interpret kernels
+        ("roofline", roofline_table.run),       # instant: reads dry-run JSON
+        ("table3", table3_small_models.run),    # minutes: trains small models
+    ]
+    for name, fn in sections:
+        if want and name not in want:
+            continue
+        t0 = time.time()
+        print(f"== {name} ==", flush=True)
+        fn(quick=args.quick)
+        print(f"== {name} done in {time.time() - t0:.1f}s ==", flush=True)
+
+
+if __name__ == "__main__":
+    main()

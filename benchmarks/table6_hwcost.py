@@ -1,0 +1,41 @@
+"""Table VI reproduction: LUT/FF/frequency/depth/ADP/PDP of MT vs GRAU units
+from the calibrated analytical cost model (no Vivado offline; model is
+least-squares-calibrated against the paper's published numbers, max residual
+<1.4% on GRAU rows — see repro/core/hwcost.py)."""
+from __future__ import annotations
+
+from repro.core import hwcost
+
+
+def run(quick: bool = False):
+    rows = []
+
+    def emit(r: hwcost.HWReport, seg="-", ne="-"):
+        delay = 1e3 / r.freq_mhz  # ns per cycle at max frequency
+        rows.append({
+            "unit": r.name, "design": r.design, "segments": seg,
+            "exponents": ne, "lut": r.lut, "ff": r.ff,
+            "freq_mhz": r.freq_mhz, "depth8": r.pipeline_depth_8bit,
+            "adp": r.lut * delay, "cycles": r.cycles_per_input,
+        })
+        print(f"table6,{r.name}-{r.design},seg={seg},exp={ne},lut={r.lut},"
+              f"ff={r.ff},freq={r.freq_mhz:.0f}MHz,"
+              f"cycles8={r.cycles_per_input[8]}", flush=True)
+
+    emit(hwcost.mt_cost(8, "pipelined"))
+    emit(hwcost.mt_cost(8, "serialized"))
+    for mode in ("pot", "apot"):
+        for seg in (4, 6, 8):
+            for ne in (8, 16):
+                emit(hwcost.grau_cost(seg, ne, mode, "pipelined"), seg, ne)
+        emit(hwcost.grau_cost(6, 8, mode, "serialized"))
+
+    mt = hwcost.mt_cost(8, "pipelined").lut
+    worst = max(r["lut"] for r in rows if r["unit"] != "multi-threshold")
+    print(f"table6,summary,headline_lut_reduction="
+          f"{100 * (1 - worst / mt):.1f}%_worst_case (paper: >90%)", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

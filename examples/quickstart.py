@@ -1,0 +1,45 @@
+"""Quickstart: build a GRAU unit for a folded activation, run the bit-exact
+integer datapath (pure-jnp and Pallas kernel), and reconfigure it at runtime.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.build import build_grau
+from repro.core.folding import fold
+from repro.core.grau import grau_apply_int
+from repro.kernels import ops
+
+# 1. The unit's target: SiLU folded with requantization, int MAC in -> int8 out
+folded = fold("silu", s_in=2**-10, s_out=2**-4, out_bits=8)
+
+# 2. Offline flow (paper §II-A): greedy PWLF fit -> APoT projection -> registers
+result = build_grau(folded, mac_range=(-30000, 30000), segments=6,
+                    num_exponents=8, mode="apot", bias_mode="lsq")
+print(f"fitted window 2^{result.window[0]}..2^{result.window[1]}, "
+      f"int-RMS {result.int_rms:.3f} (of 256 levels)")
+
+# 3. Integer datapath — pure jnp oracle and the Pallas kernel agree bit-exactly
+x = jax.random.randint(jax.random.PRNGKey(0), (256, 512), -60000, 60000,
+                       dtype=jnp.int32)
+y_ref = grau_apply_int(x, result.spec)
+y_krn = ops.grau(x, result.spec)          # interpret=True on CPU, TPU kernel on TPU
+assert bool(jnp.all(y_ref == y_krn.astype(jnp.int32)))
+print("pallas kernel matches oracle:", y_krn.shape, y_krn.dtype)
+
+# 4. Fused "end-to-end MAC to quant": int8 GEMM whose epilogue IS the unit
+a = jax.random.randint(jax.random.PRNGKey(1), (128, 256), -128, 128, dtype=jnp.int8)
+w = jax.random.randint(jax.random.PRNGKey(2), (256, 128), -128, 128, dtype=jnp.int8)
+out = ops.matmul_grau(a, w, result.spec)
+print("fused int8 matmul+GRAU:", out.shape, out.dtype)
+
+# 5. Runtime reconfiguration: same compiled function, new register file
+relu_unit = build_grau(fold("relu", s_in=2**-10, s_out=2**-4, out_bits=8),
+                       mac_range=(-30000, 30000), segments=6,
+                       num_exponents=8, mode="apot").spec
+apply_jit = jax.jit(grau_apply_int)
+print("silu out:", np.asarray(apply_jit(x[:1, :8], result.spec)))
+print("relu out:", np.asarray(apply_jit(x[:1, :8], relu_unit)),
+      "(no recompilation — registers are data)")

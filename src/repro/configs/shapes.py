@@ -1,0 +1,41 @@
+"""Assigned input shapes and the per-(arch x shape) applicability matrix."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.configs.archs import ARCHS, get_config
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str              # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_status(arch: str, shape: str) -> Optional[str]:
+    """None = runnable; otherwise a skip reason recorded in EXPERIMENTS.md."""
+    cfg = get_config(arch)
+    sp = SHAPES[shape]
+    if shape == "long_500k" and not cfg.supports_long_context:
+        return ("skip: pure quadratic full-attention arch; 500k dense KV decode "
+                "is out of scope per assignment (see DESIGN.md §Arch-applicability)")
+    if cfg.encoder is not None and shape == "long_500k":
+        return "skip: whisper decoder context is 448 tokens by construction"
+    return None
+
+
+def all_cells():
+    for arch in ARCHS:
+        for shape in SHAPES:
+            yield arch, shape, cell_status(arch, shape)

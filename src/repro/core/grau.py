@@ -1,0 +1,110 @@
+"""GRAU functional core — integer datapath reference + float training surrogate.
+
+`grau_reference_int` is the bit-exact executable specification of the RTL in
+the paper's Figs. 4-6 (comparators -> shifter pipeline -> sign -> bias ->
+clamp). The Pallas kernel in repro/kernels/grau.py must match it exactly; the
+numpy variant below is used for host-side verification of fitted specs.
+
+`grau_surrogate` is the float PWL function with a straight-through estimator,
+used during QAT so gradients flow through the (piecewise-constant-free) linear
+segments.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.pwlf.spec import GRAUSpec, MAX_EXPONENTS, MAX_SEGMENTS
+
+
+def segment_index(x: jax.Array, spec: GRAUSpec) -> jax.Array:
+    """seg = sum_i [x > bp_i] — the comparator bank. Padded bps are INT32_MAX."""
+    bps = spec.breakpoints  # (MAX_SEGMENTS-1,)
+    return jnp.sum(x[..., None] > bps, axis=-1).astype(jnp.int32)
+
+
+def shift_add(x: jax.Array, enc_row: jax.Array, pre_shift: jax.Array) -> jax.Array:
+    """The 1-bit right-shifter pipeline: sum_k enc[k] * (x >> (pre_shift+k)).
+
+    Arithmetic shift on signed ints (floor), exactly as cascaded RTL stages.
+    pre_shift may be negative (left shift) for legacy positive-exponent
+    windows; both paths are computed and selected to stay jit-compatible.
+    """
+    acc = jnp.zeros_like(x)
+    for k in range(MAX_EXPONENTS):
+        s = pre_shift + k
+        r = jnp.right_shift(x, jnp.maximum(s, 0))
+        l = jnp.left_shift(x, jnp.maximum(-s, 0))
+        term = jnp.where(s >= 0, r, l)
+        acc = acc + jnp.where(enc_row[..., k] != 0, term, 0)
+    return acc
+
+
+def grau_apply_int(x: jax.Array, spec: GRAUSpec) -> jax.Array:
+    """Apply one GRAU unit to int32 MAC outputs. Pure jnp (oracle for kernels)."""
+    x = x.astype(jnp.int32)
+    seg = segment_index(x, spec)
+    enc = spec.enc[seg]              # (..., MAX_EXPONENTS)
+    acc = shift_add(x, enc, spec.pre_shift)
+    y = spec.sign[seg] * acc + spec.bias[seg]
+    return jnp.clip(y, spec.qmin, spec.qmax)
+
+
+def grau_reference_int(x: np.ndarray, spec: GRAUSpec) -> np.ndarray:
+    """Host-side (numpy, int64 accumulation) bit-exact reference."""
+    x = np.asarray(x, np.int64)
+    bps = np.asarray(spec.breakpoints, np.int64)
+    seg = np.sum(x[..., None] > bps, axis=-1)
+    enc = np.asarray(spec.enc)
+    pre = int(spec.pre_shift)
+    acc = np.zeros_like(x)
+    for k in range(enc.shape[1]):
+        s = pre + k
+        term = (x >> s) if s >= 0 else (x << -s)
+        acc = acc + np.where(enc[seg, k] != 0, term, 0)
+    y = np.asarray(spec.sign, np.int64)[seg] * acc + np.asarray(spec.bias, np.int64)[seg]
+    return np.clip(y, spec.qmin, spec.qmax)
+
+
+def grau_realized_pwl(spec: GRAUSpec):
+    """Float PWL realized by a spec: (breakpoints, slopes, biases) arrays.
+
+    slope[s] = sign[s] * sum_k enc[s,k] * 2^-(pre_shift+k). Used by the QAT
+    surrogate and by error analyses.
+    """
+    k = jnp.arange(MAX_EXPONENTS)
+    pots = jnp.exp2(-(spec.pre_shift + k).astype(jnp.float32))  # (E,)
+    slopes = spec.sign.astype(jnp.float32) * (spec.enc.astype(jnp.float32) @ pots)
+    return spec.breakpoints, slopes, spec.bias.astype(jnp.float32)
+
+
+def grau_apply_float(x: jax.Array, spec: GRAUSpec) -> jax.Array:
+    """Float evaluation of the realized PWL (pre-rounding): surrogate forward."""
+    bps, slopes, biases = grau_realized_pwl(spec)
+    seg = jnp.sum(x[..., None] > bps.astype(x.dtype), axis=-1)
+    y = slopes[seg] * x + biases[seg]
+    return jnp.clip(y, float(spec.qmin), float(spec.qmax))
+
+
+@jax.custom_vjp
+def grau_surrogate(x: jax.Array, spec: GRAUSpec) -> jax.Array:
+    """QAT forward: rounded integer semantics; backward: PWL slope STE."""
+    return jnp.round(grau_apply_float(x, spec))
+
+
+def _sur_fwd(x, spec):
+    return grau_surrogate(x, spec), (x, spec)
+
+
+def _sur_bwd(res, g):
+    x, spec = res
+    bps, slopes, _ = grau_realized_pwl(spec)
+    seg = jnp.sum(x[..., None] > bps.astype(x.dtype), axis=-1)
+    y = grau_apply_float(x, spec)
+    in_range = (y > float(spec.qmin)) & (y < float(spec.qmax))
+    dx = g * slopes[seg] * in_range.astype(g.dtype)
+    return (dx, None)
+
+
+grau_surrogate.defvjp(_sur_fwd, _sur_bwd)

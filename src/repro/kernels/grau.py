@@ -1,0 +1,132 @@
+"""Pallas TPU kernel for the GRAU unit — the executable spec of the RTL.
+
+Datapath per element (bit-exact with repro.core.grau.grau_apply_int):
+
+    seg   = sum_i [x > bp_i]                      comparator bank (VPU compares)
+    bits  = enc_packed[seg]                       setting buffer lookup,
+                                                  realized as an unrolled
+                                                  8-way select (no gather)
+    acc   = sum_k ((bits >> k) & 1) * (x >> (pre_shift + k))
+                                                  the 1-bit shifter pipeline,
+                                                  fully unrolled on the VPU
+    out   = clamp(sign[seg] * acc + bias[seg], qmin, qmax) -> int8
+
+Design notes (TPU adaptation of the FPGA unit):
+  * The register file (breakpoints / packed encodings / sign / bias /
+    pre-shift) lives in SMEM — it is runtime data, so reconfiguring the
+    activation function or precision never recompiles the kernel, mirroring
+    the paper's "reload registers" claim.
+  * enc rows are bit-packed into one int32 per segment on the host
+    (ops.pack_spec), so the inner loop is shift/and/select only — integer VPU
+    ops, no multiplier, exactly the multiplierless datapath of Fig. 4.
+  * Block shape (256, 512): int32 in / int8 out, 512 lanes = 4 native lane
+    groups; ~0.7 MB VMEM working set per block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.pwlf.spec import MAX_EXPONENTS, MAX_SEGMENTS
+
+DEFAULT_BLOCK = (256, 512)
+
+
+def _grau_kernel(
+    bp_ref,        # (1, MAX_SEGMENTS-1) int32 SMEM
+    encp_ref,      # (1, MAX_SEGMENTS)   int32 SMEM (bit-packed enc rows)
+    sign_ref,      # (1, MAX_SEGMENTS)   int32 SMEM
+    bias_ref,      # (1, MAX_SEGMENTS)   int32 SMEM
+    pre_ref,       # (1, 1)              int32 SMEM
+    x_ref,         # (bm, bn) int32 VMEM
+    o_ref,         # (bm, bn) int8  VMEM
+    *,
+    num_exponents: int,
+    qmin: int,
+    qmax: int,
+):
+    x = x_ref[...]
+    pre = pre_ref[0, 0]
+
+    # --- comparator bank -> per-element segment index -------------------
+    seg = jnp.zeros(x.shape, jnp.int32)
+    for i in range(MAX_SEGMENTS - 1):
+        seg += (x > bp_ref[0, i]).astype(jnp.int32)
+
+    # --- setting-buffer lookup as an unrolled select ---------------------
+    bits = jnp.zeros(x.shape, jnp.int32)
+    sign = jnp.zeros(x.shape, jnp.int32)
+    bias = jnp.zeros(x.shape, jnp.int32)
+    for s in range(MAX_SEGMENTS):
+        m = seg == s
+        bits = jnp.where(m, encp_ref[0, s], bits)
+        sign = jnp.where(m, sign_ref[0, s], sign)
+        bias = jnp.where(m, bias_ref[0, s], bias)
+
+    # --- 1-bit shifter pipeline (unrolled) -------------------------------
+    acc = jnp.zeros(x.shape, jnp.int32)
+    for k in range(num_exponents):
+        s_amt = pre + k
+        term = jnp.where(
+            s_amt >= 0,
+            jnp.right_shift(x, jnp.maximum(s_amt, 0)),
+            jnp.left_shift(x, jnp.maximum(-s_amt, 0)),
+        )
+        fire = (jnp.right_shift(bits, k) & 1) != 0
+        acc += jnp.where(fire, term, 0)
+
+    y = sign * acc + bias
+    o_ref[...] = jnp.clip(y, qmin, qmax).astype(jnp.int8)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_exponents", "qmin", "qmax", "block", "interpret")
+)
+def grau_pallas(
+    x: jax.Array,
+    bp: jax.Array,
+    enc_packed: jax.Array,
+    sign: jax.Array,
+    bias: jax.Array,
+    pre_shift: jax.Array,
+    *,
+    num_exponents: int,
+    qmin: int,
+    qmax: int,
+    block: tuple = DEFAULT_BLOCK,
+    interpret: bool = False,
+) -> jax.Array:
+    """Apply a GRAU register file to a 2D int32 array. See ops.grau for the
+    user-facing wrapper (padding, reshapes, spec packing)."""
+    m, n = x.shape
+    bm, bn = block
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn))
+    smem = lambda shape: pl.BlockSpec(shape, lambda i, j: (0, 0), memory_space=pltpu.SMEM)
+    return pl.pallas_call(
+        functools.partial(
+            _grau_kernel, num_exponents=num_exponents, qmin=qmin, qmax=qmax
+        ),
+        grid=grid,
+        in_specs=[
+            smem((1, MAX_SEGMENTS - 1)),
+            smem((1, MAX_SEGMENTS)),
+            smem((1, MAX_SEGMENTS)),
+            smem((1, MAX_SEGMENTS)),
+            smem((1, 1)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int8),
+        interpret=interpret,
+    )(
+        bp.reshape(1, -1),
+        enc_packed.reshape(1, -1),
+        sign.reshape(1, -1),
+        bias.reshape(1, -1),
+        pre_shift.reshape(1, 1),
+        x,
+    )

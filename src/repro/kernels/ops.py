@@ -1,0 +1,82 @@
+"""User-facing jit'd wrappers around the Pallas kernels.
+
+Handles: GRAUSpec -> packed register file, shape normalisation (any-rank ->
+2D, padding to block multiples), and CPU fallback (interpret=True) so the
+same call sites run on this container and on real TPUs.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import grau as grau_kernel
+from repro.kernels import matmul_grau as mm_kernel
+from repro.pwlf.spec import GRAUSpec, MAX_EXPONENTS
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pack_spec(spec: GRAUSpec) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Bit-pack enc rows into one int32 per segment (the setting buffer)."""
+    weights = jnp.asarray(1 << np.arange(MAX_EXPONENTS), jnp.int32)
+    enc_packed = jnp.sum(spec.enc.astype(jnp.int32) * weights, axis=-1).astype(jnp.int32)
+    return spec.breakpoints, enc_packed, spec.sign, spec.bias, spec.pre_shift
+
+
+def _to_2d(x: jax.Array) -> Tuple[jax.Array, Tuple[int, ...]]:
+    shape = x.shape
+    if x.ndim == 1:
+        return x.reshape(1, -1), shape
+    return x.reshape(-1, shape[-1]), shape
+
+
+def _pad_to(x: jax.Array, bm: int, bn: int) -> Tuple[jax.Array, Tuple[int, int]]:
+    m, n = x.shape
+    pm, pn = (-m) % bm, (-n) % bn
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x, (m, n)
+
+
+def grau(x: jax.Array, spec: GRAUSpec, *, block=None, interpret=None) -> jax.Array:
+    """Apply a GRAU unit to int32 MAC outputs (any rank). Returns int8."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    block = block or grau_kernel.DEFAULT_BLOCK
+    bp, encp, sign, bias, pre = pack_spec(spec)
+    x2, orig_shape = _to_2d(x.astype(jnp.int32))
+    x2, (m, n) = _pad_to(x2, *block)
+    out = grau_kernel.grau_pallas(
+        x2, bp, encp, sign, bias, pre,
+        num_exponents=spec.num_exponents, qmin=spec.qmin, qmax=spec.qmax,
+        block=block, interpret=interpret,
+    )
+    return out[:m, :n].reshape(orig_shape)
+
+
+def matmul_grau(
+    x: jax.Array, w: jax.Array, spec: GRAUSpec, *, tiles=None, interpret=None
+) -> jax.Array:
+    """Fused int8 GEMM + GRAU epilogue. x: (..., K) int8, w: (K, N) int8."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    tiles = tiles or mm_kernel.DEFAULT_TILES
+    bp, encp, sign, bias, pre = pack_spec(spec)
+    x2, orig_shape = _to_2d(x)
+    bm, bn, bk = tiles
+    m, k = x2.shape
+    n = w.shape[1]
+    pm, pk, pn = (-m) % bm, (-k) % bk, (-n) % bn
+    xp = jnp.pad(x2, ((0, pm), (0, pk))) if (pm or pk) else x2
+    wp = jnp.pad(w, ((0, pk), (0, pn))) if (pk or pn) else w
+    out = mm_kernel.matmul_grau_pallas(
+        xp, wp, bp, encp, sign, bias, pre,
+        num_exponents=spec.num_exponents, qmin=spec.qmin, qmax=spec.qmax,
+        tiles=tiles, interpret=interpret,
+    )
+    return out[:m, :n].reshape(*orig_shape[:-1], n)

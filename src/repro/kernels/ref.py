@@ -1,0 +1,24 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.grau import grau_apply_int
+from repro.pwlf.spec import GRAUSpec
+
+
+def grau_ref(x: jax.Array, spec: GRAUSpec) -> jax.Array:
+    """Oracle for kernels/grau.py: int32 MAC outputs -> int8 quantized acts."""
+    return grau_apply_int(x, spec).astype(jnp.int8)
+
+
+def matmul_grau_ref(x: jax.Array, w: jax.Array, spec: GRAUSpec) -> jax.Array:
+    """Oracle for kernels/matmul_grau.py: int8 GEMM -> GRAU epilogue -> int8.
+
+    x: (M, K) int8, w: (K, N) int8; accumulation is int32 (MXU int8 path).
+    """
+    acc = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    return grau_apply_int(acc, spec).astype(jnp.int8)

@@ -1,0 +1,28 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) — 256 chips (TPU v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) — 512 chips; the `pod` axis is an outer
+data-parallel axis whose gradient all-reduce is the only cross-DCI collective.
+
+Defined as functions so importing this module never touches jax device state
+(the dry-run must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host actually has (smoke tests / examples): (1, N)."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

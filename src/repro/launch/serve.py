@@ -1,0 +1,44 @@
+"""Serving launcher: batched continuous decoding on the host (smoke config)
+or the production mesh (full config, same step as the decode dry-run cells).
+
+Example:
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --requests 6
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs.archs import get_config
+from repro.models import lm
+from repro.serve.engine import EngineConfig, Request, ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0), dtype=jax.numpy.float32)
+    engine = ServeEngine(cfg, params,
+                         EngineConfig(slots=args.slots, max_seq=256))
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(2, cfg.vocab_size, size=rng.integers(4, 12)),
+                    max_new_tokens=args.max_new)
+            for i in range(args.requests)]
+    out = engine.run(reqs)
+    for r in out:
+        print(f"req {r.rid}: prompt={len(r.prompt)} toks -> "
+              f"generated {len(r.out_tokens or [])}: {(r.out_tokens or [])[:8]}...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,401 @@
+"""Step builders + input specs + sharding assignment for every cell.
+
+This is the distribution heart of the framework: given (arch config, shape,
+mesh) it produces the jit-able step function, the ShapeDtypeStruct inputs
+(no allocation — dry-run safe), and the PartitionSpecs for every argument.
+
+Sharding scheme (defaults; hillclimbed variants in EXPERIMENTS.md §Perf):
+  * params: FSDP x TP — `model`-axis on heads/mlp/experts/vocab, `data`-axes
+    on the embed dim (fully-sharded weights, ZeRO-3-style optimizer state).
+  * batch: over ("pod","data").
+  * decode KV caches: kv_heads over `model` when divisible, else head_dim;
+    long_500k shards the sequence axis over `data` (flash-decoding-style
+    partial-softmax combine falls out of GSPMD on the contraction).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import SHAPES, ShapeSpec
+from repro.launch.mesh import data_axes
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.nn import shard_ctx
+from repro.nn.attention import CrossKV, KVCache, MLACache
+from repro.nn.common import logical_to_pspec
+from repro.nn.mamba2 import SSMState
+from repro.train import optim
+
+
+# ---------------------------------------------------------------------------
+# Abstract init + param specs
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.bfloat16):
+    """(ShapeDtypeStruct params tree, logical axes tree) without allocation."""
+    box = {}
+
+    def f(key):
+        p, axes = lm.init_lm(cfg, key, dtype)
+        box["axes"] = axes
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, box["axes"]
+
+
+def param_pspecs(cfg: ModelConfig, mesh, *, fsdp: bool = True,
+                 ep_full: bool = False, dtype=jnp.bfloat16):
+    shapes, axes = abstract_params(cfg, dtype)
+    dp = data_axes(mesh)
+    extra = {"embed": dp if fsdp else None}
+    if ep_full:
+        # serving EP: one (or few) experts per chip across ("data","model") —
+        # expert weights never gathered; tokens all-to-all to their experts.
+        # The pod axis replicates experts (512 > 256 experts would otherwise
+        # hit the divisibility fallback and replicate them EVERYWHERE).
+        extra["experts"] = ("data", "model")
+        extra["embed"] = None
+    return shapes, logical_to_pspec(axes, mesh, shapes, extra_rules=extra)
+
+
+def _div(n: int, mesh, axis) -> bool:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if isinstance(axis, tuple):
+        return n % int(np.prod([sizes[a] for a in axis])) == 0
+    return n % sizes[axis] == 0
+
+
+# ---------------------------------------------------------------------------
+# Cache specs
+# ---------------------------------------------------------------------------
+
+def cache_pspecs(cfg: ModelConfig, mesh, batch: int, *, shard_seq: bool = False,
+                 mla_seq_model: bool = False):
+    """PartitionSpec tree matching lm.init_caches (incl. stacked layer axis).
+
+    mla_seq_model: shard the MLA latent cache's sequence axis over `model` —
+    MLA has no head axis to shard, so without this the latent cache (and the
+    latent attention reads) replicate across the model axis (measured 18.4
+    GB/device for deepseek decode_32k, over the v5e HBM budget).
+    """
+    dp = data_axes(mesh)
+    bspec = dp if (dp and batch % int(np.prod([dict(zip(mesh.axis_names, mesh.devices.shape))[a] for a in dp])) == 0) else None
+    seq = "data" if shard_seq else None
+    if shard_seq:
+        bspec = None  # batch=1 long-context: the data axis shards the sequence
+    mla_seq = ("model" if mla_seq_model and not shard_seq else seq)
+
+    def kv_spec():
+        if _div(cfg.kv_heads_phys, mesh, "model"):
+            return P(None, bspec, seq, "model", None)
+        if _div(cfg.head_dim, mesh, "model"):
+            return P(None, bspec, seq, None, "model")
+        return P(None, bspec, seq, None, None)
+
+    specs = []
+    for period, repeats in cfg.groups:
+        per_layer = []
+        for spec in period:
+            if spec.kind == "mamba":
+                s = cfg.ssm
+                h = s.n_heads(cfg.d_model)
+                hspec = "model" if _div(h, mesh, "model") else None
+                per_layer.append(SSMState(
+                    conv=P(None, bspec, None, "model" if _div(
+                        s.d_inner(cfg.d_model) + 2 * s.n_groups * s.d_state,
+                        mesh, "model") else None),
+                    ssm=P(None, bspec, hspec, None, None),
+                ))
+            elif cfg.mla is not None:
+                per_layer.append(MLACache(
+                    ckv=P(None, bspec, mla_seq, None),
+                    k_rope=P(None, bspec, mla_seq, None),
+                    length=P(None, bspec),
+                ))
+            else:
+                c = KVCache(k=kv_spec(), v=kv_spec(), length=P(None, bspec))
+                if spec.cross_attn:
+                    c = (c, CrossKV(k=kv_spec(), v=kv_spec()))
+                per_layer.append(c)
+        specs.append(tuple(per_layer))
+    return tuple(specs)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs, shardable, no allocation)
+# ---------------------------------------------------------------------------
+
+def batch_pspecs(cfg: ModelConfig, mesh) -> Dict[str, P]:
+    dp = data_axes(mesh)
+    specs = {"tokens": P(dp, None), "labels": P(dp, None)}
+    if cfg.encoder is not None:
+        specs["encoder_frames"] = P(dp, None, None)
+    if cfg.vision is not None:
+        specs["patch_embeds"] = P(dp, None, None)
+    return specs
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    b, s = shape.global_batch, shape.seq_len
+    sds = lambda shp, dt, spec: jax.ShapeDtypeStruct(
+        shp, dt, sharding=NamedSharding(mesh, spec))
+    ps = batch_pspecs(cfg, mesh)
+    batch = {
+        "tokens": sds((b, s), jnp.int32, ps["tokens"]),
+        "labels": sds((b, s), jnp.int32, ps["labels"]),
+    }
+    if cfg.encoder is not None:
+        batch["encoder_frames"] = sds(
+            (b, cfg.encoder.num_frames, cfg.d_model), jnp.bfloat16,
+            ps["encoder_frames"])
+    if cfg.vision is not None:
+        batch["patch_embeds"] = sds(
+            (b, cfg.vision.num_patches, cfg.d_model), jnp.bfloat16,
+            ps["patch_embeds"])
+    return batch
+
+
+def abstract_caches(cfg: ModelConfig, mesh, batch: int, max_seq: int, *,
+                    shard_seq: bool = False, mla_seq_model: bool = False,
+                    dtype=jnp.bfloat16):
+    shapes = jax.eval_shape(
+        functools.partial(lm.init_caches, cfg, batch, max_seq, dtype=dtype))
+    pspecs = cache_pspecs(cfg, mesh, batch, shard_seq=shard_seq,
+                          mla_seq_model=mla_seq_model)
+
+    def attach(x, spec_tree):
+        return jax.tree.map(
+            lambda s, p: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                              sharding=NamedSharding(mesh, p)),
+            x, spec_tree, is_leaf=lambda v: isinstance(v, jax.ShapeDtypeStruct))
+
+    # pspec leaves are PartitionSpec (pytree internal?) — PartitionSpec is a
+    # pytree leaf, so tree.map pairs them with ShapeDtypeStruct leaves 1:1.
+    return attach(shapes, pspecs), pspecs
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StepBundle:
+    """Everything dryrun/train/serve needs for one (arch x shape x mesh) cell."""
+    fn: Callable
+    in_shardings: Any
+    args: Tuple            # ShapeDtypeStructs (dry-run) — positionally matches fn
+    donate_argnums: Tuple[int, ...] = ()
+
+
+def _with_shard_ctx(fn: Callable, mesh, overrides: Optional[dict] = None) -> Callable:
+    """Activate activation-sharding constraints while the step traces."""
+
+    @functools.wraps(fn)
+    def wrapped(*args, **kw):
+        with shard_ctx.use(mesh, overrides):
+            return fn(*args, **kw)
+
+    return wrapped
+
+
+def pad_heads_for(cfg: ModelConfig, mesh) -> ModelConfig:
+    """Beyond-paper optimization: zero-pad head counts up to the next multiple
+    of the model axis so attention head-shards (see EXPERIMENTS.md §Perf).
+    GQA divisibility (h_phys % kv_phys == 0) is preserved."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    m = sizes.get("model", 1)
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    if h % m == 0 or cfg.mla is not None:
+        return cfg
+    kvp = kv if kv % m == 0 else ((kv + m - 1) // m) * m
+    hp = ((h + kvp - 1) // kvp) * kvp
+    while hp % m:
+        hp += kvp
+    return cfg.replace(attn_pad=(hp, kvp))
+
+
+def act_rules(cfg: ModelConfig, mesh) -> Optional[dict]:
+    """Sharding-rule overrides for a config on a mesh.
+
+    Archs whose head count doesn't divide the model axis (llama3.2: 24 heads,
+    qwen/llama4: 40 heads on a 16-way axis) can't head-shard attention;
+    sharding head_dim instead psums every (q,kv) logits tile (measured 2.3 TB
+    of all-reduce per step). The baseline for those archs is sequence
+    parallelism over the model axis for the sequence-pointwise path.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    m = sizes.get("model", 1)
+    if cfg.heads_phys % m != 0 and cfg.groups and any(
+            spec.kind == "attn" for period, _ in cfg.groups for spec in period):
+        return {"heads": None, "kv_heads": None, "head_dim": None,
+                "seq": "model"}
+    return None
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: optim.AdamWConfig, *,
+                    remat: Optional[str] = "full",
+                    q_chunk: int = 1024, kv_chunk: int = 1024,
+                    microbatches: int = 1):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    act = lm.make_act(cfg)   # GRAU specs are built host-side, once, not
+                             # inside the trace (spec registers become jit
+                             # constants; reconfigure by passing new specs)
+
+    def loss_fn(params, batch):
+        return lm.lm_loss(params, cfg, batch, act=act, q_chunk=q_chunk,
+                          kv_chunk=kv_chunk, remat=remat)
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def accum(carry, microbatch):
+                g_acc, l_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, microbatch)
+                return (jax.tree.map(jnp.add, g_acc, g), l_acc + l), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(accum, (zeros, 0.0), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_params, new_opt, metrics = optim.adamw_update(
+            opt_cfg, params, grads, opt_state)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, q_chunk=1024, kv_chunk=1024):
+    act = lm.make_act(cfg)
+
+    def prefill_step(params, tokens, caches, extras):
+        logits, new_caches, _ = lm.apply_lm(
+            params, cfg, tokens, mode="prefill", caches=caches, act=act,
+            encoder_frames=extras.get("encoder_frames"),
+            patch_embeds=extras.get("patch_embeds"),
+            q_chunk=q_chunk, kv_chunk=kv_chunk)
+        return logits[:, -1:], new_caches
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    act = lm.make_act(cfg)
+
+    def serve_step(params, tokens, caches, extras):
+        enc_out = extras.get("encoder_out")
+        logits, new_caches = lm.decode_step(params, cfg, tokens, caches,
+                                            act=act, encoder_out=enc_out)
+        return logits, new_caches
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Cell assembly
+# ---------------------------------------------------------------------------
+
+def build_cell(arch_cfg: ModelConfig, shape: ShapeSpec, mesh, *,
+               fsdp: bool = True, remat: Optional[str] = "full",
+               dtype=jnp.bfloat16, q_chunk: int = 1024, kv_chunk: int = 1024,
+               microbatches: int = 1, pad_heads: bool = False,
+               ep_full: bool = False, mla_cache_shard: bool = False) -> StepBundle:
+    """Assemble the jit bundle for one (arch x shape) cell on a mesh."""
+    cfg = pad_heads_for(arch_cfg, mesh) if pad_heads else arch_cfg
+    param_shapes, pspecs = param_pspecs(cfg, mesh, fsdp=fsdp and not ep_full,
+                                        ep_full=ep_full, dtype=dtype)
+    attach = lambda tree, spec_tree: jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                          sharding=NamedSharding(mesh, p)),
+        tree, spec_tree,
+        is_leaf=lambda v: isinstance(v, jax.ShapeDtypeStruct))
+    params_in = attach(param_shapes, pspecs)
+
+    if shape.kind == "train":
+        opt_cfg = optim.AdamWConfig()
+        opt_shapes = jax.eval_shape(optim.init_opt_state, param_shapes)
+        opt_pspecs = optim.OptState(step=P(), m=pspecs, v=pspecs)
+        opt_in = attach(opt_shapes, opt_pspecs)
+        batch_in = train_batch_specs(cfg, shape, mesh)
+        fn = make_train_step(cfg, opt_cfg, remat=remat, q_chunk=q_chunk,
+                             kv_chunk=kv_chunk, microbatches=microbatches)
+        fn = _with_shard_ctx(fn, mesh, act_rules(cfg, mesh))
+        return StepBundle(
+            fn=fn,
+            in_shardings=(pspecs, opt_pspecs,
+                          {k: v.sharding.spec for k, v in batch_in.items()}),
+            args=(params_in, opt_in, batch_in),
+            donate_argnums=(0, 1),
+        )
+
+    b = shape.global_batch
+    dp = data_axes(mesh)
+    sds = lambda shp, dt, spec: jax.ShapeDtypeStruct(
+        shp, dt, sharding=NamedSharding(mesh, spec))
+
+    if shape.kind == "prefill":
+        # vision prefix tokens live in the same cache as the text tokens
+        max_seq = shape.seq_len + (cfg.vision.num_patches if cfg.vision else 0)
+        caches_in, cpspecs = abstract_caches(cfg, mesh, b, max_seq,
+                                             dtype=dtype)
+        tokens = sds((b, shape.seq_len), jnp.int32, P(dp, None))
+        extras = {}
+        if cfg.encoder is not None:
+            extras["encoder_frames"] = sds(
+                (b, cfg.encoder.num_frames, cfg.d_model), dtype, P(dp, None, None))
+        if cfg.vision is not None:
+            extras["patch_embeds"] = sds(
+                (b, cfg.vision.num_patches, cfg.d_model), dtype, P(dp, None, None))
+        fn = _with_shard_ctx(
+            make_prefill_step(cfg, q_chunk=q_chunk, kv_chunk=kv_chunk), mesh,
+            act_rules(cfg, mesh))
+        return StepBundle(
+            fn=fn,
+            in_shardings=(pspecs, P(dp, None), cpspecs,
+                          {k: v.sharding.spec for k, v in extras.items()}),
+            args=(params_in, tokens, caches_in, extras),
+            donate_argnums=(2,),
+        )
+
+    # decode
+    shard_seq = shape.seq_len >= 262144
+    caches_in, cpspecs = abstract_caches(cfg, mesh, b, shape.seq_len,
+                                         shard_seq=shard_seq,
+                                         mla_seq_model=mla_cache_shard,
+                                         dtype=dtype)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ndp = int(np.prod([sizes[a] for a in dp])) if dp else 1
+    tok_spec = P(dp, None) if (dp and b % ndp == 0 and not shard_seq) else P(None, None)
+    tokens = sds((b, 1), jnp.int32, tok_spec)
+    extras = {}
+    if cfg.encoder is not None:
+        extras["encoder_out"] = sds(
+            (b, cfg.encoder.num_frames, cfg.d_model), dtype,
+            P(dp if not shard_seq else None, None, None))
+    overrides = {"batch": None, "seq": "data"} if shard_seq else act_rules(cfg, mesh)
+    if ep_full:
+        overrides = dict(overrides or {})
+        overrides["experts"] = ("data", "model")
+    fn = _with_shard_ctx(make_serve_step(cfg), mesh, overrides)
+    return StepBundle(
+        fn=fn,
+        in_shardings=(pspecs, tok_spec, cpspecs,
+                      {k: v.sharding.spec for k, v in extras.items()}),
+        args=(params_in, tokens, caches_in, extras),
+        donate_argnums=(2,),
+    )

@@ -1,0 +1,213 @@
+"""The paper's own evaluation models: SFC (FC net) and CNV (VGG-like conv),
+with QAT fake-quant and GRAU activation replacement — the Table III/IV flow.
+
+The paper's protocol (§II-A), reproduced end to end:
+  1. train the QNN while recording each layer's MAC-output range;
+  2. fold BN(-free here) + activation + requant into a scalar function per
+     layer, double the recorded range, sample 1000 points;
+  3. fit greedy-PWLF, project slopes to PoT/APoT, emit GRAUSpec;
+  4. swap the float activation for the integer GRAU path and re-evaluate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.build import build_grau
+from repro.core.folding import ACTIVATIONS, fold
+from repro.core.grau import grau_reference_int
+from repro.nn.common import trunc_normal
+from repro.quant.policy import PrecisionPolicy, unified
+from repro.quant.quantizers import QConfig, fake_quant
+
+
+@dataclasses.dataclass(frozen=True)
+class VisionConfig:
+    kind: str = "sfc"              # "sfc" | "cnv"
+    activation: str = "relu"
+    num_classes: int = 10
+    hw: int = 16
+    channels: int = 1
+    widths: Tuple[int, ...] = (256, 256, 256)   # SFC hidden sizes
+    conv_channels: Tuple[int, ...] = (16, 32)   # CNV block channels
+    act_bits: int = 8
+    weight_bits: int = 8
+
+
+def init_vision(cfg: VisionConfig, key) -> Dict:
+    params = {}
+    k = key
+    if cfg.kind == "sfc":
+        dims = [cfg.hw * cfg.hw * cfg.channels, *cfg.widths, cfg.num_classes]
+        for i in range(len(dims) - 1):
+            k, k2 = jax.random.split(k)
+            params[f"fc{i}"] = {
+                "w": trunc_normal(k2, (dims[i], dims[i + 1]), jnp.float32,
+                                  1.0 / np.sqrt(dims[i])),
+                "b": jnp.zeros((dims[i + 1],)),
+            }
+    else:
+        cin = cfg.channels
+        for i, cout in enumerate(cfg.conv_channels):
+            k, k2 = jax.random.split(k)
+            params[f"conv{i}"] = {
+                "w": trunc_normal(k2, (3, 3, cin, cout), jnp.float32,
+                                  1.0 / np.sqrt(9 * cin)),
+                "b": jnp.zeros((cout,)),
+            }
+            cin = cout
+        feat = (cfg.hw // (2 ** len(cfg.conv_channels))) ** 2 * cin
+        k, k2 = jax.random.split(k)
+        params["fc_out"] = {
+            "w": trunc_normal(k2, (feat, cfg.num_classes), jnp.float32,
+                              1.0 / np.sqrt(feat)),
+            "b": jnp.zeros((cfg.num_classes,)),
+        }
+    return params
+
+
+def _act_layer(z, name, act_impls, layer_name, ranges):
+    """Apply activation; record MAC (pre-activation) range when tracking."""
+    if ranges is not None:
+        ranges.setdefault(layer_name, [0.0, 0.0])
+        lo = float(jnp.min(z))
+        hi = float(jnp.max(z))
+        ranges[layer_name][0] = min(ranges[layer_name][0], lo)
+        ranges[layer_name][1] = max(ranges[layer_name][1], hi)
+    impl = act_impls.get(layer_name) if act_impls else None
+    if impl is not None:
+        return impl(z)
+    return None
+
+
+def apply_vision(params, cfg: VisionConfig, x, *,
+                 act_impls: Optional[Dict[str, Callable]] = None,
+                 ranges: Optional[Dict[str, List[float]]] = None,
+                 qat: bool = True):
+    """Forward. act_impls maps layer name -> activation impl override
+    (float act by default; GRAU integer path after replacement)."""
+    wq = QConfig(bits=cfg.weight_bits)
+    aq = QConfig(bits=cfg.act_bits)
+
+    def float_act(z):
+        return {"relu": jax.nn.relu, "sigmoid": jax.nn.sigmoid,
+                "silu": jax.nn.silu, "gelu": jax.nn.gelu,
+                "tanh": jnp.tanh}[cfg.activation](z)
+
+    def quant_w(w):
+        return fake_quant(w, wq) if qat else w
+
+    if cfg.kind == "sfc":
+        h = x.reshape(x.shape[0], -1)
+        n_hidden = len(cfg.widths)
+        for i in range(n_hidden):
+            p = params[f"fc{i}"]
+            z = h @ quant_w(p["w"]) + p["b"]
+            lname = f"fc{i}"
+            out = _act_layer(z, cfg.activation, act_impls or {}, lname, ranges)
+            h = out if out is not None else fake_quant(float_act(z), aq)
+        p = params[f"fc{n_hidden}"]
+        return h @ quant_w(p["w"]) + p["b"]
+
+    h = x
+    for i in range(len(cfg.conv_channels)):
+        p = params[f"conv{i}"]
+        z = jax.lax.conv_general_dilated(
+            h, quant_w(p["w"]), (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC")) + p["b"]
+        lname = f"conv{i}"
+        out = _act_layer(z, cfg.activation, act_impls or {}, lname, ranges)
+        h = out if out is not None else fake_quant(float_act(z), aq)
+        h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max,
+                                  (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    h = h.reshape(h.shape[0], -1)
+    p = params["fc_out"]
+    return h @ quant_w(p["w"]) + p["b"]
+
+
+# ---------------------------------------------------------------------------
+# GRAU replacement (paper §II-A steps 2-4)
+# ---------------------------------------------------------------------------
+
+def make_grau_acts(cfg: VisionConfig, ranges: Dict[str, List[float]], *,
+                   mode: str, segments: int, num_exponents: int,
+                   out_bits: Optional[int] = None,
+                   bias_mode: str = "anchor") -> Dict[str, Callable]:
+    """One GRAU unit per activation layer from recorded MAC ranges.
+
+    mode: "pwlf" evaluates the float PWL fit (the paper's PWLF row);
+    "pot"/"apot" run the bit-exact integer datapath.
+    """
+    out_bits = out_bits or cfg.act_bits
+    f = ACTIVATIONS[cfg.activation]
+    impls: Dict[str, Callable] = {}
+    for lname, (lo, hi) in ranges.items():
+        absmax = max(abs(lo), abs(hi), 1e-3)
+        s_in = absmax / 8192.0          # MAC integer domain ~±8k
+        ys = f(np.linspace(-absmax, absmax, 4097))
+        s_out = max(float(np.max(np.abs(ys))), 1e-6) / ((1 << (out_bits - 1)) - 1)
+        folded = fold(cfg.activation, s_in=s_in, s_out=s_out, out_bits=out_bits)
+        res = build_grau(folded, mac_range=(-absmax / s_in, absmax / s_in),
+                         segments=segments, num_exponents=num_exponents,
+                         mode=("apot" if mode == "pwlf" else mode),
+                         bias_mode=bias_mode)
+        if mode == "pwlf":
+            pwl = res.pwl
+
+            def impl(z, _pwl=pwl, _si=s_in, _so=s_out):
+                a = z / _si
+                return (jnp.round(_pwl(a)) * _so).astype(z.dtype)
+        else:
+            spec = res.spec
+
+            def impl(z, _spec=spec, _si=s_in, _so=s_out):
+                a = jnp.round(z / _si).astype(jnp.int32)
+                from repro.core.grau import grau_apply_int
+                return (grau_apply_int(a, _spec) * _so).astype(z.dtype)
+        impls[lname] = impl
+    return impls
+
+
+# ---------------------------------------------------------------------------
+# Train/eval harness
+# ---------------------------------------------------------------------------
+
+def train_vision(cfg: VisionConfig, *, steps: int = 600, batch: int = 128,
+                 lr: float = 0.05, seed: int = 0):
+    from repro.data.pipeline import ImagePipeline
+
+    pipe = ImagePipeline(num_classes=cfg.num_classes, hw=cfg.hw,
+                         channels=cfg.channels, global_batch=batch, seed=seed)
+    params = init_vision(cfg, jax.random.PRNGKey(seed))
+
+    def loss_fn(p, b):
+        logits = apply_vision(p, cfg, b["image"])
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, b["label"][:, None], 1))
+
+    @jax.jit
+    def step(p, b):
+        l, g = jax.value_and_grad(loss_fn)(p, b)
+        p = jax.tree.map(lambda w, gw: w - lr * gw, p, g)
+        return p, l
+
+    for s in range(steps):
+        params, _ = step(params, pipe.batch(s))
+    return params, pipe
+
+
+def eval_vision(params, cfg: VisionConfig, pipe, *, act_impls=None,
+                ranges=None, steps: int = 8, offset: int = 10_000) -> float:
+    correct = total = 0
+    for s in range(steps):
+        b = pipe.batch(offset + s)
+        logits = apply_vision(params, cfg, b["image"], act_impls=act_impls,
+                              ranges=ranges)
+        pred = jnp.argmax(logits, -1)
+        correct += int(jnp.sum(pred == b["label"]))
+        total += int(b["label"].shape[0])
+    return correct / total

@@ -1,0 +1,215 @@
+"""Attention: chunked (flash-style) training/prefill + cached decode; GQA & MLA.
+
+Memory discipline: logits are never materialized at (seq, seq). Training and
+prefill run a lax.scan over query chunks with an inner scan over KV chunks
+maintaining online-softmax accumulators (m, l, o) — the standard flash
+recurrence, expressed in pure JAX so XLA keeps the working set at
+(q_chunk x kv_chunk) per step. This is what makes the 32k-prefill dry-run
+cells compile with sane memory footprints.
+
+Decode attends one query position against the whole cache in one shot; for
+sequence-sharded caches (long_500k) the contraction over the sharded seq axis
+lowers to a psum — flash-decoding-style partial reduction, for free via GSPMD.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import shard_ctx
+
+NEG_INF = -1e30
+
+
+def _largest_divisor(n: int, cap: int) -> int:
+    """Largest divisor of n that is <= cap (chunk sizes must tile the seq)."""
+    cap = min(cap, n)
+    for c in range(cap, 0, -1):
+        if n % c == 0:
+            return c
+    return 1
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (batch, max_seq, kv_heads, head_dim)
+    v: jax.Array          # (batch, max_seq, kv_heads, head_dim)
+    length: jax.Array     # (batch,) int32 — filled prefix length
+
+
+class CrossKV(NamedTuple):
+    """Cached cross-attention K/V (enc-dec): computed once at admission from
+    the encoder output instead of per decode step (whisper decode was
+    measured at useful-FLOPs ratio 0.01 without it)."""
+    k: jax.Array          # (batch, frames, kv_heads, head_dim)
+    v: jax.Array
+
+
+def _chunk_attend(q, k, v, *, q_offset, kv_offset, causal, scale):
+    """One (q_chunk, kv_chunk) tile: returns (scores_max, exp_sums, out_part).
+
+    q: (b, qc, h, d); k/v: (b, kc, kvh, d) with h = kvh * groups.
+
+    The causal mask is applied as a small additive (qc, kc) bias rather than a
+    full-logits-shape where(): a broadcasted pred at logits shape gets
+    loop-hoisted by XLA across both chunk scans into an O(nq*nk*b*h*qc*kc)
+    buffer (observed in the dry-run HLO) — the 2-D additive form keeps the
+    hoisted object at O(nq*nk*qc*kc).
+    """
+    b, qc, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, qc, kvh, g, d)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    # Pin the tile sharding (q-chunk rows follow the "seq" rule). The
+    # constraint transposes onto the cotangent, which keeps the attention
+    # backward from all-gathering full p-tiles (measured 7.2e11 B/step).
+    logits = shard_ctx.constrain(logits, "batch", "kv_heads", None, "seq", None)
+    if causal:
+        qpos = q_offset + jnp.arange(qc)
+        kpos = kv_offset + jnp.arange(k.shape[1])
+        bias = jnp.where(qpos[:, None] >= kpos[None, :], 0.0, NEG_INF)  # (qc,kc)
+        logits = logits + bias
+    m = jnp.max(logits, axis=-1)                                   # (b,k,g,q)
+    p = jnp.exp(logits - m[..., None])
+    l = jnp.sum(p, axis=-1)                                        # (b,k,g,q)
+    o = jnp.einsum("bkgqs,bskd->bkgqd", p, v.astype(jnp.float32))  # (b,k,g,q,d)
+    return m, l, o
+
+
+def chunked_attention(
+    q: jax.Array,                     # (b, s_q, h, d)
+    k: jax.Array,                     # (b, s_kv, kvh, d)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    b, s_q, h, d = q.shape
+    s_kv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = scale if scale is not None else d ** -0.5
+    q_chunk = _largest_divisor(s_q, q_chunk)
+    kv_chunk = _largest_divisor(s_kv, kv_chunk)
+    nq, nk = s_q // q_chunk, s_kv // kv_chunk
+
+    q = shard_ctx.constrain(q, "batch", "seq", "heads", None)
+    k = shard_ctx.constrain(k, "batch", "seq", "kv_heads", None)
+    v = shard_ctx.constrain(v, "batch", "seq", "kv_heads", None)
+
+    qs = q.reshape(b, nq, q_chunk, h, d).transpose(1, 0, 2, 3, 4)
+    ks = k.reshape(b, nk, kv_chunk, kvh, d).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, nk, kv_chunk, kvh, d).transpose(1, 0, 2, 3, 4)
+
+    def q_step(_, qc_and_i):
+        qc, iq = qc_and_i
+        m0 = jnp.full((b, kvh, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, q_chunk), jnp.float32)
+        o0 = jnp.zeros((b, kvh, g, q_chunk, d), jnp.float32)
+        m0 = shard_ctx.constrain(m0, "batch", "kv_heads", None, "seq")
+        l0 = shard_ctx.constrain(l0, "batch", "kv_heads", None, "seq")
+        o0 = shard_ctx.constrain(o0, "batch", "kv_heads", None, "seq", None)
+
+        def kv_step(carry, kv_and_j):
+            m, l, o = carry
+            (kc, vc), jk = kv_and_j
+            mj, lj, oj = _chunk_attend(
+                qc, kc, vc,
+                q_offset=q_offset + iq * q_chunk,
+                kv_offset=jk * kv_chunk, causal=causal, scale=scale,
+            )
+            m_new = jnp.maximum(m, mj)
+            a = jnp.exp(m - m_new)
+            bfac = jnp.exp(mj - m_new)
+            l_new = l * a + lj * bfac
+            o_new = o * a[..., None] + oj * bfac[..., None]
+            return (m_new, l_new, o_new), None
+
+        (m, l, o), _ = jax.lax.scan(
+            kv_step, (m0, l0, o0), ((ks, vs), jnp.arange(nk)))
+        out = o / jnp.maximum(l[..., None], 1e-30)       # (b,kvh,g,qc,d)
+        out = out.transpose(0, 3, 1, 2, 4).reshape(b, q_chunk, h, d)
+        return None, out
+
+    _, outs = jax.lax.scan(q_step, None, (qs, jnp.arange(nq)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, s_q, h, d)
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,                     # (b, 1, h, d)
+    cache: KVCache,
+    *,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """One-token attention over the full cache (masked beyond `length`)."""
+    b, _, h, d = q.shape
+    kvh = cache.k.shape[2]
+    g = h // kvh
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, kvh, g, d)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                        cache.k.astype(jnp.float32)) * scale
+    pos = jnp.arange(cache.k.shape[1])
+    valid = pos[None] < cache.length[:, None]            # (b, s)
+    logits = jnp.where(valid[:, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, cache.v.astype(jnp.float32))
+    return o.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def update_cache(cache: KVCache, k_new: jax.Array, v_new: jax.Array) -> KVCache:
+    """Append one position per sequence at index `length` (decode step)."""
+    b = k_new.shape[0]
+
+    def upd(buf, new):
+        return jax.vmap(
+            lambda bbuf, bnew, i: jax.lax.dynamic_update_slice_in_dim(bbuf, bnew, i, axis=0)
+        )(buf, new, cache.length)
+
+    return KVCache(upd(cache.k, k_new), upd(cache.v, v_new), cache.length + 1)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3 Multi-head Latent Attention)
+# ---------------------------------------------------------------------------
+
+class MLACache(NamedTuple):
+    ckv: jax.Array        # (batch, max_seq, kv_lora_rank)  compressed latent
+    k_rope: jax.Array     # (batch, max_seq, rope_dim)      shared rope key
+    length: jax.Array
+
+
+def mla_decode_attention(
+    q_nope_abs: jax.Array,   # (b, 1, h, kv_lora_rank)  — q_nope @ W_uk absorbed
+    q_rope: jax.Array,       # (b, 1, h, rope_dim)
+    cache: MLACache,
+    *,
+    scale: float,
+) -> jax.Array:
+    """Absorbed-form MLA decode: attends in the latent space.
+
+    score = q_nope_abs . ckv + q_rope . k_rope ; value = attn-weighted ckv
+    (the per-head value up-projection W_uv is applied by the caller).
+    Cache traffic per token is (kv_lora_rank + rope_dim) — the property that
+    makes the long_500k cell feasible for deepseek-v3.
+    """
+    b, _, h, dc = q_nope_abs.shape
+    logits = (
+        jnp.einsum("bhd,bsd->bhs", q_nope_abs[:, 0].astype(jnp.float32),
+                   cache.ckv.astype(jnp.float32))
+        + jnp.einsum("bhr,bsr->bhs", q_rope[:, 0].astype(jnp.float32),
+                     cache.k_rope.astype(jnp.float32))
+    ) * scale
+    pos = jnp.arange(cache.ckv.shape[1])
+    valid = pos[None] < cache.length[:, None]
+    logits = jnp.where(valid[:, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhs,bsd->bhd", p, cache.ckv.astype(jnp.float32))
+    return o[:, None].astype(q_nope_abs.dtype)          # (b,1,h,dc)

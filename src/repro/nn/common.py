@@ -1,0 +1,235 @@
+"""Shared NN substrate: params-as-pytrees, logical-axis sharding, norms, acts.
+
+No Flax here — params are plain nested dicts of jax.Arrays. Every init
+function also records *logical axis names* for each parameter in a parallel
+tree (MaxText/t5x style); `logical_to_pspec` maps logical names -> mesh axes
+with automatic divisibility fallback (a dim that doesn't divide its mesh axis
+is replicated rather than erroring, e.g. kv_heads=2 on a 16-way model axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+Params = Dict[str, Any]
+Axes = Dict[str, Any]  # same structure, leaves are tuples of logical names
+
+
+# ---------------------------------------------------------------------------
+# Logical axis rules
+# ---------------------------------------------------------------------------
+
+# logical axis -> preferred mesh axis (None = replicate)
+DEFAULT_RULES: Dict[str, Optional[str]] = {
+    "vocab": "model",
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "conv": None,
+    "state": None,
+    "batch": "__data__",     # resolved to ("pod","data") / ("data",) at mesh time
+    "seq": None,
+    "seq_shard": "__data__", # sequence-sharded long-context caches
+    "stack": None,           # scanned layer axis
+}
+
+
+def resolve_rules(mesh, extra: Optional[Dict[str, Optional[str]]] = None):
+    rules = dict(DEFAULT_RULES)
+    if extra:
+        rules.update(extra)
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return rules, data_axes
+
+
+def logical_to_pspec(axes_tree: Axes, mesh, shapes_tree: Params,
+                     extra_rules: Optional[Dict[str, Optional[str]]] = None):
+    """Map a logical-axes tree + concrete shapes to PartitionSpecs.
+
+    Divisibility-aware: if dim size % mesh axis size != 0, replicate that dim.
+    """
+    rules, data_axes = resolve_rules(mesh, extra_rules)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(axes: Tuple[Optional[str], ...], shape) -> P:
+        spec = []
+        dims = tuple(shape.shape) if hasattr(shape, "shape") else tuple(shape)
+        assert len(axes) == len(dims), (axes, dims)
+        for name, dim in zip(axes, dims):
+            target = rules.get(name) if name else None
+            if target == "__data__":
+                target = data_axes
+            if isinstance(target, tuple):
+                n = int(np.prod([sizes[a] for a in target])) if target else 1
+                spec.append(target if (target and n and dim % n == 0) else None)
+            elif target is not None and dim % sizes[target] == 0:
+                spec.append(target)
+            else:
+                spec.append(None)
+        return P(*spec)
+
+    return jax.tree.map(one, axes_tree, shapes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            y is None or isinstance(y, str) for y in x))
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def trunc_normal(key, shape, dtype, stddev: float):
+    return (stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+class ParamBuilder:
+    """Collects params + logical axes under hierarchical names, splitting keys."""
+
+    def __init__(self, key: jax.Array, dtype=jnp.bfloat16):
+        self.key = key
+        self.dtype = dtype
+        self.params: Params = {}
+        self.axes: Axes = {}
+
+    def _next(self):
+        self.key, k = jax.random.split(self.key)
+        return k
+
+    def add(self, name: str, shape, axes: Tuple[Optional[str], ...],
+            init: str = "fanin", scale: float = 1.0, dtype=None):
+        dtype = dtype or self.dtype
+        if init == "zeros":
+            val = jnp.zeros(shape, dtype)
+        elif init == "ones":
+            val = jnp.ones(shape, dtype)
+        elif init == "fanin":
+            fan_in = shape[0] if len(shape) > 1 else shape[-1]
+            val = trunc_normal(self._next(), shape, dtype, scale / np.sqrt(max(fan_in, 1)))
+        elif init == "normal":
+            val = trunc_normal(self._next(), shape, dtype, scale)
+        else:
+            raise ValueError(init)
+        self.params[name] = val
+        self.axes[name] = axes
+        return val
+
+    def sub(self, name: str) -> "ParamBuilder":
+        child = ParamBuilder(self._next(), self.dtype)
+        self.params[name] = child.params
+        self.axes[name] = child.axes
+        return child
+
+
+def stack_params(trees):
+    """Stack a list of same-structure param trees along a new leading 'stack' axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def stack_axes(axes: Axes) -> Axes:
+    """Prepend the 'stack' logical axis to every leaf."""
+    return jax.tree.map(
+        lambda a: ("stack",) + a,
+        axes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(y is None or isinstance(y, str) for y in x),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, weight, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x, weight, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight + bias).astype(x.dtype)
+
+
+def act_fn(name: str) -> Callable[[jax.Array], jax.Array]:
+    return {
+        "relu": jax.nn.relu,
+        "silu": jax.nn.silu,
+        "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+        "sigmoid": jax.nn.sigmoid,
+        "tanh": jnp.tanh,
+        "softplus": jax.nn.softplus,
+        "identity": lambda x: x,
+    }[name]
+
+
+@dataclasses.dataclass(frozen=True)
+class GRAUActivation:
+    """A GRAU register file + the dequant scales that frame it.
+
+    Forward semantics (QAT surrogate): the float pre-activation z is mapped to
+    the MAC integer domain (a = z / s_in), pushed through the *exact* integer
+    PWL shift-add function (with straight-through gradients along the realized
+    segment slopes), and dequantized (q * s_out). Training therefore sees the
+    very function the hardware unit executes.
+    """
+    spec: Any          # GRAUSpec
+    s_in: float
+    s_out: float
+    name: str = "grau"
+
+    def __call__(self, z: jax.Array) -> jax.Array:
+        from repro.core.grau import grau_surrogate
+        a = (z.astype(jnp.float32)) / self.s_in
+        q = grau_surrogate(a, self.spec)
+        return (q * self.s_out).astype(z.dtype)
+
+
+def build_lm_grau(
+    act_name: str,
+    *,
+    segments: int = 6,
+    num_exponents: int = 8,
+    mode: str = "apot",
+    out_bits: int = 8,
+    z_absmax: float = 16.0,
+    bias_mode: str = "lsq",
+) -> GRAUActivation:
+    """Build a GRAU activation for a transformer MLP nonlinearity.
+
+    Calibration: pre-activations of normalized transformer MLPs live within a
+    few tens; we fit over z in [-z_absmax, z_absmax] mapped to a +/-2^12 MAC
+    integer domain, and pick s_out to cover the activation's output range at
+    the target bit width.
+    """
+    from repro.core.build import build_grau
+    from repro.core.folding import ACTIVATIONS, fold
+
+    s_in = z_absmax / 4096.0
+    f = ACTIVATIONS[act_name]
+    zs = np.linspace(-z_absmax, z_absmax, 8193)
+    out_absmax = float(np.max(np.abs(f(zs))))
+    qmax = (1 << (out_bits - 1)) - 1
+    s_out = max(out_absmax, 1e-6) / qmax
+    folded = fold(act_name, s_in=s_in, s_out=s_out, out_bits=out_bits)
+    res = build_grau(
+        folded, mac_range=(-4096.0, 4096.0), segments=segments,
+        num_exponents=num_exponents, mode=mode, bias_mode=bias_mode,
+        range_doubling=False,
+    )
+    return GRAUActivation(spec=res.spec, s_in=s_in, s_out=s_out,
+                          name=f"grau-{mode}-{act_name}")
+
+
+def make_activation(name: str, grau: Optional[GRAUActivation] = None):
+    """Activation factory: exact float, or the GRAU QAT surrogate."""
+    return grau if grau is not None else act_fn(name)

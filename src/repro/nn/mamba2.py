@@ -1,0 +1,204 @@
+"""Mamba-2 (SSD — state-space duality) block: chunked train/prefill + O(1) decode.
+
+Implements the blocked SSD algorithm: the sequence is split into chunks of
+length Q; within a chunk the quadratic (dual) form runs on the MXU, across
+chunks a lax.scan carries the (heads, head_dim, d_state) recurrent state. This
+gives linear-time prefill and makes the long_500k cell a true O(1)-per-token
+decode (state update + readout), no KV cache.
+
+Layout follows the reference: in_proj -> [z | x | B | C | dt], depthwise
+causal conv over [x|B|C], softplus(dt)+bias, negative A per head, skip D,
+gated RMSNorm, out_proj. The SiLU gates are GRAU sites (see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import shard_ctx
+from repro.nn.common import ParamBuilder, rmsnorm
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    n_groups: int = 1
+    conv_width: int = 4
+    chunk: int = 256
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array    # (b, conv_width-1, conv_dim) rolling conv input buffer
+    ssm: jax.Array     # (b, heads, head_dim, d_state) recurrent state
+
+
+def init_mamba2(pb: ParamBuilder, d_model: int, cfg: SSMConfig):
+    di = cfg.d_inner(d_model)
+    h = cfg.n_heads(d_model)
+    g, n = cfg.n_groups, cfg.d_state
+    conv_dim = di + 2 * g * n
+    # in_proj emits [z(di) | x(di) | B(g*n) | C(g*n) | dt(h)]
+    pb.add("in_proj", (d_model, 2 * di + 2 * g * n + h), ("embed", "mlp"))
+    pb.add("conv_w", (cfg.conv_width, conv_dim), ("conv", "mlp"))
+    pb.add("conv_b", (conv_dim,), ("mlp",), init="zeros")
+    pb.add("dt_bias", (h,), ("heads",), init="zeros")
+    pb.add("a_log", (h,), ("heads",), init="zeros")
+    pb.add("d_skip", (h,), ("heads",), init="ones")
+    pb.add("norm_w", (di,), ("mlp",), init="zeros")
+    pb.add("out_proj", (di, d_model), ("mlp", "embed"))
+
+
+def _split_proj(proj, d_model, cfg: SSMConfig):
+    di = cfg.d_inner(d_model)
+    g, n = cfg.n_groups, cfg.d_state
+    h = cfg.n_heads(d_model)
+    z, xbc, dt = jnp.split(proj, [di, 2 * di + 2 * g * n], axis=-1)
+    return z, xbc, dt, (di, g, n, h)
+
+
+def _causal_conv(xbc, w, b, init_state: Optional[jax.Array] = None):
+    """Depthwise causal conv; returns (out, new_state=(last W-1 inputs))."""
+    width = w.shape[0]
+    if init_state is None:
+        pad = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = init_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i : xp.shape[1] - (width - 1 - i)] * w[i] for i in range(width))
+    new_state = xp[:, -(width - 1):]
+    return jax.nn.silu(out + b), new_state
+
+
+def ssd_chunked(xdt, dA, B, C, init_state=None, chunk: int = 256):
+    """Blocked SSD. xdt: (b,l,h,p) [already dt-scaled], dA: (b,l,h) [=dt*A<=0],
+    B,C: (b,l,g,n). Returns (y: (b,l,h,p), final_state: (b,h,p,n))."""
+    b, l, h, p = xdt.shape
+    g, n = B.shape[2], B.shape[3]
+    q = min(chunk, l)
+    assert l % q == 0, (l, q)
+    nc = l // q
+    hg = h // g
+
+    def rc(t, extra):  # reshape into chunks
+        return t.reshape((b, nc, q) + t.shape[2:])
+
+    xc, dac = rc(xdt, None), rc(dA, None)
+    Bc, Cc = rc(B, None), rc(C, None)
+    # broadcast groups to heads
+    Bh = jnp.repeat(Bc, hg, axis=3)     # (b,nc,q,h,n)
+    Ch = jnp.repeat(Cc, hg, axis=3)
+
+    cum = jnp.cumsum(dac, axis=2)                        # (b,nc,q,h)
+    total = cum[:, :, -1]                                # (b,nc,h)
+    # intra-chunk decay matrix L[q,k] = exp(cum_q - cum_k) for q >= k
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]          # (b,nc,q,k,h)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+
+    y_diag = jnp.einsum("bcqhn,bckhn,bcqkh,bckhp->bcqhp",
+                        Ch, Bh, L, xc.astype(jnp.float32))
+
+    # per-chunk input->state with decay to chunk end
+    decay_to_end = jnp.exp(total[:, :, None, :] - cum)            # (b,nc,q,h)
+    chunk_states = jnp.einsum("bckhn,bckh,bckhp->bchpn",
+                              Bh, decay_to_end, xc.astype(jnp.float32))
+
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(state, inp):
+        cs, tot = inp                                  # (b,h,p,n), (b,h)
+        out_state = state                              # state entering the chunk
+        new_state = state * jnp.exp(tot)[:, :, None, None] + cs
+        return new_state, out_state
+
+    final_state, states_in = jax.lax.scan(
+        step, s0, (chunk_states.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)))
+    states_in = states_in.transpose(1, 0, 2, 3, 4)     # (b,nc,h,p,n)
+
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Ch, states_in, jnp.exp(cum))
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, final_state
+
+
+def apply_mamba2(
+    params, x: jax.Array, d_model: int, cfg: SSMConfig,
+    gate_act: Callable = jax.nn.silu,
+    state: Optional[SSMState] = None,
+) -> Tuple[jax.Array, SSMState]:
+    """Full block forward over a sequence. x: (b, l, d_model)."""
+    b, l, _ = x.shape
+    proj = x @ params["in_proj"]
+    proj = shard_ctx.constrain(proj, "batch", "seq", "mlp")
+    z, xbc, dt, (di, g, n, h) = _split_proj(proj, d_model, cfg)
+    p = cfg.head_dim
+
+    conv_in = None if state is None else state.conv
+    xbc, conv_state = _causal_conv(xbc, params["conv_w"], params["conv_b"], conv_in)
+    xs, B, C = jnp.split(xbc, [di, di + g * n], axis=-1)
+    xs = xs.reshape(b, l, h, p)
+    B = B.reshape(b, l, g, n)
+    C = C.reshape(b, l, g, n)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])   # (b,l,h)
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))                  # (h,)
+    xdt = xs.astype(jnp.float32) * dt[..., None]
+    dA = dt * A
+
+    ssm_in = None if state is None else state.ssm
+    y, ssm_state = ssd_chunked(xdt, dA, B, C, init_state=ssm_in, chunk=cfg.chunk)
+    y = y + xs.astype(jnp.float32) * params["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, l, di).astype(x.dtype)
+
+    y = y * gate_act(z)
+    y = rmsnorm(y, params["norm_w"])
+    out = y @ params["out_proj"]
+    return out, SSMState(conv_state, ssm_state)
+
+
+def decode_mamba2(
+    params, x: jax.Array, d_model: int, cfg: SSMConfig, state: SSMState,
+    gate_act: Callable = jax.nn.silu,
+) -> Tuple[jax.Array, SSMState]:
+    """One-token recurrent step. x: (b, 1, d_model)."""
+    b = x.shape[0]
+    proj = x[:, 0] @ params["in_proj"]
+    z, xbc, dt, (di, g, n, h) = _split_proj(proj, d_model, cfg)
+    p = cfg.head_dim
+    w = params["conv_w"]
+
+    # rolling conv buffer: state.conv holds the last W-1 inputs
+    buf = jnp.concatenate([state.conv, xbc[:, None]], axis=1)   # (b, W, dim)
+    conv_out = jnp.einsum("bwc,wc->bc", buf.astype(jnp.float32), w.astype(jnp.float32))
+    xbc1 = jax.nn.silu(conv_out + params["conv_b"]).astype(x.dtype)
+    new_conv = buf[:, 1:]
+
+    xs, B, C = jnp.split(xbc1, [di, di + g * n], axis=-1)
+    xs = xs.reshape(b, h, p)
+    B = jnp.repeat(B.reshape(b, g, n), h // g, axis=1)          # (b,h,n)
+    C = jnp.repeat(C.reshape(b, g, n), h // g, axis=1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])    # (b,h)
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A)                                      # (b,h)
+    upd = (dt[..., None] * xs.astype(jnp.float32))[..., None] * B[:, :, None, :]
+    new_ssm = state.ssm * decay[:, :, None, None] + upd          # (b,h,p,n)
+
+    y = jnp.einsum("bhpn,bhn->bhp", new_ssm, C.astype(jnp.float32))
+    y = y + xs.astype(jnp.float32) * params["d_skip"][None, :, None]
+    y = y.reshape(b, di).astype(x.dtype)
+    y = y * gate_act(z)
+    y = rmsnorm(y, params["norm_w"])
+    out = (y @ params["out_proj"])[:, None]
+    return out, SSMState(new_conv, new_ssm)

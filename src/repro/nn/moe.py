@@ -1,0 +1,113 @@
+"""Mixture-of-Experts: top-k routing, capacity-based scatter dispatch, EP.
+
+Dispatch is scatter/gather (no (tokens x experts x capacity) one-hot einsum):
+  * router logits -> top-k experts + normalized weights per token,
+  * position-in-expert via a cumsum over the token axis; tokens beyond
+    expert capacity C are dropped (their combine weight is zeroed),
+  * dispatch: scatter token activations into an (E, C, d) buffer,
+  * expert compute: (E, C, d) x (E, d, ff) batched GEMMs, sharded over the
+    `model` mesh axis on E — expert parallelism; GSPMD turns the scatter /
+    gather into an all-to-all across the EP axis,
+  * combine: gather back per (token, k) and weight.
+
+Supports shared experts (DeepSeek-V3: 1 shared + 256 routed top-8) and
+sigmoid or softmax gating.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import shard_ctx
+from repro.nn.common import ParamBuilder
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff: int                    # per-expert intermediate size
+    num_shared: int = 0
+    capacity_factor: float = 1.25
+    gate: str = "softmax"        # "softmax" | "sigmoid" (deepseek-v3)
+    router_aux_weight: float = 0.001
+
+
+def init_moe(pb: ParamBuilder, d_model: int, cfg: MoEConfig, act_gated: bool = True):
+    e, f = cfg.num_experts, cfg.d_ff
+    pb.add("router", (d_model, e), ("embed", "experts"), init="fanin")
+    pb.add("w_gate", (e, d_model, f), ("experts", "embed", "expert_mlp"))
+    pb.add("w_up", (e, d_model, f), ("experts", "embed", "expert_mlp"))
+    pb.add("w_down", (e, f, d_model), ("experts", "expert_mlp", "embed"))
+    if cfg.num_shared:
+        sf = cfg.d_ff * cfg.num_shared
+        pb.add("ws_gate", (d_model, sf), ("embed", "mlp"))
+        pb.add("ws_up", (d_model, sf), ("embed", "mlp"))
+        pb.add("ws_down", (sf, d_model), ("mlp", "embed"))
+
+
+def apply_moe(
+    params,
+    x: jax.Array,                # (b, s, d)
+    cfg: MoEConfig,
+    act: Callable,
+    *,
+    capacity: Optional[int] = None,
+):
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    e, k = cfg.num_experts, cfg.top_k
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    if cfg.gate == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(scores, k)               # (t, k)
+    topw = topw / jnp.maximum(jnp.sum(topw, axis=-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(topi[:, 0], e), axis=0)
+    router_prob = jnp.mean(scores, axis=0)
+    aux_loss = cfg.router_aux_weight * e * jnp.sum(density * router_prob)
+
+    c = capacity or max(int(cfg.capacity_factor * t * k / e), 1)
+
+    # position of each (token, k) slot within its expert queue
+    flat_expert = topi.reshape(-1)                      # (t*k,)
+    onehot = jax.nn.one_hot(flat_expert, e, dtype=jnp.int32)     # (t*k, e)
+    pos_in_expert = (jnp.cumsum(onehot, axis=0) - 1)
+    pos = jnp.take_along_axis(pos_in_expert, flat_expert[:, None], axis=1)[:, 0]
+    keep = pos < c
+    slot = flat_expert * c + jnp.where(keep, pos, 0)    # (t*k,)
+
+    # dispatch: scatter into (e*c, d)
+    src = jnp.repeat(xt, k, axis=0)                     # (t*k, d)
+    buf = jnp.zeros((e * c, d), xt.dtype)
+    buf = buf.at[jnp.where(keep, slot, e * c)].add(src, mode="drop")
+    buf = buf.reshape(e, c, d)
+    buf = shard_ctx.constrain(buf, "experts", None, None)
+
+    # expert compute (EP over the leading axis)
+    h = act(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])) * jnp.einsum(
+        "ecd,edf->ecf", buf, params["w_up"])
+    h = shard_ctx.constrain(h, "experts", None, None)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+    out_buf = shard_ctx.constrain(out_buf, "experts", None, None).reshape(e * c, d)
+
+    # combine: gather each (token, k) slot back and weight
+    gathered = jnp.take(out_buf, jnp.where(keep, slot, 0), axis=0)
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    w = (topw.reshape(-1) * keep.astype(topw.dtype)).astype(gathered.dtype)
+    yt = jnp.sum((gathered * w[:, None]).reshape(t, k, d), axis=1)
+
+    if cfg.num_shared:
+        hs = act(xt @ params["ws_gate"]) * (xt @ params["ws_up"])
+        yt = yt + hs @ params["ws_down"]
+
+    return yt.reshape(b, s, d).astype(x.dtype), aux_loss

@@ -1,0 +1,112 @@
+"""Activation-sharding context: logical-axis constraints inside model code.
+
+GSPMD propagation alone drops batch sharding inside our scanned flash-
+attention loops (observed in the dry-run HLO: full-batch logits buffers in
+the layer-scan carry). The fix is the standard MaxText/t5x one: explicit
+with_sharding_constraint on activations, expressed in logical axis names and
+resolved against the active mesh rules.
+
+Usage (steps.py):
+    with shard_ctx.use(mesh):
+        lowered = jax.jit(fn, ...).lower(...)
+Model code calls shard_ctx.constrain(x, "batch", "seq", None) — a no-op when
+no context is active (unit tests, host examples).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+# logical activation axis -> mesh axis (or tuple) resolved at `use` time
+_ACT_RULES = {
+    "batch": "__data__",
+    "attn_batch": "__data__",  # attention tensors' batch dim; SP archs remap
+                               # it to ("data","model") -> fully local attention
+    "seq": None,
+    "kv_seq": None,           # K/V sequence dim (kept replicated under SP)
+    "seq_shard": "data",      # sequence-sharded long-context tensors
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": "model",      # used only when heads don't divide the axis
+    "embed": None,
+    "mlp": "model",
+    "experts": "model",
+    "expert_cap": None,
+    "vocab": "model",
+    "state": None,
+}
+
+
+def active_mesh():
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def use(mesh, overrides: Optional[dict] = None):
+    prev_mesh = getattr(_STATE, "mesh", None)
+    prev_rules = getattr(_STATE, "rules", None)
+    rules = dict(_ACT_RULES)
+    if overrides:
+        rules.update(overrides)
+    _STATE.mesh = mesh
+    _STATE.rules = rules
+    try:
+        yield
+    finally:
+        _STATE.mesh = prev_mesh
+        _STATE.rules = prev_rules
+
+
+def _resolve(name, dim: int, mesh, rules):
+    if name is None:
+        return None
+    target = rules.get(name)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if target == "__data__":
+        target = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if isinstance(target, tuple):
+        n = int(np.prod([sizes[a] for a in target])) if target else 1
+        return target if (target and dim % n == 0) else None
+    if target is not None and dim % sizes[target] == 0:
+        return target
+    return None
+
+
+def constrain(x: jax.Array, *names) -> jax.Array:
+    """Apply a logical sharding constraint; silently no-op without a context.
+
+    Mesh axes are assigned at most once per spec (first dim wins), so rule
+    sets like {"seq": "model"} (sequence parallelism) compose with dims whose
+    default rule also targets "model"."""
+    mesh = getattr(_STATE, "mesh", None)
+    if mesh is None or not hasattr(x, "shape"):
+        return x
+    rules = _STATE.rules
+    if len(names) != x.ndim:
+        raise ValueError(f"constrain: {len(names)} names for rank-{x.ndim}")
+    used: set = set()
+    spec = []
+    for n, d in zip(names, x.shape):
+        r = _resolve(n, d, mesh, rules)
+        axes = r if isinstance(r, tuple) else (r,) if r else ()
+        if any(a in used for a in axes):
+            spec.append(None)
+            continue
+        used.update(axes)
+        spec.append(r)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def constrain_attn_heads(x: jax.Array, kind: str = "heads") -> jax.Array:
+    """(b, s, h, d) activation constraint. With the default rules this is TP
+    over heads; under the sequence-parallel override ({"heads": None,
+    "kv_heads": None, "seq": "model"}, chosen by steps.build_cell when heads
+    don't divide the model axis) it shards the sequence instead."""
+    return constrain(x, "batch", "seq", kind, None)

@@ -1,0 +1,152 @@
+"""GRAUSpec — the runtime-reconfigurable register file of a GRAU unit.
+
+The paper's hardware unit is configured by a small set of registers:
+  * S-1 integer breakpoints (segment comparators),
+  * per-segment shift encodings (which 1-bit right-shifter stages fire),
+  * per-segment sign bit,
+  * per-segment integer bias,
+  * a global pre-shift (the paper's "pre-right-shifting" that normalises all
+    exponents into a contiguous window),
+  * output bit-width / signedness (mixed-precision mode register).
+
+We represent that register file as a JAX pytree so that "runtime
+reconfiguration" is literally a parameter update: no recompilation, the same
+compiled kernel serves every activation function and precision mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Hardware limits mirrored from the paper's implemented instances (Table VI).
+MAX_SEGMENTS = 8          # 4/6/8-segment instances
+MAX_EXPONENTS = 16        # 8/16-exponent shifter pipelines
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GRAUSpec:
+    """Register file of one GRAU unit (one folded activation).
+
+    Shapes are padded to (MAX_SEGMENTS, MAX_EXPONENTS) so that specs for
+    different activation functions are pytree-compatible (swap at runtime)
+    and so a whole network's specs stack into one leading axis.
+
+    Semantics of the integer datapath (bit-exact with the RTL):
+      seg  = sum_i [x > breakpoints[i]]                           # comparators
+      acc  = sum_{k: enc[seg,k]=1} arith_shift_right(x, pre_shift + k)
+             # stage k of the 1-bit shifter pipeline carries x >> (pre_shift+k);
+             # cascaded arithmetic shifts compose exactly, so a single shift by
+             # (pre_shift + k) is bit-identical to the RTL's serial datapath.
+             # pre_shift < 0 (early-stage positive exponents) is a left shift.
+      y    = sign[seg] * acc + bias[seg]
+      out  = clamp(y, qmin(out_bits), qmax(out_bits))
+
+    Stage k therefore realises exponent 2^(-(pre_shift + k)); an exponent
+    window [e_lo, e_hi] maps to pre_shift = -e_hi with n = e_hi - e_lo + 1
+    pipeline stages.
+    """
+
+    # --- static (compile-time) fields ---
+    num_segments: int = dataclasses.field(metadata=dict(static=True))
+    num_exponents: int = dataclasses.field(metadata=dict(static=True))
+    out_bits: int = dataclasses.field(metadata=dict(static=True))
+    out_signed: bool = dataclasses.field(metadata=dict(static=True))
+
+    # --- register file (data; reconfigurable at runtime) ---
+    breakpoints: jax.Array      # (MAX_SEGMENTS - 1,) int32, ascending; padded with INT32_MAX
+    enc: jax.Array              # (MAX_SEGMENTS, MAX_EXPONENTS) int32 {0,1}; bit k => shift by (pre_shift + k)
+    sign: jax.Array             # (MAX_SEGMENTS,) int32 in {-1, +1}
+    bias: jax.Array             # (MAX_SEGMENTS,) int32
+    pre_shift: jax.Array        # () int32; global exponent window offset (may be negative)
+
+    @property
+    def qmin(self) -> int:
+        return -(1 << (self.out_bits - 1)) if self.out_signed else 0
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.out_bits - 1)) - 1 if self.out_signed else (1 << self.out_bits) - 1
+
+    def replace(self, **kw) -> "GRAUSpec":
+        return dataclasses.replace(self, **kw)
+
+
+def make_spec(
+    breakpoints: np.ndarray,
+    enc: np.ndarray,
+    sign: np.ndarray,
+    bias: np.ndarray,
+    *,
+    pre_shift: int,
+    num_exponents: int,
+    out_bits: int,
+    out_signed: bool = True,
+) -> GRAUSpec:
+    """Pad a fitted configuration into the fixed-size register file."""
+    s = int(len(bias))
+    if s > MAX_SEGMENTS:
+        raise ValueError(f"{s} segments > hardware maximum {MAX_SEGMENTS}")
+    if num_exponents > MAX_EXPONENTS:
+        raise ValueError(f"{num_exponents} exponents > hardware maximum {MAX_EXPONENTS}")
+    bp = np.full((MAX_SEGMENTS - 1,), np.iinfo(np.int32).max, np.int32)
+    bp[: s - 1] = np.asarray(breakpoints, np.int32)
+    e = np.zeros((MAX_SEGMENTS, MAX_EXPONENTS), np.int32)
+    e[:s, :num_exponents] = np.asarray(enc, np.int32)
+    sg = np.ones((MAX_SEGMENTS,), np.int32)
+    sg[:s] = np.asarray(sign, np.int32)
+    b = np.zeros((MAX_SEGMENTS,), np.int32)
+    b[:s] = np.asarray(bias, np.int32)
+    return GRAUSpec(
+        num_segments=s,
+        num_exponents=int(num_exponents),
+        out_bits=int(out_bits),
+        out_signed=bool(out_signed),
+        breakpoints=jnp.asarray(bp),
+        enc=jnp.asarray(e),
+        sign=jnp.asarray(sg),
+        bias=jnp.asarray(b),
+        pre_shift=jnp.asarray(pre_shift, jnp.int32),
+    )
+
+
+def stack_specs(specs: Tuple[GRAUSpec, ...]) -> GRAUSpec:
+    """Stack per-layer specs along a leading axis (for lax.scan layer stacks).
+
+    Static fields must agree; register arrays get a leading layer axis.
+    """
+    s0 = specs[0]
+    for s in specs[1:]:
+        if (s.num_segments, s.num_exponents, s.out_bits, s.out_signed) != (
+            s0.num_segments, s0.num_exponents, s0.out_bits, s0.out_signed,
+        ):
+            raise ValueError("cannot stack GRAUSpecs with differing static config")
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *specs)
+
+
+@dataclasses.dataclass(frozen=True)
+class PWLFunction:
+    """A float piecewise-linear function: the pre-hardware fit artifact.
+
+    y(x) = slope[seg]*x + intercept[seg],  seg chosen by breakpoints.
+    Used as (a) the QAT training surrogate and (b) the reference that PoT/APoT
+    projection starts from.
+    """
+    breakpoints: np.ndarray   # (S-1,) float — segment boundaries, ascending
+    slopes: np.ndarray        # (S,) float
+    intercepts: np.ndarray    # (S,) float
+
+    @property
+    def num_segments(self) -> int:
+        return len(self.slopes)
+
+    def __call__(self, x):
+        # seg = #(breakpoints < x): identical comparator semantics to the
+        # integer datapath's sum_i [x > bp_i].
+        xp = jnp if isinstance(x, jax.Array) else np
+        seg = xp.searchsorted(xp.asarray(self.breakpoints), x, side="left")
+        return xp.asarray(self.slopes)[seg] * x + xp.asarray(self.intercepts)[seg]

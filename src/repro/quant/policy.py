@@ -1,0 +1,43 @@
+"""Mixed-precision policies — per-stage bit-width assignment (paper Table I).
+
+The paper's mixed-precision protocol assigns one precision per *stage* of the
+network (VGG16/ResNet18: 8/4/2/4/8 over the stages + FC). We model a policy as
+an ordered list of (pattern, bits) rules matched against layer names, with a
+default. `stage_policy` builds the paper's scheme.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Sequence, Tuple
+
+from repro.quant.quantizers import QConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    rules: Tuple[Tuple[str, int], ...]   # (regex, bits), first match wins
+    default_bits: int = 8
+
+    def bits_for(self, layer_name: str) -> int:
+        for pattern, bits in self.rules:
+            if re.search(pattern, layer_name):
+                return bits
+        return self.default_bits
+
+    def qconfig_for(self, layer_name: str, **kw) -> QConfig:
+        return QConfig(bits=self.bits_for(layer_name), **kw)
+
+
+def unified(bits: int) -> PrecisionPolicy:
+    return PrecisionPolicy(rules=(), default_bits=bits)
+
+
+def stage_policy(stage_bits: Sequence[int], fc_bits: int = 8) -> PrecisionPolicy:
+    """Paper scheme: per-stage bits (e.g. [8, 4, 2, 4]) + FC precision."""
+    rules = tuple((rf"stage{i}\b|stage{i}[._/]", b) for i, b in enumerate(stage_bits))
+    rules += ((r"\bfc\b|head|classifier", fc_bits),)
+    return PrecisionPolicy(rules=rules, default_bits=stage_bits[-1])
+
+
+PAPER_MIXED = stage_policy([8, 4, 2, 4], fc_bits=8)   # the 8/4/2/4/8 scheme

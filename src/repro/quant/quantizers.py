@@ -1,0 +1,92 @@
+"""Quantizers — the integer-aware QAT substrate (replaces Brevitas).
+
+Symmetric uniform quantization with straight-through estimators, per-tensor or
+per-channel scales, and the bit-width zoo the paper's mixed-precision study
+needs (1/2/4/8-bit).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def qrange(bits: int, signed: bool = True):
+    if signed:
+        return -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    return 0, (1 << bits) - 1
+
+
+@jax.custom_vjp
+def ste_round(x):
+    return jnp.round(x)
+
+
+ste_round.defvjp(lambda x: (jnp.round(x), None), lambda _, g: (g,))
+
+
+@dataclasses.dataclass(frozen=True)
+class QConfig:
+    bits: int = 8
+    signed: bool = True
+    per_channel: bool = False
+    channel_axis: int = -1
+
+    @property
+    def qmin(self):
+        return qrange(self.bits, self.signed)[0]
+
+    @property
+    def qmax(self):
+        return qrange(self.bits, self.signed)[1]
+
+
+def compute_scale(x: jax.Array, cfg: QConfig) -> jax.Array:
+    """Max-abs calibration scale (symmetric)."""
+    if cfg.per_channel:
+        axes = tuple(i for i in range(x.ndim) if i != cfg.channel_axis % x.ndim)
+        amax = jnp.max(jnp.abs(x), axis=axes, keepdims=True)
+    else:
+        amax = jnp.max(jnp.abs(x))
+    return jnp.maximum(amax, 1e-8) / cfg.qmax
+
+
+def quantize(x: jax.Array, scale: jax.Array, cfg: QConfig) -> jax.Array:
+    """Real quantization to integers (inference path)."""
+    q = jnp.clip(jnp.round(x / scale), cfg.qmin, cfg.qmax)
+    if cfg.signed:
+        dt = jnp.int8 if cfg.bits <= 8 else jnp.int16
+    else:
+        dt = jnp.uint8 if cfg.bits <= 8 else jnp.uint16
+    return q.astype(dt)
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def fake_quant(x: jax.Array, cfg: QConfig, scale: Optional[jax.Array] = None) -> jax.Array:
+    """QAT fake quantization: float in/out, STE gradient, clipping."""
+    if cfg.bits >= 32:
+        return x
+    s = compute_scale(jax.lax.stop_gradient(x), cfg) if scale is None else scale
+    y = jnp.clip(ste_round(x / s), cfg.qmin, cfg.qmax) * s
+    return y.astype(x.dtype)
+
+
+def binarize(x: jax.Array) -> jax.Array:
+    """1-bit sign quantization with STE clip gradient (BNN path)."""
+    @jax.custom_vjp
+    def _sign(v):
+        return jnp.where(v >= 0, 1.0, -1.0).astype(v.dtype)
+
+    def fwd(v):
+        return _sign(v), v
+
+    def bwd(v, g):
+        return (g * (jnp.abs(v) <= 1.0).astype(g.dtype),)
+
+    _sign.defvjp(fwd, bwd)
+    return _sign(x)

@@ -1,0 +1,95 @@
+"""Roofline analysis: 3 terms from the compiled dry-run artifact.
+
+  compute    = HLO_FLOPs / (chips * PEAK_FLOPS)
+  memory     = HLO_bytes / (chips * HBM_BW)
+  collective = collective operand bytes / (chips * ICI links * LINK_BW)
+
+Collective bytes are parsed from the compiled HLO text: we sum the output
+shape bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction (cost_analysis does not report them).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12       # bf16
+HBM_BW = 819e9            # bytes/s
+LINK_BW = 50e9            # bytes/s per ICI link
+ICI_LINKS = 4             # 2D torus: 4 links/chip
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g. "  %ag = bf16[4,1024,512]{2,1,0} all-gather(...)" or tuple shapes
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\s]+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+    re.M,
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> float:
+    """Sum output-shape bytes over collective ops (excluding -done dupes)."""
+    total = 0
+    seen_done = 0
+    for m in _INSTR_RE.finditer(hlo_text):
+        shape_str, op = m.group(1), m.group(2)
+        line = m.group(0)
+        if "-done(" in line:
+            seen_done += 1
+            continue  # the -start carries the shape; avoid double counting
+        total += _shape_bytes(shape_str)
+    return float(total)
+
+
+def collective_breakdown(hlo_text: str) -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    for m in _INSTR_RE.finditer(hlo_text):
+        if "-done(" in m.group(0):
+            continue
+        op = m.group(2)
+        out[op] = out.get(op, 0.0) + _shape_bytes(m.group(1))
+    return out
+
+
+def roofline_terms(*, flops: float, bytes_accessed: float,
+                   collective_bytes: float, chips: int) -> Dict[str, float]:
+    """All terms in seconds (per step, whole mesh). NOTE: cost_analysis FLOPs
+    and bytes from an SPMD module are per-device; collective bytes parsed from
+    the HLO are also per-device. We therefore DON'T divide by chips again."""
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_accessed / HBM_BW
+    t_coll = collective_bytes / (ICI_LINKS * LINK_BW)
+    terms = {"compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    return {**terms, "dominant": dominant.replace("_s", "")}
+
+
+def model_flops(n_params: float, tokens: float, *, training: bool = True) -> float:
+    """6·N·D for a train step (fwd+bwd), 2·N·D for inference."""
+    return (6.0 if training else 2.0) * n_params * tokens

@@ -1,0 +1,113 @@
+"""Batched serving engine: continuous-batching decode over a fixed-size slot
+pool with prefill admission — the serving analogue of the training loop.
+
+Requests enter a queue; free slots are prefilled (one jit'd prefill per
+admission batch) and then participate in the global decode step. Slots whose
+sequence hits EOS / max_tokens are retired and refilled. All jit shapes are
+static (slot count, max_seq), so serving never recompiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (len,) int32
+    max_new_tokens: int = 32
+    out_tokens: Optional[List[int]] = None
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    slots: int = 8                # decode batch size (static)
+    max_seq: int = 512
+    eos_id: int = 1
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
+                 dtype=jnp.float32):
+        self.cfg, self.params, self.ecfg = cfg, params, ecfg
+        self.caches = lm.init_caches(cfg, ecfg.slots, ecfg.max_seq, dtype=dtype)
+        self.slot_req: List[Optional[Request]] = [None] * ecfg.slots
+        self.remaining = np.zeros(ecfg.slots, np.int32)
+        self.last_tok = np.zeros((ecfg.slots, 1), np.int32)
+
+        self._decode = jax.jit(
+            lambda p, t, c: lm.decode_step(p, cfg, t, c))
+
+    # --- admission ------------------------------------------------------
+    def admit(self, req: Request) -> bool:
+        try:
+            slot = self.slot_req.index(None)
+        except ValueError:
+            return False
+        # single-slot prefill: run the prompt through decode steps (simple,
+        # shape-static). A production path would use a jitted prefill_step;
+        # examples/serving.py uses this engine at small scale.
+        sl_caches = jax.tree.map(lambda c: c, self.caches)
+        toks = req.prompt.astype(np.int32)
+        for t in toks[:-1]:
+            tok = jnp.full((self.ecfg.slots, 1), int(t), jnp.int32)
+            _, new_caches = self._decode(self.params, tok, sl_caches)
+            # merge only this slot's cache rows
+            sl_caches = jax.tree.map(
+                lambda old, new: jnp.where(
+                    self._slot_mask(slot, old.ndim), new, old),
+                sl_caches, new_caches)
+        self.caches = sl_caches
+        self.slot_req[slot] = req
+        req.out_tokens = []
+        self.remaining[slot] = req.max_new_tokens
+        self.last_tok[slot, 0] = int(toks[-1])
+        return True
+
+    def _slot_mask(self, slot: int, ndim: int):
+        # cache leaves carry a leading scanned-layer axis: (layers, slots, ...)
+        shape = [1, self.ecfg.slots] + [1] * (ndim - 2)
+        m = jnp.zeros(shape, bool).at[:, slot].set(True)
+        return m
+
+    # --- decode tick ------------------------------------------------------
+    def step(self) -> Dict[int, int]:
+        """One global decode step; returns {rid: new_token} for live slots."""
+        tok = jnp.asarray(self.last_tok)
+        logits, self.caches = self._decode(self.params, tok, self.caches)
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1)).astype(np.int32)
+        emitted = {}
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            t = int(nxt[slot])
+            req.out_tokens.append(t)
+            emitted[req.rid] = t
+            self.remaining[slot] -= 1
+            self.last_tok[slot, 0] = t
+            if t == self.ecfg.eos_id or self.remaining[slot] <= 0:
+                self.slot_req[slot] = None      # retire -> slot is reusable
+        return emitted
+
+    def run(self, requests: List[Request], max_ticks: int = 1000) -> List[Request]:
+        done: List[Request] = []
+        pending = list(requests)
+        tick = 0
+        while (pending or any(self.slot_req)) and tick < max_ticks:
+            while pending and self.admit(pending[0]):
+                pending.pop(0)
+            if not any(self.slot_req):
+                break
+            self.step()
+            done = [r for r in requests if r.out_tokens is not None and
+                    r not in pending]
+            tick += 1
+        return requests

@@ -1,0 +1,49 @@
+"""Elastic scaling: re-shard a checkpoint onto a different mesh.
+
+Scenario: a pod (or a slice) is lost mid-run, or capacity grows. SPMD jobs
+can't hot-swap devices, so elasticity is restart-with-resharding:
+
+  1. the surviving coordinator picks the new mesh shape (e.g. 2x16x16 ->
+     16x16 after losing a pod, keeping `model` intact so TP layouts and
+     attention sharding stay valid);
+  2. `reshard_plan` maps every parameter's old PartitionSpec to the new mesh
+     (pure metadata — specs are logical-axis-derived, so they transfer);
+  3. ckpt.restore(..., shardings=new) device_puts each tensor under the new
+     sharding — JAX handles the scatter;
+  4. the data pipeline seeks to the checkpoint step (pure function of step);
+     the global batch is preserved, so per-device batch grows/shrinks.
+
+Gradient-accumulation rescue: if the shrunken mesh would not fit the
+activation working set, bump `microbatches` (steps.make_train_step) to keep
+the global batch constant — arithmetic identical, only step time changes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.launch import steps as steps_lib
+from repro.models.config import ModelConfig
+
+
+def reshard_plan(cfg: ModelConfig, new_mesh, *, fsdp: bool = True):
+    """Param (shapes, NamedShardings) for the new mesh."""
+    shapes, pspecs = steps_lib.param_pspecs(cfg, new_mesh, fsdp=fsdp)
+    shardings = jax.tree.map(
+        lambda p: NamedSharding(new_mesh, p), pspecs,
+        is_leaf=lambda x: hasattr(x, "index") and not isinstance(x, dict))
+    return shapes, shardings
+
+
+def validate_transition(old_mesh, new_mesh) -> Tuple[bool, str]:
+    """A transition is safe if the model axis is unchanged (TP layout
+    stability) and the data axes still divide the global batch upstream."""
+    old = dict(zip(old_mesh.axis_names, old_mesh.devices.shape))
+    new = dict(zip(new_mesh.axis_names, new_mesh.devices.shape))
+    if old.get("model") != new.get("model"):
+        return False, (f"model axis changed {old.get('model')} -> "
+                       f"{new.get('model')}; requires weight re-layout "
+                       f"(supported, but costs a full re-shard pass)")
+    return True, "ok"

@@ -1,0 +1,88 @@
+"""AdamW + schedules, pure-pytree (no optax dependency).
+
+Optimizer moments are fp32 and inherit the parameter PartitionSpecs; under
+the FSDP sharding rules (nn/common.py) params — and therefore m/v — are
+sharded over both `data` and `model` axes, i.e. ZeRO-3-style fully sharded
+state. Gradient clipping is by global norm.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay to min_lr_ratio."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.peak_lr * warm * frac
+
+
+def init_opt_state(params) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    m=jax.tree.map(zeros, params),
+                    v=jax.tree.map(zeros, params))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(
+    cfg: AdamWConfig, params, grads, state: OptState,
+) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_p, OptState(step, new_m, new_v), metrics

@@ -1,0 +1,10 @@
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device
+# (the 512-device override belongs exclusively to repro.launch.dryrun).
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,52 @@
+"""PoT/APoT slope projection properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.pwlf.approx import (encoding_value, project_apot,
+                               project_apot_greedy, project_pot, window,
+                               window_values)
+
+
+@settings(max_examples=100, deadline=None)
+@given(slope=st.floats(-2.0, 2.0), e_hi=st.integers(-4, 0),
+       n=st.integers(4, 16))
+def test_apot_at_least_as_accurate_as_pot(slope, e_hi, n):
+    win = window(e_hi - n + 1, e_hi)
+    pot_err = abs(abs(slope) - encoding_value(project_pot(slope, win), win))
+    apot_err = abs(abs(slope) - encoding_value(project_apot(slope, win), win))
+    assert apot_err <= pot_err + 1e-12
+
+
+@settings(max_examples=100, deadline=None)
+@given(e_hi=st.integers(-3, 0), n=st.integers(4, 12), data=st.data())
+def test_apot_exact_for_subset_sums(e_hi, n, data):
+    win = window(e_hi - n + 1, e_hi)
+    vals = window_values(win)
+    bits = data.draw(st.lists(st.booleans(), min_size=n, max_size=n))
+    target = float(np.dot(np.asarray(bits, float), vals))
+    enc = project_apot(target, win)
+    assert encoding_value(enc, win) == pytest.approx(target, abs=1e-12)
+
+
+@settings(max_examples=60, deadline=None)
+@given(slope=st.floats(0.0, 2.0), e_hi=st.integers(-4, 0), n=st.integers(4, 12))
+def test_exact_subset_beats_paper_greedy(slope, e_hi, n):
+    """Our exhaustive projection is never worse than the paper's greedy."""
+    win = window(e_hi - n + 1, e_hi)
+    exact_err = abs(slope - encoding_value(project_apot(slope, win), win))
+    greedy_err = abs(slope - encoding_value(project_apot_greedy(slope, win), win))
+    assert exact_err <= greedy_err + 1e-12
+
+
+def test_pot_single_bit_only():
+    win = window(-8, -1)
+    for s in (0.9, 0.3, 0.01, 1.7):
+        enc = project_pot(s, win)
+        assert enc.sum() <= 1
+
+
+def test_zero_slope_all_zero_encoding():
+    win = window(-8, -1)
+    assert project_pot(0.0, win).sum() == 0
+    assert project_apot(0.0, win).sum() == 0

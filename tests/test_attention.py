@@ -1,0 +1,112 @@
+"""Chunked flash attention + Mamba2 SSD numerical equivalence tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.nn.attention import (KVCache, chunked_attention, decode_attention,
+                                update_cache)
+from repro.nn.mamba2 import SSMConfig, ssd_chunked
+
+
+def naive_attention(q, k, v, causal=True, scale=None):
+    b, s_q, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    scale = scale or d**-0.5
+    qf = q.astype(jnp.float32).reshape(b, s_q, kvh, g, d)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qf, k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s_q, k.shape[1]), bool))
+        logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bkgqd", p, v.astype(jnp.float32))
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, s_q, h, d)
+
+
+@pytest.mark.parametrize("h,kvh", [(4, 4), (8, 2), (6, 2)])
+@pytest.mark.parametrize("qc,kc", [(16, 16), (32, 8), (64, 64), (13, 29)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_chunked_matches_naive(h, kvh, qc, kc, causal, rng):
+    b, s, d = 2, 64, 16
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, kvh, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kvh, d)), jnp.float32)
+    got = chunked_attention(q, k, v, causal=causal, q_chunk=qc, kv_chunk=kc)
+    want = naive_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_matches_last_row_of_full(rng):
+    b, s, h, kvh, d = 2, 33, 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, kvh, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kvh, d)), jnp.float32)
+    full = naive_attention(q, k, v, causal=True)
+    cache = KVCache(k=k, v=v, length=jnp.full((b,), s, jnp.int32))
+    dec = decode_attention(q[:, -1:], cache)
+    np.testing.assert_allclose(np.asarray(dec[:, 0]), np.asarray(full[:, -1]),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_update_cache_appends_at_length(rng):
+    b, S, kvh, d = 2, 16, 2, 8
+    cache = KVCache(k=jnp.zeros((b, S, kvh, d)), v=jnp.zeros((b, S, kvh, d)),
+                    length=jnp.array([3, 7], jnp.int32))
+    k_new = jnp.asarray(rng.normal(size=(b, 1, kvh, d)), jnp.float32)
+    out = update_cache(cache, k_new, k_new)
+    np.testing.assert_allclose(np.asarray(out.k[0, 3]), np.asarray(k_new[0, 0]))
+    np.testing.assert_allclose(np.asarray(out.k[1, 7]), np.asarray(k_new[1, 0]))
+    assert np.all(np.asarray(out.length) == np.array([4, 8]))
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD
+# ---------------------------------------------------------------------------
+
+def ssd_sequential(xdt, dA, B, C):
+    """Token-by-token recurrence: h' = h*exp(dA) + xdt (x) B; y = C . h."""
+    b, l, h, p = xdt.shape
+    g, n = B.shape[2], B.shape[3]
+    hg = h // g
+    Bh = np.repeat(np.asarray(B), hg, axis=2)
+    Ch = np.repeat(np.asarray(C), hg, axis=2)
+    state = np.zeros((b, h, p, n))
+    ys = np.zeros((b, l, h, p))
+    for t in range(l):
+        state = state * np.exp(np.asarray(dA)[:, t])[:, :, None, None] + \
+            np.asarray(xdt)[:, t][:, :, :, None] * Bh[:, t][:, :, None, :]
+        ys[:, t] = np.einsum("bhpn,bhn->bhp", state, Ch[:, t])
+    return ys, state
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16, 64])
+@pytest.mark.parametrize("g", [1, 2])
+def test_ssd_chunked_matches_sequential(chunk, g, rng):
+    b, l, h, p, n = 2, 64, 4, 8, 16
+    xdt = jnp.asarray(rng.normal(size=(b, l, h, p)), jnp.float32)
+    dA = jnp.asarray(-np.abs(rng.normal(size=(b, l, h))), jnp.float32) * 0.1
+    B = jnp.asarray(rng.normal(size=(b, l, g, n)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(b, l, g, n)), jnp.float32)
+    y, state = ssd_chunked(xdt, dA, B, C, chunk=chunk)
+    y_ref, state_ref = ssd_sequential(xdt, dA, B, C)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(state), state_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_initial_state_continuation(rng):
+    """Splitting a sequence across two calls with carried state == one call."""
+    b, l, h, p, n, g = 1, 32, 2, 4, 8, 1
+    xdt = jnp.asarray(rng.normal(size=(b, l, h, p)), jnp.float32)
+    dA = jnp.asarray(-np.abs(rng.normal(size=(b, l, h))), jnp.float32) * 0.1
+    B = jnp.asarray(rng.normal(size=(b, l, g, n)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(b, l, g, n)), jnp.float32)
+    y_full, s_full = ssd_chunked(xdt, dA, B, C, chunk=8)
+    y1, s1 = ssd_chunked(xdt[:, :16], dA[:, :16], B[:, :16], C[:, :16], chunk=8)
+    y2, s2 = ssd_chunked(xdt[:, 16:], dA[:, 16:], B[:, 16:], C[:, 16:],
+                         init_state=s1, chunk=8)
+    np.testing.assert_allclose(np.asarray(y_full[:, 16:]), np.asarray(y2),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_full), np.asarray(s2),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,44 @@
+"""Pallas flash-attention kernel sweep vs the naive oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from test_attention import naive_attention  # pytest puts tests/ on sys.path
+
+
+@pytest.mark.parametrize("h,kvh", [(4, 4), (8, 2), (6, 3)])
+@pytest.mark.parametrize("blocks", [(64, 64), (32, 128), (128, 32)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_naive(h, kvh, blocks, causal, rng):
+    b, s, d = 2, 256, 32
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, kvh, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kvh, d)), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, blocks=blocks, interpret=True)
+    want = naive_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_flash_block_invariance(rng):
+    b, s, h, d = 1, 256, 4, 64
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    a = flash_attention(q, k, v, blocks=(256, 256), interpret=True)
+    c = flash_attention(q, k, v, blocks=(64, 128), interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), rtol=3e-5, atol=3e-5)
+
+
+def test_flash_bf16_io(rng):
+    b, s, h, d = 1, 128, 2, 32
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.bfloat16)
+    got = flash_attention(q, k, v, blocks=(64, 64), interpret=True)
+    want = naive_attention(q.astype(jnp.float32), k.astype(jnp.float32),
+                           v.astype(jnp.float32))
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want),
+                               rtol=2e-2, atol=2e-2)

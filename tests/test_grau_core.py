@@ -1,0 +1,128 @@
+"""GRAU integer datapath + folded-builder + MT baseline tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.build import build_grau
+from repro.core.folding import BNParams, fold
+from repro.core.grau import (grau_apply_int, grau_reference_int,
+                             grau_surrogate)
+from repro.core.multithreshold import fit_thresholds, mt_apply_int
+from repro.pwlf.spec import make_spec
+
+
+def random_spec(rng, out_bits=8):
+    s = int(rng.integers(2, 9))
+    n_exp = int(rng.choice([4, 8, 16]))
+    bps = np.sort(rng.integers(-5000, 5000, size=s - 1))
+    bps = np.unique(bps)
+    enc = rng.integers(0, 2, size=(len(bps) + 1, n_exp))
+    sign = rng.choice([-1, 1], size=len(bps) + 1)
+    bias = rng.integers(-100, 100, size=len(bps) + 1)
+    return make_spec(bps, enc, sign, bias, pre_shift=int(rng.integers(0, 6)),
+                     num_exponents=n_exp, out_bits=out_bits)
+
+
+def test_jnp_matches_numpy_reference(rng):
+    for _ in range(20):
+        spec = random_spec(rng)
+        x = rng.integers(-60000, 60000, size=(64,)).astype(np.int64)
+        want = grau_reference_int(x, spec)
+        got = np.asarray(grau_apply_int(jnp.asarray(x, jnp.int32), spec))
+        np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=30, deadline=None)
+@given(x=st.integers(-(2**20), 2**20), pre=st.integers(0, 8))
+def test_shift_add_is_floor_division(x, pre):
+    """Cascaded arithmetic shifts == floor division by 2^k (RTL property)."""
+    spec = make_spec(np.array([], np.int64), np.array([[1] + [0] * 7]),
+                     np.array([1]), np.array([0]), pre_shift=pre,
+                     num_exponents=8, out_bits=32)
+    out = grau_reference_int(np.array([x]), spec)[0]
+    assert out == x >> pre  # floor semantics, sign-correct
+
+
+def test_output_always_clamped(rng):
+    for bits in (2, 4, 8):
+        spec = random_spec(rng, out_bits=bits)
+        x = rng.integers(-(2**30), 2**30, size=(256,))
+        out = grau_reference_int(x, spec)
+        assert out.min() >= -(1 << (bits - 1))
+        assert out.max() <= (1 << (bits - 1)) - 1
+
+
+def test_folded_builder_accuracy_ordering():
+    """Reproduces the paper's qualitative finding: ReLU is near-exact,
+    SiLU/Sigmoid degrade more; APoT >= PoT accuracy."""
+    results = {}
+    for act, s_out in (("relu", 2**-4), ("sigmoid", 2**-8), ("silu", 2**-4)):
+        f = fold(act, s_in=2**-10, s_out=s_out, out_bits=8)
+        for mode in ("pot", "apot"):
+            r = build_grau(f, mac_range=(-30000, 30000), segments=6,
+                           num_exponents=8, mode=mode, bias_mode="lsq")
+            results[(act, mode)] = r.int_rms
+    assert results[("relu", "apot")] < 0.5
+    assert results[("silu", "apot")] <= results[("silu", "pot")] + 1e-9
+    assert all(v < 2.0 for v in results.values()), results
+
+
+def test_bn_folding_changes_target():
+    f_plain = fold("relu", s_in=2**-8, s_out=2**-4, out_bits=8)
+    f_bn = fold("relu", s_in=2**-8, s_out=2**-4, out_bits=8,
+                bn=BNParams(gamma=2.0, beta=1.0, mean=0.5, var=4.0))
+    x = np.array([1000, 2000, 4000])
+    assert not np.allclose(f_plain(x), f_bn(x))
+
+
+def test_multithreshold_matches_folded_relu():
+    f = fold("relu", s_in=2**-6, s_out=2**-4, out_bits=4)
+    spec = fit_thresholds(f, -2000, 2000, 4)
+    xs = np.arange(-2000, 2000, 7, dtype=np.int64)
+    got = np.asarray(mt_apply_int(jnp.asarray(xs, jnp.int32), spec))
+    want = f.quantized(xs)
+    assert np.mean(np.abs(got - want)) < 0.02   # off-by-one at thresholds only
+
+
+def test_multithreshold_rejects_non_monotone():
+    """The paper's Fig. 1: MT cannot realize SiLU (non-monotone near 0)."""
+    f = fold("silu", s_in=2**-4, s_out=2**-6, out_bits=4)
+    with pytest.raises(ValueError, match="monotonically"):
+        fit_thresholds(f, -200, 200, 4)
+
+
+def test_grau_handles_non_monotone_silu():
+    """...while GRAU realizes it with bounded error (Table II claim)."""
+    f = fold("silu", s_in=2**-4, s_out=2**-6, out_bits=4)
+    r = build_grau(f, mac_range=(-100, 100), segments=6, num_exponents=8,
+                   mode="apot", bias_mode="lsq")
+    assert r.int_rms <= 0.5          # well under one 4-bit level on average
+    assert r.int_max_abs <= 3.0
+
+
+def test_surrogate_gradient_flows():
+    f = fold("silu", s_in=2**-10, s_out=2**-4, out_bits=8)
+    r = build_grau(f, mac_range=(-30000, 30000), segments=6, num_exponents=8,
+                   mode="apot")
+    g = jax.grad(lambda x: jnp.sum(grau_surrogate(x, r.spec)))(
+        jnp.linspace(-20000.0, 20000.0, 64))
+    assert np.isfinite(np.asarray(g)).all()
+    assert np.abs(np.asarray(g)).max() > 0   # STE slopes pass gradient
+
+
+def test_runtime_reconfiguration_same_function():
+    """Swapping register files (not code) switches the activation — the
+    paper's runtime-reconfigurability claim."""
+    f1 = build_grau(fold("relu", s_in=2**-10, s_out=2**-4, out_bits=8),
+                    mac_range=(-30000, 30000), segments=6, num_exponents=8,
+                    mode="apot").spec
+    f2 = build_grau(fold("sigmoid", s_in=2**-10, s_out=2**-8, out_bits=8),
+                    mac_range=(-30000, 30000), segments=6, num_exponents=8,
+                    mode="apot").spec
+    apply_fn = jax.jit(grau_apply_int)
+    x = jnp.arange(-1000, 1000, 13, dtype=jnp.int32)
+    out1 = apply_fn(x, f1)
+    out2 = apply_fn(x, f2)   # same compiled code, new registers
+    assert not np.array_equal(np.asarray(out1), np.asarray(out2))

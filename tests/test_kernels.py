@@ -1,0 +1,90 @@
+"""Pallas kernel sweeps vs. the pure-jnp oracles (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.build import build_grau
+from repro.core.folding import fold
+from repro.kernels import ops
+from repro.kernels.ref import grau_ref, matmul_grau_ref
+
+ACT_SPECS = {}
+
+
+def spec_for(act="silu", mode="apot", bits=8, segments=6):
+    key = (act, mode, bits, segments)
+    if key not in ACT_SPECS:
+        s_out = 2**-8 if act == "sigmoid" else 2**-4
+        f = fold(act, s_in=2**-10, s_out=s_out, out_bits=bits)
+        ACT_SPECS[key] = build_grau(
+            f, mac_range=(-30000, 30000), segments=segments,
+            num_exponents=8, mode=mode, bias_mode="lsq").spec
+    return ACT_SPECS[key]
+
+
+@pytest.mark.parametrize("shape", [(8, 128), (256, 512), (300, 700), (1, 130),
+                                   (257, 129), (1024, 64)])
+@pytest.mark.parametrize("mode", ["pot", "apot"])
+def test_grau_kernel_shape_sweep(shape, mode, rng):
+    spec = spec_for(mode=mode)
+    x = jnp.asarray(rng.integers(-70000, 70000, size=shape), jnp.int32)
+    got = ops.grau(x, spec, interpret=True)
+    want = grau_ref(x, spec)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("act,bits", [("relu", 8), ("sigmoid", 8),
+                                      ("silu", 8), ("silu", 4), ("relu", 2)])
+def test_grau_kernel_activation_sweep(act, bits, rng):
+    spec = spec_for(act=act, bits=bits)
+    x = jnp.asarray(rng.integers(-70000, 70000, size=(128, 256)), jnp.int32)
+    got = ops.grau(x, spec, interpret=True)
+    want = grau_ref(x, spec)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_grau_kernel_3d_input(rng):
+    spec = spec_for()
+    x = jnp.asarray(rng.integers(-70000, 70000, size=(4, 33, 257)), jnp.int32)
+    got = ops.grau(x, spec, interpret=True)
+    assert got.shape == (4, 33, 257)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(grau_ref(x, spec)))
+
+
+def test_grau_kernel_block_shape_invariance(rng):
+    """Result must not depend on the BlockSpec tiling."""
+    spec = spec_for()
+    x = jnp.asarray(rng.integers(-70000, 70000, size=(260, 390)), jnp.int32)
+    a = ops.grau(x, spec, block=(256, 512), interpret=True)
+    b = ops.grau(x, spec, block=(64, 128), interpret=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (130, 260, 300),
+                                   (64, 512, 64), (256, 384, 256)])
+def test_matmul_grau_fused(m, k, n, rng):
+    spec = spec_for()
+    x = jnp.asarray(rng.integers(-128, 128, size=(m, k)), jnp.int8)
+    w = jnp.asarray(rng.integers(-128, 128, size=(k, n)), jnp.int8)
+    got = ops.matmul_grau(x, w, spec, tiles=(128, 128, 128), interpret=True)
+    want = matmul_grau_ref(x, w, spec)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_matmul_grau_batched_input(rng):
+    spec = spec_for()
+    x = jnp.asarray(rng.integers(-128, 128, size=(2, 17, 128)), jnp.int8)
+    w = jnp.asarray(rng.integers(-128, 128, size=(128, 96)), jnp.int8)
+    got = ops.matmul_grau(x, w, spec, tiles=(64, 64, 64), interpret=True)
+    want = matmul_grau_ref(x.reshape(-1, 128), w, spec).reshape(2, 17, 96)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_pack_spec_roundtrip(rng):
+    spec = spec_for()
+    _, encp, _, _, _ = ops.pack_spec(spec)
+    enc = np.asarray(spec.enc)
+    for s in range(enc.shape[0]):
+        bits = [(int(encp[s]) >> k) & 1 for k in range(enc.shape[1])]
+        np.testing.assert_array_equal(bits, enc[s])

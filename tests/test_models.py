@@ -1,0 +1,163 @@
+"""Per-arch smoke tests (reduced configs) + decode/train consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.archs import ARCHS, get_config
+from repro.models import lm
+from repro.models.config import GRAUConfig
+
+
+def make_batch(cfg, key, b=2, s=32):
+    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size),
+             "labels": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    if cfg.encoder is not None:
+        batch["encoder_frames"] = 0.1 * jax.random.normal(
+            key, (b, cfg.encoder.num_frames, cfg.d_model))
+    if cfg.vision is not None:
+        batch["patch_embeds"] = 0.1 * jax.random.normal(
+            key, (b, cfg.vision.num_patches, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_smoke_forward(arch):
+    """One forward/loss step on CPU: output shapes + finite values."""
+    cfg = get_config(arch, smoke=True)
+    key = jax.random.PRNGKey(0)
+    params, axes = lm.init_lm(cfg, key, dtype=jnp.float32)
+    batch = make_batch(cfg, key)
+    logits, _, aux = lm.apply_lm(
+        params, cfg, batch["tokens"],
+        encoder_frames=batch.get("encoder_frames"),
+        patch_embeds=batch.get("patch_embeds"),
+        q_chunk=16, kv_chunk=16)
+    n_prefix = cfg.vision.num_patches if cfg.vision else 0
+    assert logits.shape == (2, 32 + n_prefix, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    loss = lm.lm_loss(params, cfg, batch, q_chunk=16, kv_chunk=16)
+    assert np.isfinite(float(loss))
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_smoke_train_step(arch):
+    """Gradients exist and are finite for every param."""
+    cfg = get_config(arch, smoke=True)
+    key = jax.random.PRNGKey(1)
+    params, _ = lm.init_lm(cfg, key, dtype=jnp.float32)
+    batch = make_batch(cfg, key, b=2, s=16)
+    loss, grads = jax.value_and_grad(
+        lambda p: lm.lm_loss(p, cfg, batch, q_chunk=16, kv_chunk=16))(params)
+    assert np.isfinite(float(loss))
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in flat)
+    assert any(float(jnp.max(jnp.abs(g))) > 0 for g in flat)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "mamba2-1.3b",
+                                  "deepseek-v3-671b", "jamba-v0.1-52b",
+                                  "gemma-7b"])
+def test_prefill_then_decode_matches_forward(arch):
+    """Strong correctness: logits from (prefill s-1, decode 1 token) must
+    match the full forward's last position.
+
+    MoE capacity drops are sequence-length dependent (a prefill of s tokens
+    competes for capacity, a decode token competes alone), so MoE archs are
+    compared with ample capacity — the routing itself must still agree."""
+    import dataclasses
+    cfg = get_config(arch, smoke=True)
+    if cfg.moe is not None:
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    key = jax.random.PRNGKey(2)
+    params, _ = lm.init_lm(cfg, key, dtype=jnp.float32)
+    b, s = 2, 17
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+
+    full_logits, _, _ = lm.apply_lm(params, cfg, toks, q_chunk=8, kv_chunk=8)
+
+    caches = lm.init_caches(cfg, b, max_seq=64, dtype=jnp.float32)
+    _, pf_caches, _ = lm.apply_lm(params, cfg, toks[:, :-1], mode="prefill",
+                                  caches=caches, q_chunk=8, kv_chunk=8)
+    dec_logits, _ = lm.decode_step(params, cfg, toks[:, -1:], pf_caches)
+
+    np.testing.assert_allclose(
+        np.asarray(dec_logits[:, 0]), np.asarray(full_logits[:, -1]),
+        rtol=2e-3, atol=2e-3)
+
+
+def test_training_reduces_loss_dense():
+    from repro.train import optim
+    cfg = get_config("llama3.2-3b", smoke=True)
+    key = jax.random.PRNGKey(3)
+    params, _ = lm.init_lm(cfg, key, dtype=jnp.float32)
+    opt = optim.AdamWConfig(peak_lr=5e-3, warmup_steps=2, total_steps=20)
+    state = optim.init_opt_state(params)
+    batch = make_batch(cfg, key, b=4, s=32)
+
+    @jax.jit
+    def step(p, s_):
+        loss, g = jax.value_and_grad(
+            lambda q: lm.lm_loss(q, cfg, batch, q_chunk=16, kv_chunk=16))(p)
+        p2, s2, _ = optim.adamw_update(opt, p, g, s_)
+        return p2, s2, loss
+
+    losses = []
+    for _ in range(10):
+        params, state, loss = step(params, state)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+def test_grau_activation_trains():
+    """QAT through the GRAU surrogate: loss decreases, grads flow."""
+    from repro.train import optim
+    cfg = get_config("llama3.2-3b", smoke=True).replace(grau=GRAUConfig())
+    key = jax.random.PRNGKey(4)
+    params, _ = lm.init_lm(cfg, key, dtype=jnp.float32)
+    act = lm.make_act(cfg)
+    assert act.name.startswith("grau-")
+    opt = optim.AdamWConfig(peak_lr=5e-3, warmup_steps=2, total_steps=20)
+    state = optim.init_opt_state(params)
+    batch = make_batch(cfg, key, b=4, s=32)
+
+    @jax.jit
+    def step(p, s_):
+        loss, g = jax.value_and_grad(
+            lambda q: lm.lm_loss(q, cfg, batch, act=act,
+                                 q_chunk=16, kv_chunk=16))(p)
+        p2, s2, _ = optim.adamw_update(opt, p, g, s_)
+        return p2, s2, loss
+
+    losses = []
+    for _ in range(8):
+        params, state, loss = step(params, state)
+        losses.append(float(loss))
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0] - 0.3, losses
+
+
+def test_num_layers_match_assignment():
+    expect = {"jamba-v0.1-52b": 32, "gemma-7b": 28, "llama3.2-3b": 28,
+              "glm4-9b": 40, "qwen1.5-32b": 64, "mamba2-1.3b": 48,
+              "whisper-medium": 24, "llava-next-mistral-7b": 32,
+              "llama4-maverick-400b-a17b": 48, "deepseek-v3-671b": 61}
+    for arch, n in expect.items():
+        assert get_config(arch).num_layers == n, arch
+
+
+def test_param_counts_in_expected_range():
+    """Full-config param counts should land near the published sizes."""
+    import math
+    from repro.launch.steps import abstract_params
+    expect_b = {"llama3.2-3b": (2.8, 3.9), "gemma-7b": (7.5, 9.5),
+                "glm4-9b": (8.0, 10.5), "qwen1.5-32b": (29, 36),
+                "mamba2-1.3b": (1.1, 1.5), "whisper-medium": (0.65, 0.95),
+                "llava-next-mistral-7b": (6.5, 7.8),
+                "jamba-v0.1-52b": (48, 56),
+                "llama4-maverick-400b-a17b": (360, 440),
+                "deepseek-v3-671b": (600, 720)}
+    for arch, (lo, hi) in expect_b.items():
+        shapes, _ = abstract_params(get_config(arch))
+        n = sum(math.prod(s.shape) for s in jax.tree.leaves(shapes)) / 1e9
+        assert lo <= n <= hi, f"{arch}: {n:.2f}B not in [{lo},{hi}]"

@@ -1,0 +1,68 @@
+"""Algorithm 1 (greedy integer-aware PWLF) unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.folding import ACTIVATIONS
+from repro.pwlf.fit import FitReport, fit_pwlf, fit_segments, greedy_breakpoints
+
+
+def test_recovers_exact_piecewise_linear():
+    # target IS piecewise linear with integer breakpoints -> near-exact fit
+    bps = np.array([-50.0, 10.0, 80.0])
+    slopes = np.array([0.0, 0.5, -0.25, 1.0])
+    inter = np.array([3.0, 28.0, 35.5, -64.5])   # continuous at the kinks
+
+    def f(x):
+        seg = np.searchsorted(bps, x, side="left")
+        return slopes[seg] * x + inter[seg]
+
+    pwl = fit_pwlf(f, -200, 200, 4, num_samples=2001)
+    rep = FitReport.of(f, pwl, -200, 200)
+    assert rep.rms_err < 0.35
+    for b in bps:
+        assert np.min(np.abs(pwl.breakpoints - b)) <= 2.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seg=st.integers(2, 8),
+    act=st.sampled_from(["relu", "sigmoid", "silu", "gelu", "tanh"]),
+    scale=st.floats(0.01, 0.2),
+)
+def test_breakpoint_invariants(seg, act, scale):
+    f = lambda x: ACTIVATIONS[act](x * scale)
+    x = np.linspace(-500, 500, 1000)
+    y = f(x)
+    bps = greedy_breakpoints(x, y, seg, min_gap=2)
+    # invariants the hardware requires
+    assert len(bps) <= seg - 1
+    assert np.all(bps == np.round(bps))               # integer breakpoints
+    assert np.all(np.diff(bps) >= 2)                  # min gap
+    assert np.all((bps > x[0]) & (bps < x[-1]))       # strictly interior
+
+
+def test_more_segments_never_much_worse():
+    f = ACTIVATIONS["silu"]
+    errs = []
+    for seg in (2, 4, 6, 8):
+        pwl = fit_pwlf(lambda x: f(0.05 * x), -500, 500, seg)
+        errs.append(FitReport.of(lambda x: f(0.05 * x), pwl, -500, 500).rms_err)
+    assert errs[-1] <= errs[0] + 1e-9
+    assert errs[2] <= errs[1] + 1e-6
+
+
+def test_fit_segments_least_squares_is_per_segment_optimal():
+    rng = np.random.default_rng(1)
+    x = np.linspace(-100, 100, 400)
+    y = 0.3 * x + rng.normal(0, 0.1, x.shape)
+    pwl = fit_segments(x, y, np.array([0.0]))
+    assert pwl.slopes == pytest.approx([0.3, 0.3], abs=0.02)
+
+
+def test_min_improvement_stops_early():
+    # a perfectly linear target never needs interior breakpoints
+    x = np.linspace(-100, 100, 500)
+    y = 2.0 * x + 1.0
+    bps = greedy_breakpoints(x, y, 8, eps=1e-3)
+    assert len(bps) == 0
