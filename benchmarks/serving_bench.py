@@ -1,0 +1,147 @@
+"""Serving throughput / latency benchmark under a synthetic arrival trace.
+
+Drives the continuous-batching engine with Poisson request arrivals (requests
+are submitted when the engine's decode tick passes their arrival tick) and
+reports tokens/sec and time-to-first-token, for greedy and sampled decoding,
+with float activations and with GRAU-quantized (QAT surrogate) activations —
+the paper's serving story is that the GRAU unit makes the quantized column
+cheap in hardware, and this bench gives the apples-to-apples software oracle.
+
+    PYTHONPATH=src python benchmarks/serving_bench.py --out serving_report.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.archs import get_config
+from repro.models import lm
+from repro.models.config import GRAUConfig
+from repro.serve import kv_cache as kvc
+from repro.serve.engine import EngineConfig, Request, ServeEngine
+from repro.serve.sampling import SamplingParams
+
+
+def synth_trace(n: int, mean_interarrival_ticks: float, vocab: int,
+                max_new: int, seed: int):
+    """Poisson arrivals: (arrival_tick, prompt, max_new) per request."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(mean_interarrival_ticks, size=n)
+    arrivals = np.floor(np.cumsum(gaps)).astype(int)
+    return [(int(a),
+             rng.integers(2, vocab, size=int(rng.integers(4, 24))),
+             max_new)
+            for a in arrivals]
+
+
+def run_trace(engine: ServeEngine, trace, sampling: SamplingParams,
+              max_ticks: int = 100000):
+    """Submit requests as their arrival tick passes; drain to completion."""
+    pending = [(a, Request(rid=i, prompt=p, max_new_tokens=m,
+                           sampling=sampling))
+               for i, (a, p, m) in enumerate(trace)]
+    n_finished_before = len(engine.scheduler.finished)   # exclude warmup
+    t0 = time.perf_counter()
+    ticks = 0
+    done = []
+    while (pending or engine.scheduler.waiting
+           or any(r is not None for r in engine.slot_req)):
+        while pending and pending[0][0] <= ticks:
+            engine.submit(pending.pop(0)[1])
+        engine.step()
+        done.extend(engine.poll())
+        ticks += 1
+        if ticks >= max_ticks:
+            raise RuntimeError("trace did not drain")
+    wall = time.perf_counter() - t0
+    gen_tokens = sum(len(r.out_tokens or []) for r in done)
+    ttfts = [rs.ttft
+             for rs in list(engine.scheduler.finished)[n_finished_before:]
+             if rs.ttft is not None]
+    return {
+        "wall_s": wall,
+        "generated_tokens": gen_tokens,
+        "tokens_per_s": gen_tokens / wall if wall > 0 else 0.0,
+        "ttft_mean_s": float(np.mean(ttfts)),
+        "ttft_p50_s": float(np.percentile(ttfts, 50)),
+        "ttft_p90_s": float(np.percentile(ttfts, 90)),
+        "ticks": ticks,
+        "compiles": engine.compile_count(),
+        "backend": "paged" if engine.paged else "dense",
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--interarrival", type=float, default=2.0,
+                    help="mean request inter-arrival time in decode ticks")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None, help="write the JSON report here")
+    args = ap.parse_args()
+
+    base_cfg = get_config(args.arch, smoke=True)
+    report = {
+        "arch": base_cfg.name,
+        "slots": args.slots,
+        "requests": args.requests,
+        "mean_interarrival_ticks": args.interarrival,
+        "runs": {},
+    }
+    trace = synth_trace(args.requests, args.interarrival,
+                        base_cfg.vocab_size, args.max_new, args.seed)
+    samplers = {
+        "greedy": SamplingParams(),
+        "sampled": SamplingParams(temperature=0.8, top_k=50, top_p=0.95),
+    }
+
+    for act_name, cfg in (("float", base_cfg),
+                          ("grau", base_cfg.replace(grau=GRAUConfig()))):
+        params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0),
+                               dtype=jax.numpy.float32)
+        for samp_name, sampling in samplers.items():
+            engine = ServeEngine(
+                cfg, params,
+                EngineConfig(slots=args.slots, max_seq=args.max_seq,
+                             seed=args.seed))
+            # warmup: trace the decode step and every prefill bucket the
+            # trace can reach, so the timed run measures serving, not XLA
+            max_ctx = max(len(p) for _, p, _ in trace) - 1
+            buckets = [b for b in engine.buckets
+                       if b <= kvc.bucket_for(max_ctx, engine.buckets)]
+            warm = [Request(rid=10_000 + i, prompt=np.arange(2, 2 + b + 1),
+                            max_new_tokens=2, sampling=sampling)
+                    for i, b in enumerate(buckets)]
+            engine.run(warm)
+            warm_compiles = engine.compile_count()
+
+            stats = run_trace(engine, trace, sampling)
+            stats["recompiles_after_warmup"] = (engine.compile_count()
+                                                - warm_compiles)
+            report["runs"][f"{act_name}/{samp_name}"] = stats
+            print(f"{act_name}/{samp_name}: "
+                  f"{stats['tokens_per_s']:.1f} tok/s, "
+                  f"TTFT p50 {stats['ttft_p50_s'] * 1e3:.1f} ms, "
+                  f"p90 {stats['ttft_p90_s'] * 1e3:.1f} ms "
+                  f"[{stats['backend']}, "
+                  f"{stats['recompiles_after_warmup']} recompiles]")
+
+    payload = json.dumps(report, indent=2)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(payload)
+        print(f"wrote {args.out}")
+    else:
+        print(payload)
+
+
+if __name__ == "__main__":
+    main()

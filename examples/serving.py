@@ -1,8 +1,7 @@
-"""Batched serving demo: continuous batching over a slot pool, prefix
-admission, per-tick decode — the serving analogue of the decode dry-run
-cells, at host scale.
+"""Continuous-batching serving demo: paged KV cache, bucketed prefill,
+per-request sampling params, and the async-style submit()/poll() API.
 
-    PYTHONPATH=src python examples/serving.py [--arch mamba2-1.3b]
+    PYTHONPATH=src python examples/serving.py [--arch llama3.2-3b]
 """
 import argparse
 
@@ -12,6 +11,7 @@ import numpy as np
 from repro.configs.archs import get_config
 from repro.models import lm
 from repro.serve.engine import EngineConfig, Request, ServeEngine
+from repro.serve.sampling import SamplingParams
 
 
 def main():
@@ -23,21 +23,38 @@ def main():
 
     cfg = get_config(args.arch, smoke=True)
     params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0), dtype=jax.numpy.float32)
-    engine = ServeEngine(cfg, params, EngineConfig(slots=args.slots,
-                                                   max_seq=256))
+    engine = ServeEngine(cfg, params,
+                         EngineConfig(slots=args.slots, max_seq=256))
+    print(f"engine backend: {'paged KV' if engine.paged else 'dense KV'}, "
+          f"prefill buckets: {engine.buckets}")
+
+    # heterogeneous sampling in one batch: greedy next to top-p next to top-k
     rng = np.random.default_rng(0)
+    flavors = [SamplingParams(),                              # greedy
+               SamplingParams(temperature=0.8, top_p=0.9),    # nucleus
+               SamplingParams(temperature=1.0, top_k=40)]     # top-k
     reqs = [Request(rid=i,
                     prompt=rng.integers(2, cfg.vocab_size,
                                         size=int(rng.integers(4, 16))),
-                    max_new_tokens=12)
+                    max_new_tokens=12, sampling=flavors[i % len(flavors)])
             for i in range(args.requests)]
-    engine.run(reqs)
+
+    # async-style driving: submit everything, tick, poll completions
     for r in reqs:
-        print(f"req {r.rid:2d}: {len(r.prompt):2d} prompt toks -> "
-              f"{(r.out_tokens or [])}")
-    done = sum(1 for r in reqs if r.out_tokens)
-    print(f"{done}/{len(reqs)} requests served with {args.slots} slots "
-          f"(continuous batching: slots recycled as requests finish)")
+        engine.submit(r)
+    done = []
+    while len(done) < len(reqs):
+        engine.step()
+        for r in engine.poll():
+            done.append(r)
+            print(f"req {r.rid:2d} done ({len(r.prompt):2d} prompt toks, "
+                  f"{r.sampling.temperature=:.1f}): {r.out_tokens}")
+
+    m = engine.metrics()
+    print(f"{m['retired']}/{len(reqs)} served with {args.slots} slots | "
+          f"ticks={m['ticks']} decode_tokens={m['decode_tokens']} "
+          f"compiles={m['compiles']} (static after warmup) | "
+          f"max_queue_depth={m['max_queue_depth']}")
 
 
 if __name__ == "__main__":

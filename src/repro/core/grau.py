@@ -79,12 +79,26 @@ def grau_realized_pwl(spec: GRAUSpec):
     return spec.breakpoints, slopes, spec.bias.astype(jnp.float32)
 
 
-def grau_apply_float(x: jax.Array, spec: GRAUSpec) -> jax.Array:
-    """Float evaluation of the realized PWL (pre-rounding): surrogate forward."""
+def _pwl_eval(x: jax.Array, spec: GRAUSpec):
+    """Shared forward/backward evaluation: one segment lookup, one PWL pass.
+
+    Returns (y_clamped, dydx) where dydx is the straight-through gradient —
+    the realized segment slope, zeroed where the output saturates. (Strict
+    comparison against the *unclamped* value matches the clamp mask exactly:
+    clip(y) > qmin iff y > qmin.)
+    """
     bps, slopes, biases = grau_realized_pwl(spec)
     seg = jnp.sum(x[..., None] > bps.astype(x.dtype), axis=-1)
     y = slopes[seg] * x + biases[seg]
-    return jnp.clip(y, float(spec.qmin), float(spec.qmax))
+    in_range = (y > float(spec.qmin)) & (y < float(spec.qmax))
+    dydx = slopes[seg] * in_range.astype(x.dtype)
+    return jnp.clip(y, float(spec.qmin), float(spec.qmax)), dydx
+
+
+def grau_apply_float(x: jax.Array, spec: GRAUSpec) -> jax.Array:
+    """Float evaluation of the realized PWL (pre-rounding): surrogate forward."""
+    y, _ = _pwl_eval(x, spec)
+    return y
 
 
 @jax.custom_vjp
@@ -94,17 +108,12 @@ def grau_surrogate(x: jax.Array, spec: GRAUSpec) -> jax.Array:
 
 
 def _sur_fwd(x, spec):
-    return grau_surrogate(x, spec), (x, spec)
+    y, dydx = _pwl_eval(x, spec)
+    return jnp.round(y), dydx
 
 
-def _sur_bwd(res, g):
-    x, spec = res
-    bps, slopes, _ = grau_realized_pwl(spec)
-    seg = jnp.sum(x[..., None] > bps.astype(x.dtype), axis=-1)
-    y = grau_apply_float(x, spec)
-    in_range = (y > float(spec.qmin)) & (y < float(spec.qmax))
-    dx = g * slopes[seg] * in_range.astype(g.dtype)
-    return (dx, None)
+def _sur_bwd(dydx, g):
+    return (g * dydx.astype(g.dtype), None)
 
 
 grau_surrogate.defvjp(_sur_fwd, _sur_bwd)

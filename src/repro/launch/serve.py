@@ -1,12 +1,15 @@
-"""Serving launcher: batched continuous decoding on the host (smoke config)
-or the production mesh (full config, same step as the decode dry-run cells).
+"""Serving launcher: continuous-batching decode over a slot pool, with the
+paged KV cache on pageable archs and scheduler/engine metrics reporting.
 
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --requests 6
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b \
+      --temperature 0.8 --top-p 0.9 --policy prefill
 """
 from __future__ import annotations
 
 import argparse
+import json
 
 import jax
 import numpy as np
@@ -14,6 +17,7 @@ import numpy as np
 from repro.configs.archs import get_config
 from repro.models import lm
 from repro.serve.engine import EngineConfig, Request, ServeEngine
+from repro.serve.sampling import SamplingParams
 
 
 def main() -> None:
@@ -22,22 +26,42 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-seq", type=int, default=256)
+    ap.add_argument("--backend", choices=["auto", "paged", "dense"],
+                    default="auto")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--policy", choices=["fcfs", "prefill"], default="fcfs")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
     params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0), dtype=jax.numpy.float32)
-    engine = ServeEngine(cfg, params,
-                         EngineConfig(slots=args.slots, max_seq=256))
+    paged = None if args.backend == "auto" else (args.backend == "paged")
+    engine = ServeEngine(
+        cfg, params,
+        EngineConfig(slots=args.slots, max_seq=args.max_seq, paged=paged,
+                     page_size=args.page_size, policy=args.policy,
+                     seed=args.seed))
 
-    rng = np.random.default_rng(0)
+    sampling = SamplingParams(temperature=args.temperature,
+                              top_k=args.top_k, top_p=args.top_p)
+    rng = np.random.default_rng(args.seed)
+    enc = (np.zeros((cfg.encoder.num_frames, cfg.d_model), np.float32)
+           if cfg.encoder is not None else None)
     reqs = [Request(rid=i,
-                    prompt=rng.integers(2, cfg.vocab_size, size=rng.integers(4, 12)),
-                    max_new_tokens=args.max_new)
+                    prompt=rng.integers(2, cfg.vocab_size,
+                                        size=int(rng.integers(4, 12))),
+                    max_new_tokens=args.max_new, sampling=sampling,
+                    encoder_frames=enc)
             for i in range(args.requests)]
-    out = engine.run(reqs)
-    for r in out:
+    done = engine.run(reqs)
+    for r in done:
         print(f"req {r.rid}: prompt={len(r.prompt)} toks -> "
               f"generated {len(r.out_tokens or [])}: {(r.out_tokens or [])[:8]}...")
+    print(json.dumps(engine.metrics(), indent=2, default=str))
 
 
 if __name__ == "__main__":

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
 from repro.nn import blocks, shard_ctx
-from repro.nn.attention import CrossKV, KVCache, MLACache
+from repro.nn.attention import CrossKV, KVCache, MLACache, PagedState
 from repro.nn.blocks import LayerSpec
 from repro.nn.common import (ParamBuilder, act_fn, make_activation, stack_axes,
                              stack_params)
@@ -141,7 +141,7 @@ REMAT_POLICIES = {
 
 
 def _run_group(params, caches, x, period, cfg, *, positions, act, encoder_out,
-               mode, q_chunk, kv_chunk, remat=None):
+               mode, q_chunk, kv_chunk, remat=None, paged=None):
     """Scan one (period, repeats) group. caches: tuple per period-layer or None."""
     use_caches = caches is not None
 
@@ -157,7 +157,7 @@ def _run_group(params, caches, x, period, cfg, *, positions, act, encoder_out,
             h, c_new, a = blocks.apply_layer(
                 layer_params[f"l{li}"], h, spec, cfg, positions=positions,
                 act=act, cache=c, encoder_out=encoder_out, mode=mode,
-                q_chunk=q_chunk, kv_chunk=kv_chunk,
+                q_chunk=q_chunk, kv_chunk=kv_chunk, paged=paged,
             )
             new_caches.append(c_new)
             aux = aux + a
@@ -189,6 +189,7 @@ def apply_lm(
     q_chunk: int = 1024,
     kv_chunk: int = 1024,
     remat: Optional[str] = None,          # None | "dots" | "full"
+    paged: Optional[PagedState] = None,   # paged-KV decode (serve/kv_cache.py)
 ) -> Tuple[jax.Array, Any, jax.Array]:
     """Returns (logits, new_caches, aux_loss)."""
     act = act or make_act(cfg)
@@ -216,7 +217,7 @@ def apply_lm(
         x, aux, ys = _run_group(
             params[f"group{gi}"], gcaches, x, period, cfg,
             positions=positions, act=act, encoder_out=encoder_out, mode=mode,
-            q_chunk=q_chunk, kv_chunk=kv_chunk, remat=remat)
+            q_chunk=q_chunk, kv_chunk=kv_chunk, remat=remat, paged=paged)
         aux_total = aux_total + aux
         new_caches.append(ys)
 
@@ -274,12 +275,58 @@ def run_encoder(params, cfg: ModelConfig, frames: jax.Array, *, act=None,
 
 
 def decode_step(params, cfg: ModelConfig, tokens: jax.Array, caches, *,
-                act=None, encoder_out: Optional[jax.Array] = None):
+                act=None, encoder_out: Optional[jax.Array] = None,
+                paged: Optional[PagedState] = None):
     """One serving step: tokens (b, 1) + caches -> (logits, new caches).
 
     For enc-dec models pass precomputed `encoder_out` (computed once at
-    request admission, not per token)."""
+    request admission, not per token). With `paged`, caches are PagedKVCache
+    pools and per-slot positions come from `paged.length`."""
     logits, new_caches, _ = apply_lm(
         params, cfg, tokens, mode="decode", caches=caches, act=act,
-        encoder_out=encoder_out, positions=None)
+        encoder_out=encoder_out, positions=None, paged=paged)
     return logits, new_caches
+
+
+def set_cache_lengths(caches, lengths: jax.Array):
+    """Override the valid-prefix `length` of every seq-indexed cache leaf.
+
+    Used after bucket-padded prefill: the prefill path stamps length = padded
+    seq, but only `lengths` (b,) positions per sequence hold real tokens."""
+    seq_caches = (KVCache, MLACache)
+    leaf_types = (KVCache, MLACache, SSMState, CrossKV)
+
+    def fix(c):
+        if isinstance(c, seq_caches):
+            return c._replace(length=jnp.broadcast_to(
+                lengths.astype(jnp.int32), c.length.shape))
+        return c
+
+    return jax.tree.map(fix, caches,
+                        is_leaf=lambda c: isinstance(c, leaf_types))
+
+
+def prefill_step(params, cfg: ModelConfig, tokens: jax.Array, caches, *,
+                 true_length: Optional[jax.Array] = None, act=None,
+                 encoder_frames: Optional[jax.Array] = None,
+                 q_chunk: int = 1024, kv_chunk: int = 1024):
+    """Jitted prompt ingestion: one call per admitted prompt batch.
+
+    tokens: (b, s) right-padded to a bucket length so serving never traces a
+    new shape per prompt; `true_length` (b,) marks the real prefix (padding
+    beyond it is causally downstream of every real token, and the cache
+    lengths are overridden so decode masks it out). Returns the logits at the
+    last real position (b, vocab) and the filled caches.
+
+    NOTE: bucket padding is only sound for attention-style caches; recurrent
+    (SSM) state absorbs padded tokens, so SSM-bearing archs must be prefilled
+    at exact length (the engine enforces this).
+    """
+    logits, new_caches, _ = apply_lm(
+        params, cfg, tokens, mode="prefill", caches=caches, act=act,
+        encoder_frames=encoder_frames, q_chunk=q_chunk, kv_chunk=kv_chunk)
+    if true_length is None:
+        return logits[:, -1], new_caches
+    idx = jnp.clip(true_length - 1, 0, tokens.shape[1] - 1)
+    last = jnp.take_along_axis(logits, idx[:, None, None], axis=1)[:, 0]
+    return last, set_cache_lengths(new_caches, true_length)

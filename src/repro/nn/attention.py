@@ -177,6 +177,57 @@ def update_cache(cache: KVCache, k_new: jax.Array, v_new: jax.Array) -> KVCache:
 
 
 # ---------------------------------------------------------------------------
+# Paged KV cache (block-pool storage with slot -> block-table indirection)
+# ---------------------------------------------------------------------------
+
+class PagedKVCache(NamedTuple):
+    """Block-pool KV storage for continuous-batching decode.
+
+    Instead of a dense (slots, max_seq, ...) buffer per layer, K/V live in a
+    shared pool of fixed-size blocks; a slot owns only the blocks its sequence
+    actually occupies (serve/kv_cache.py manages the allocator). Block 0 is
+    reserved as the null/trash block: unmapped block-table entries point at it,
+    so writes from idle slots or padded prefill blocks land there harmlessly.
+    """
+    k: jax.Array          # (num_blocks, block_size, kv_heads, head_dim)
+    v: jax.Array
+
+
+class PagedState(NamedTuple):
+    """Per-step slot metadata shared by every layer (not part of the pools)."""
+    block_table: jax.Array   # (slots, blocks_per_slot) int32; 0 = unmapped
+    length: jax.Array        # (slots,) int32 — valid prefix length per slot
+
+
+def paged_update(cache: PagedKVCache, k_new: jax.Array, v_new: jax.Array,
+                 st: PagedState) -> PagedKVCache:
+    """Write one position per slot at logical index `length` via the table."""
+    block_size = cache.k.shape[1]
+    blk = jnp.take_along_axis(
+        st.block_table, (st.length // block_size)[:, None], axis=1)[:, 0]
+    off = st.length % block_size
+    return PagedKVCache(
+        k=cache.k.at[blk, off].set(k_new[:, 0].astype(cache.k.dtype)),
+        v=cache.v.at[blk, off].set(v_new[:, 0].astype(cache.v.dtype)),
+    )
+
+
+def paged_view(cache: PagedKVCache, st: PagedState) -> Tuple[jax.Array, jax.Array]:
+    """Gather each slot's blocks into a dense (slots, logical_seq, ...) view.
+
+    The view is transient (one decode step); persistent storage stays paged.
+    Garbage read through null-block entries is masked by `length` downstream.
+    """
+    slots, blocks_per_slot = st.block_table.shape
+    block_size = cache.k.shape[1]
+    kvh, hd = cache.k.shape[2], cache.k.shape[3]
+    seq = blocks_per_slot * block_size
+    k = cache.k[st.block_table].reshape(slots, seq, kvh, hd)
+    v = cache.v[st.block_table].reshape(slots, seq, kvh, hd)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
 # MLA (DeepSeek-V3 Multi-head Latent Attention)
 # ---------------------------------------------------------------------------
 

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.nn import attention as attn_lib
 from repro.nn import shard_ctx
-from repro.nn.attention import CrossKV, KVCache, MLACache
+from repro.nn.attention import CrossKV, KVCache, MLACache, PagedKVCache, PagedState
 from repro.nn.common import ParamBuilder, layernorm, rmsnorm
 from repro.nn.mamba2 import SSMConfig, SSMState, apply_mamba2, decode_mamba2, init_mamba2
 from repro.nn.moe import MoEConfig, apply_moe, init_moe
@@ -125,10 +125,21 @@ def apply_attention(
 
 
 def decode_attention_block(
-    params, x, cfg, *, cache: KVCache,
-) -> Tuple[jax.Array, KVCache]:
-    """One-token decode. x: (b, 1, d)."""
+    params, x, cfg, *, cache, paged: Optional[PagedState] = None,
+) -> Tuple[jax.Array, Any]:
+    """One-token decode. x: (b, 1, d).
+
+    With `paged`, `cache` is a PagedKVCache pool: the new position is written
+    through the block table and attention runs over a gathered dense view."""
     q, k, v = _qkv(params, x, cfg)
+    if paged is not None:
+        pos = paged.length[:, None]                              # (b,1)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+        cache = attn_lib.paged_update(cache, k, v, paged)
+        kd, vd = attn_lib.paged_view(cache, paged)
+        o = attn_lib.decode_attention(q, KVCache(kd, vd, paged.length + 1))
+        return jnp.einsum("bshk,hkd->bsd", o, params["wo"]), cache
     pos = cache.length[:, None]                                  # (b,1)
     q = apply_rope(q, pos, cfg.rope_theta)
     k = apply_rope(k, pos, cfg.rope_theta)
@@ -281,6 +292,7 @@ def apply_layer(
     cache: Any = None, encoder_out: Optional[jax.Array] = None,
     mode: str = "train",        # "train" | "prefill" | "decode"
     q_chunk: int = 1024, kv_chunk: int = 1024,
+    paged: Optional[PagedState] = None,
 ) -> Tuple[jax.Array, Any, jax.Array]:
     """Returns (x, new_cache, aux_loss).
 
@@ -298,7 +310,8 @@ def apply_layer(
             if cfg.mla is not None:
                 a, cache = decode_mla(p, h, cfg, cache=cache)
             else:
-                a, cache = decode_attention_block(p, h, cfg, cache=cache)
+                a, cache = decode_attention_block(p, h, cfg, cache=cache,
+                                                  paged=paged)
         else:
             want_cache = cache if mode == "prefill" else None
             if cfg.mla is not None:
@@ -346,7 +359,13 @@ def apply_layer(
     if spec.mlp != "none":
         h = apply_norm(params, "ln2", x, cfg.norm, cfg.norm_eps)
         if spec.mlp == "moe":
-            m, aux = apply_moe(params["moe"], h, cfg.moe, act)
+            # Inference never drops tokens: capacity-factor drops are a
+            # training-time load-balancing discipline, and in decode they
+            # couple co-batched slots (one slot's routing could evict
+            # another's token). Full capacity keeps serving batch-invariant
+            # and prefill/decode consistent.
+            cap = None if mode == "train" else h.shape[0] * h.shape[1]
+            m, aux = apply_moe(params["moe"], h, cfg.moe, act, capacity=cap)
         else:
             m = apply_mlp(params["mlp"], h, act, cfg.gated_mlp)
         x = x + m

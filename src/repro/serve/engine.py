@@ -1,15 +1,36 @@
-"""Batched serving engine: continuous-batching decode over a fixed-size slot
-pool with prefill admission — the serving analogue of the training loop.
+"""Continuous-batching serving engine: paged KV cache, bucketed jitted
+prefill, pluggable admission scheduling, and static-shape sampling.
 
-Requests enter a queue; free slots are prefilled (one jit'd prefill per
-admission batch) and then participate in the global decode step. Slots whose
-sequence hits EOS / max_tokens are retired and refilled. All jit shapes are
-static (slot count, max_seq), so serving never recompiles.
+Request lifecycle: `submit()` enqueues; each `step()` (one decode tick) the
+scheduler admits waiting requests into free slots — one jitted `prefill_step`
+call per admission, padded to a small set of bucketed lengths — then a single
+fused decode+sample jit advances every live slot one token. Slots whose
+sequence hits EOS / max_tokens are retired, their blocks are returned to the
+pool, and the finished request is delivered via `poll()` (or collected in
+completion order by the synchronous `run()`).
+
+Static-shape invariants (serving never recompiles after warmup):
+  * the decode+sample step always sees (slots, 1) tokens, the same cache
+    tree, (slots,)-shaped sampler params, and a fresh PRNG key per tick;
+  * prefill traces once per bucket length (len(buckets) variants, bounded);
+  * per-request sampling heterogeneity lives in array *values*, never shapes.
+`compile_count()` reports distinct jit signatures so tests can assert the
+invariant directly.
+
+Cache backends:
+  * paged (default for plain GQA/MHA decoders): block-pool storage with
+    slot -> block-table indirection; long-context slots pay for the blocks
+    they occupy, and pool admission control replaces slot * max_seq memory.
+  * dense (SSM / MLA / enc-dec archs): the classic (slots, max_seq) buffers;
+    prefill inserts one slot's rows via lax.dynamic_update_slice. SSM state
+    is recurrent, so SSM-bearing archs prefill at exact prompt length
+    (correct, but one trace per distinct length) instead of buckets.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+import time
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -17,97 +38,370 @@ import numpy as np
 
 from repro.models import lm
 from repro.models.config import ModelConfig
+from repro.nn.attention import CrossKV, KVCache, MLACache, PagedState
+from repro.nn.mamba2 import SSMState
+from repro.serve import kv_cache as kvc
+from repro.serve import sampling as samp_lib
+from repro.serve.sampling import SamplingParams
+from repro.serve.scheduler import RequestState, Scheduler
 
 
 @dataclasses.dataclass
 class Request:
+    """User-facing request record. `out_tokens` is filled in as the engine
+    generates (it aliases the live RequestState token list)."""
     rid: int
-    prompt: np.ndarray            # (len,) int32
+    prompt: np.ndarray            # (len,) int
     max_new_tokens: int = 32
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    encoder_frames: Optional[np.ndarray] = None   # (frames, d_model), enc-dec
     out_tokens: Optional[List[int]] = None
 
 
 @dataclasses.dataclass
 class EngineConfig:
     slots: int = 8                # decode batch size (static)
-    max_seq: int = 512
+    max_seq: int = 512            # per-slot prompt+generation capacity
     eos_id: int = 1
+    paged: Optional[bool] = None  # None = auto (paged when arch supports it)
+    page_size: int = 16           # tokens per KV block
+    num_blocks: Optional[int] = None   # pool size; None = no oversubscription
+    prefill_buckets: Optional[Tuple[int, ...]] = None
+    policy: str = "fcfs"          # "fcfs" | "prefill" (see serve/scheduler.py)
+    max_prefills_per_tick: Optional[int] = None
+    seed: int = 0
+
+
+class _CountingJit:
+    """jax.jit wrapper exposing its compile count (distinct traced sigs).
+
+    Counting reads the jit cache size on demand — the decode hot loop pays
+    zero bookkeeping per call. Falls back to hashing input shapes per call
+    only on jax builds without `_cache_size`.
+    """
+
+    def __init__(self, fn, name: str, donate_argnums=()):
+        self._jit = jax.jit(fn, donate_argnums=donate_argnums)
+        self.name = name
+        self._has_cache_size = hasattr(self._jit, "_cache_size")
+        self._seen = set() if not self._has_cache_size else None
+
+    def __call__(self, *args):
+        if not self._has_cache_size:
+            leaves, treedef = jax.tree.flatten(args)
+            self._seen.add((treedef, tuple(
+                (getattr(x, "shape", ()),
+                 str(getattr(x, "dtype", type(x).__name__)))
+                for x in leaves)))
+        return self._jit(*args)
+
+    @property
+    def compiles(self) -> int:
+        if self._has_cache_size:
+            return int(self._jit._cache_size())
+        return len(self._seen)
 
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
                  dtype=jnp.float32):
         self.cfg, self.params, self.ecfg = cfg, params, ecfg
-        self.caches = lm.init_caches(cfg, ecfg.slots, ecfg.max_seq, dtype=dtype)
-        self.slot_req: List[Optional[Request]] = [None] * ecfg.slots
-        self.remaining = np.zeros(ecfg.slots, np.int32)
+        self.dtype = dtype
+        self._act = lm.make_act(cfg)
+        self._has_ssm = any(spec.kind == "mamba"
+                            for period, _ in cfg.groups for spec in period)
+        self.bucketed = not self._has_ssm
+
+        paged_ok = kvc.paged_supported(cfg)
+        self.paged = paged_ok if ecfg.paged is None else bool(ecfg.paged)
+        if self.paged and not paged_ok:
+            raise ValueError(f"{cfg.name}: paged KV cache unsupported "
+                             "(SSM/MLA/enc-dec arch); use paged=False")
+
+        if self.paged:
+            self.blocks_per_slot = kvc.blocks_for(ecfg.max_seq, ecfg.page_size)
+            num_blocks = (ecfg.num_blocks if ecfg.num_blocks is not None else
+                          kvc.pool_blocks(ecfg.slots, ecfg.max_seq,
+                                          ecfg.page_size))
+            self.allocator = kvc.BlockAllocator(num_blocks)
+            self.caches = kvc.init_paged_caches(cfg, num_blocks,
+                                                ecfg.page_size, dtype=dtype)
+            self.block_table = np.zeros(
+                (ecfg.slots, self.blocks_per_slot), np.int32)
+        else:
+            self.caches = lm.init_caches(cfg, ecfg.slots, ecfg.max_seq,
+                                         dtype=dtype)
+
+        if ecfg.prefill_buckets is not None:
+            self.buckets = tuple(sorted(ecfg.prefill_buckets))
+        else:
+            self.buckets = kvc.default_buckets(
+                ecfg.max_seq, multiple=ecfg.page_size if self.paged else 1)
+        if self.bucketed:
+            # any admissible context (<= max_seq - 1 tokens) must fit a
+            # bucket, or _admit would fail after resources were committed
+            if max(self.buckets) < ecfg.max_seq - 1:
+                raise ValueError(
+                    f"largest prefill bucket {max(self.buckets)} does not "
+                    f"cover max_seq - 1 = {ecfg.max_seq - 1}")
+            if self.paged and any(b % ecfg.page_size for b in self.buckets):
+                raise ValueError("paged prefill buckets must be multiples of "
+                                 f"page_size={ecfg.page_size}: {self.buckets}")
+
+        # host-side slot state
+        self.slot_req: List[Optional[RequestState]] = [None] * ecfg.slots
+        self.lengths = np.zeros(ecfg.slots, np.int32)
         self.last_tok = np.zeros((ecfg.slots, 1), np.int32)
+        self.remaining = np.zeros(ecfg.slots, np.int32)
+        self._samp: List[SamplingParams] = [SamplingParams()] * ecfg.slots
 
-        self._decode = jax.jit(
-            lambda p, t, c: lm.decode_step(p, cfg, t, c))
+        self.scheduler = Scheduler(ecfg.policy, ecfg.max_prefills_per_tick)
+        self.stats: Dict[str, Any] = {"ticks": 0, "decode_tokens": 0,
+                                      "prefill_tokens": 0}
+        self._key = jax.random.PRNGKey(ecfg.seed)
+        self._requests: Dict[int, Request] = {}
+        self._finished_unpolled: List[RequestState] = []
 
-    # --- admission ------------------------------------------------------
-    def admit(self, req: Request) -> bool:
-        try:
-            slot = self.slot_req.index(None)
-        except ValueError:
-            return False
-        # single-slot prefill: run the prompt through decode steps (simple,
-        # shape-static). A production path would use a jitted prefill_step;
-        # examples/serving.py uses this engine at small scale.
-        sl_caches = jax.tree.map(lambda c: c, self.caches)
-        toks = req.prompt.astype(np.int32)
-        for t in toks[:-1]:
-            tok = jnp.full((self.ecfg.slots, 1), int(t), jnp.int32)
-            _, new_caches = self._decode(self.params, tok, sl_caches)
-            # merge only this slot's cache rows
-            sl_caches = jax.tree.map(
-                lambda old, new: jnp.where(
-                    self._slot_mask(slot, old.ndim), new, old),
-                sl_caches, new_caches)
-        self.caches = sl_caches
-        self.slot_req[slot] = req
-        req.out_tokens = []
-        self.remaining[slot] = req.max_new_tokens
-        self.last_tok[slot, 0] = int(toks[-1])
-        return True
+        # the cache tree is dead after every call (immediately reassigned),
+        # so donate it: XLA aliases input->output pool buffers in place
+        # instead of copying the whole KV pool per decoded token
+        self._decode = _CountingJit(self._decode_fn, "decode",
+                                    donate_argnums=(2,))
+        self._prefill = _CountingJit(self._prefill_fn, "prefill",
+                                     donate_argnums=(3,))
+        self._reset = _CountingJit(self._reset_fn, "reset_slot",
+                                   donate_argnums=(0,))
+        self._jits = (self._decode, self._prefill, self._reset)
 
-    def _slot_mask(self, slot: int, ndim: int):
-        # cache leaves carry a leading scanned-layer axis: (layers, slots, ...)
-        shape = [1, self.ecfg.slots] + [1] * (ndim - 2)
-        m = jnp.zeros(shape, bool).at[:, slot].set(True)
-        return m
+    # --- jitted bodies ---------------------------------------------------
+
+    def _decode_fn(self, params, tok, caches, block_table, lengths, sp, key):
+        """Fused global decode step + per-slot sampling (static shapes)."""
+        paged = (PagedState(block_table, lengths)
+                 if block_table is not None else None)
+        logits, caches = lm.decode_step(params, self.cfg, tok, caches,
+                                        act=self._act, paged=paged)
+        nxt = samp_lib.sample(logits[:, -1], sp, key)
+        return nxt, caches
+
+    def _prefill_fn(self, params, tokens, true_length, caches, slot_or_row,
+                    encoder_frames):
+        """One admitted prompt: run prefill_step on a fresh (1, bucket) cache
+        and install it — block scatter (paged) or slot row insert (dense)."""
+        pcaches = lm.init_caches(self.cfg, 1, tokens.shape[1],
+                                 dtype=self.dtype)
+        _, filled = lm.prefill_step(params, self.cfg, tokens, pcaches,
+                                    true_length=true_length, act=self._act,
+                                    encoder_frames=encoder_frames)
+        if self.paged:
+            return kvc.write_prompt_blocks(caches, filled, slot_or_row,
+                                           self.ecfg.page_size)
+
+        def ins(big, small):
+            start = (0, slot_or_row) + (0,) * (big.ndim - 2)
+            return jax.lax.dynamic_update_slice(
+                big, small.astype(big.dtype), start)
+
+        return jax.tree.map(ins, caches, filled)
+
+    def _reset_fn(self, caches, slot):
+        """Zero one slot's recurrent state / cache lengths (empty-context
+        admission on the exact-length SSM path)."""
+        def fix(c):
+            if isinstance(c, (KVCache, MLACache)):
+                return c._replace(length=c.length.at[:, slot].set(0))
+            if isinstance(c, SSMState):
+                return SSMState(c.conv.at[:, slot].set(0),
+                                c.ssm.at[:, slot].set(0))
+            return c
+
+        return jax.tree.map(
+            fix, caches, is_leaf=lambda c: isinstance(
+                c, (KVCache, MLACache, SSMState, CrossKV)))
+
+    # --- submission / results -------------------------------------------
+
+    def submit(self, req: Request) -> int:
+        plen = int(len(req.prompt))
+        if plen < 1:
+            raise ValueError("empty prompt")
+        if req.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if plen + req.max_new_tokens > self.ecfg.max_seq:
+            raise ValueError(
+                f"prompt ({plen}) + max_new_tokens ({req.max_new_tokens}) "
+                f"exceeds max_seq ({self.ecfg.max_seq})")
+        if self.paged:
+            need = kvc.blocks_for(plen + req.max_new_tokens,
+                                  self.ecfg.page_size)
+            if need > self.allocator.num_blocks - 1:
+                raise ValueError("request exceeds total KV pool capacity")
+        if self.cfg.encoder is not None and req.encoder_frames is None:
+            raise ValueError("enc-dec arch requires encoder_frames")
+        if req.rid in self._requests:
+            raise ValueError(f"duplicate rid {req.rid}")
+
+        rs = RequestState(rid=req.rid,
+                          prompt=np.asarray(req.prompt, np.int32),
+                          max_new_tokens=int(req.max_new_tokens),
+                          sampling=req.sampling,
+                          encoder_frames=req.encoder_frames)
+        req.out_tokens = rs.out_tokens          # live alias
+        self._requests[req.rid] = req
+        self.scheduler.submit(rs, self.stats["ticks"], time.perf_counter())
+        return req.rid
+
+    def poll(self) -> List[Request]:
+        """Requests finished since the last poll, in completion order.
+
+        Delivered requests are dropped from the engine's live table (their
+        rid becomes reusable); lifecycle records stay on scheduler.finished
+        for metrics."""
+        out = [self._requests.pop(rs.rid) for rs in self._finished_unpolled]
+        self._finished_unpolled = []
+        return out
+
+    # --- admission -------------------------------------------------------
+
+    def _blocks_needed(self, rs: RequestState) -> int:
+        return kvc.blocks_for(rs.prompt_len + rs.max_new_tokens,
+                              self.ecfg.page_size)
+
+    def _can_admit(self, rs: RequestState) -> bool:
+        return (not self.paged) or self.allocator.can_alloc(
+            self._blocks_needed(rs))
+
+    def _admit(self, rs: RequestState) -> None:
+        slot = self.slot_req.index(None)
+        ctx = rs.prompt_len - 1       # prompt[-1] is fed by the first decode
+        # resolve the bucket before committing blocks: a ValueError here must
+        # not leak pool blocks
+        bucket = (kvc.bucket_for(max(ctx, 1), self.buckets)
+                  if self.bucketed else None)
+
+        if self.paged:
+            blocks = self.allocator.alloc(self._blocks_needed(rs))
+            assert blocks is not None   # guarded by _can_admit
+            rs.blocks = blocks
+            row = np.zeros(self.blocks_per_slot, np.int32)
+            row[:len(blocks)] = blocks
+            self.block_table[slot] = row
+
+        if self.bucketed:
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, :ctx] = rs.prompt[:ctx]
+            tl = np.array([ctx], np.int32)
+            ef = (rs.encoder_frames[None].astype(np.float32)
+                  if rs.encoder_frames is not None else None)
+            target = self.block_table[slot] if self.paged else np.int32(slot)
+            self.caches = self._prefill(self.params, toks, tl, self.caches,
+                                        target, ef)
+        elif ctx == 0:
+            self.caches = self._reset(self.caches, np.int32(slot))
+        else:
+            # exact-length prefill: padding would corrupt recurrent SSM state
+            toks = rs.prompt[None, :ctx].astype(np.int32)
+            tl = np.array([ctx], np.int32)
+            self.caches = self._prefill(self.params, toks, tl, self.caches,
+                                        np.int32(slot), None)
+
+        self.stats["prefill_tokens"] += ctx
+        rs.slot = slot
+        self.slot_req[slot] = rs
+        self.lengths[slot] = ctx
+        self.last_tok[slot, 0] = int(rs.prompt[-1])
+        self.remaining[slot] = rs.max_new_tokens
+        self._samp[slot] = rs.sampling
+
+    def _retire(self, slot: int, rs: RequestState, reason: str,
+                now: float) -> None:
+        self.scheduler.retire(rs, self.stats["ticks"], now, reason)
+        self.slot_req[slot] = None
+        self.lengths[slot] = 0
+        self.last_tok[slot, 0] = 0
+        if self.paged:
+            self.allocator.free(rs.blocks)
+            rs.blocks = []
+            self.block_table[slot] = kvc.NULL_BLOCK
+        self._finished_unpolled.append(rs)
 
     # --- decode tick ------------------------------------------------------
+
     def step(self) -> Dict[int, int]:
-        """One global decode step; returns {rid: new_token} for live slots."""
-        tok = jnp.asarray(self.last_tok)
-        logits, self.caches = self._decode(self.params, tok, self.caches)
-        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1)).astype(np.int32)
-        emitted = {}
-        for slot, req in enumerate(self.slot_req):
-            if req is None:
-                continue
-            t = int(nxt[slot])
-            req.out_tokens.append(t)
-            emitted[req.rid] = t
+        """Admissions + one global decode step; {rid: new_token} for live slots."""
+        free = self.slot_req.count(None)
+        if free and self.scheduler.waiting:
+            for rs in self.scheduler.pick(free, self.stats["ticks"],
+                                          self._can_admit):
+                self._admit(rs)
+
+        active = [s for s, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return {}
+
+        key = jax.random.fold_in(self._key, self.stats["ticks"])
+        sp = samp_lib.pack(self._samp)
+        bt = self.block_table if self.paged else None
+        lens = self.lengths if self.paged else None
+        nxt, self.caches = self._decode(self.params, self.last_tok,
+                                        self.caches, bt, lens, sp, key)
+        nxt = np.asarray(nxt)
+        now = time.perf_counter()
+
+        emitted: Dict[int, int] = {}
+        for slot in active:
+            rs = self.slot_req[slot]
+            tok = int(nxt[slot])
+            rs.out_tokens.append(tok)
+            emitted[rs.rid] = tok
+            if rs.first_token_time is None:
+                rs.first_token_time = now
+            self.lengths[slot] += 1
+            self.last_tok[slot, 0] = tok
             self.remaining[slot] -= 1
-            self.last_tok[slot, 0] = t
-            if t == self.ecfg.eos_id or self.remaining[slot] <= 0:
-                self.slot_req[slot] = None      # retire -> slot is reusable
+            if tok == self.ecfg.eos_id:
+                self._retire(slot, rs, "eos", now)
+            elif self.remaining[slot] <= 0:
+                self._retire(slot, rs, "max_tokens", now)
+
+        self.stats["decode_tokens"] += len(active)
+        self.stats["ticks"] += 1
         return emitted
 
-    def run(self, requests: List[Request], max_ticks: int = 1000) -> List[Request]:
-        done: List[Request] = []
-        pending = list(requests)
-        tick = 0
-        while (pending or any(self.slot_req)) and tick < max_ticks:
-            while pending and self.admit(pending[0]):
-                pending.pop(0)
-            if not any(self.slot_req):
-                break
-            self.step()
-            done = [r for r in requests if r.out_tokens is not None and
-                    r not in pending]
-            tick += 1
-        return requests
+    # --- synchronous driver ----------------------------------------------
+
+    def run(self, requests: List[Request],
+            max_ticks: int = 100000) -> List[Request]:
+        """Serve `requests` to completion; returns them in completion order
+        (each Request's out_tokens is also filled in place)."""
+        for req in requests:
+            self.submit(req)
+        completed: List[Request] = []
+        ticks = 0
+        while ((self.scheduler.waiting or any(r is not None
+                                              for r in self.slot_req))
+               and ticks < max_ticks):
+            made_progress = bool(self.step()) or not self.scheduler.waiting
+            completed.extend(self.poll())
+            ticks += 1
+            if not made_progress and not any(r is not None
+                                             for r in self.slot_req):
+                break    # queue head can never be admitted — bail, don't spin
+        return completed
+
+    # --- introspection ---------------------------------------------------
+
+    def compile_count(self) -> int:
+        """Total distinct jit signatures traced — must not grow after warmup."""
+        return sum(j.compiles for j in self._jits)
+
+    def metrics(self) -> Dict[str, Any]:
+        m = dict(self.scheduler.metrics())
+        m.update(self.stats)
+        m["compiles"] = self.compile_count()
+        m["compiles_by_fn"] = {j.name: j.compiles for j in self._jits}
+        m["backend"] = "paged" if self.paged else "dense"
+        if self.paged:
+            m["free_blocks"] = self.allocator.free_blocks
+            m["total_blocks"] = self.allocator.num_blocks
+        return m

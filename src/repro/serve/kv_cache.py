@@ -1,0 +1,166 @@
+"""Paged KV-cache management for the serving engine.
+
+Storage is a pool of fixed-size blocks per layer (nn/attention.PagedKVCache);
+this module owns everything around it: the host-side block allocator
+(admission control + free-list recycling), pool construction mirroring
+lm.init_caches' (group, period-layer, repeats) tree structure, prompt-length
+bucketing, and the jit-friendly scatter that moves a bucket-padded prefill
+cache into a slot's blocks.
+
+Conventions
+-----------
+* Block 0 is the null/trash block. Unmapped block-table entries are 0, so a
+  write routed through them (idle slots during the global decode step, padded
+  prefill blocks past a prompt's reservation) lands in scratch storage that no
+  reader ever treats as valid.
+* Blocks for a request's full lifetime (prompt + max_new_tokens) are reserved
+  at admission; a request that cannot reserve waits in the queue. This keeps
+  decode free of out-of-block preemption while still letting the pool be
+  sized to the workload instead of slots * max_seq.
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.nn.attention import KVCache, PagedKVCache
+
+NULL_BLOCK = 0
+
+
+# ---------------------------------------------------------------------------
+# Prompt-length buckets
+# ---------------------------------------------------------------------------
+
+def default_buckets(max_len: int, multiple: int = 1,
+                    lo: int = 16) -> Tuple[int, ...]:
+    """Power-of-two bucket ladder up to max_len, rounded to `multiple`.
+
+    Prefill pads prompts up to the smallest bucket, so the engine compiles at
+    most len(buckets) prefill variants and then never recompiles.
+    """
+    def round_up(n):
+        return ((n + multiple - 1) // multiple) * multiple
+
+    buckets = []
+    b = lo
+    while b < max_len:
+        buckets.append(round_up(b))
+        b *= 2
+    buckets.append(round_up(max_len))
+    return tuple(sorted(set(buckets)))
+
+
+def bucket_for(n: int, buckets: Sequence[int]) -> int:
+    for b in buckets:
+        if b >= n:
+            return b
+    raise ValueError(f"length {n} exceeds largest prefill bucket {buckets[-1]}")
+
+
+# ---------------------------------------------------------------------------
+# Host-side block allocator
+# ---------------------------------------------------------------------------
+
+def blocks_for(tokens: int, block_size: int) -> int:
+    return max(1, math.ceil(tokens / block_size))
+
+
+class BlockAllocator:
+    """Free-list allocator over the pool's block ids (block 0 reserved)."""
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is the null block)")
+        self.num_blocks = num_blocks
+        self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        if not self.can_alloc(n):
+            return None
+        taken = [self._free.pop() for _ in range(n)]
+        return taken
+
+    def free(self, blocks: Sequence[int]) -> None:
+        for b in blocks:
+            assert b != NULL_BLOCK, "null block is never allocated"
+            self._free.append(b)
+
+
+# ---------------------------------------------------------------------------
+# Pool construction
+# ---------------------------------------------------------------------------
+
+def paged_supported(cfg: ModelConfig) -> bool:
+    """Paged serving covers plain GQA/MHA decoders. Recurrent state (SSM) has
+    no seq axis to page; MLA latent and cross-attn caches keep the dense path."""
+    if cfg.mla is not None or cfg.encoder is not None:
+        return False
+    return all(spec.kind == "attn" and not spec.cross_attn
+               for period, _ in cfg.groups for spec in period)
+
+
+def pool_blocks(slots: int, max_seq: int, block_size: int) -> int:
+    """Default pool size: every slot can hold max_seq tokens, + null block."""
+    return slots * blocks_for(max_seq, block_size) + 1
+
+
+def init_paged_caches(cfg: ModelConfig, num_blocks: int, block_size: int, *,
+                      dtype=jnp.bfloat16):
+    """PagedKVCache pool tree with lm.init_caches' structure: a tuple per
+    group of per-period-layer leaves, each stacked over the group's repeats."""
+    assert paged_supported(cfg), f"{cfg.name}: arch not pageable"
+    kvh, hd = cfg.kv_heads_phys, cfg.head_dim
+    caches = []
+    for period, repeats in cfg.groups:
+        per_layer = tuple(
+            PagedKVCache(
+                k=jnp.zeros((repeats, num_blocks, block_size, kvh, hd), dtype),
+                v=jnp.zeros((repeats, num_blocks, block_size, kvh, hd), dtype),
+            )
+            for _ in period)
+        caches.append(per_layer)
+    return tuple(caches)
+
+
+# ---------------------------------------------------------------------------
+# Prefill -> pool scatter
+# ---------------------------------------------------------------------------
+
+def write_prompt_blocks(pools, prefill_caches, block_row: jax.Array,
+                        block_size: int):
+    """Scatter a (b=1, bucket)-shaped dense prefill cache into pool blocks.
+
+    block_row: (blocks_per_slot,) int32 — the admitted slot's block-table row.
+    Bucket blocks past the reservation map to NULL_BLOCK and land in trash.
+    Each block write is a lax.dynamic_update_slice at a traced block id, so
+    the whole scatter stays inside the per-bucket prefill jit.
+    """
+    def one(pool, pre):
+        assert isinstance(pool, PagedKVCache) and isinstance(pre, KVCache)
+        bucket = pre.k.shape[2]
+        assert bucket % block_size == 0, (bucket, block_size)
+        k, v = pool.k, pool.v
+        for j in range(bucket // block_size):
+            sl = slice(j * block_size, (j + 1) * block_size)
+            kb = pre.k[:, 0, sl][:, None].astype(k.dtype)   # (reps,1,bs,kvh,hd)
+            vb = pre.v[:, 0, sl][:, None].astype(v.dtype)
+            start = (0, block_row[j], 0, 0, 0)
+            k = jax.lax.dynamic_update_slice(k, kb, start)
+            v = jax.lax.dynamic_update_slice(v, vb, start)
+        return PagedKVCache(k, v)
+
+    return jax.tree.map(
+        one, pools, prefill_caches,
+        is_leaf=lambda c: isinstance(c, (PagedKVCache, KVCache)))

@@ -1,0 +1,142 @@
+"""Admission/retirement scheduling for the continuous-batching engine.
+
+The scheduler is pure host-side bookkeeping: it owns the waiting queue, the
+per-request lifecycle record (submit -> admit -> first token -> finish), and
+the waiting-queue metrics the benchmarks report. The engine asks it each tick
+which requests to admit into which free slots; retirement is reported back so
+completion order and queue-wait statistics are collected in one place.
+
+Policies
+--------
+* "fcfs"    — admit in arrival order, at most `max_prefills_per_tick` (default
+              1) per tick: running decodes take at most one prefill bubble per
+              tick, protecting inter-token latency.
+* "prefill" — admit in arrival order into *every* free slot each tick:
+              prefill-prioritizing, minimizes time-to-first-token and keeps
+              the slot pool saturated under bursty arrivals.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Deque, List, Optional
+
+import numpy as np
+
+from repro.serve.sampling import SamplingParams
+
+POLICIES = ("fcfs", "prefill")
+
+
+@dataclasses.dataclass
+class RequestState:
+    """One request's lifecycle record (host-side)."""
+    rid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    sampling: SamplingParams = SamplingParams()
+    encoder_frames: Optional[np.ndarray] = None
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    # lifecycle marks (ticks are engine decode steps; times are perf_counter)
+    submit_tick: int = -1
+    admit_tick: int = -1
+    finish_tick: int = -1
+    submit_time: float = 0.0
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    slot: int = -1
+    blocks: List[int] = dataclasses.field(default_factory=list)
+    finish_reason: str = ""        # "eos" | "max_tokens"
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.prompt))
+
+    @property
+    def queue_ticks(self) -> int:
+        return self.admit_tick - self.submit_tick if self.admit_tick >= 0 else -1
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.submit_time
+
+
+class Scheduler:
+    def __init__(self, policy: str = "fcfs",
+                 max_prefills_per_tick: Optional[int] = None,
+                 keep_finished: int = 100_000):
+        if policy not in POLICIES:
+            raise ValueError(f"policy {policy!r} not in {POLICIES}")
+        self.policy = policy
+        if max_prefills_per_tick is None:
+            max_prefills_per_tick = 1 if policy == "fcfs" else 1 << 30
+        self.max_prefills_per_tick = max_prefills_per_tick
+        self.waiting: Deque[RequestState] = deque()
+        # bounded lifecycle record: a long-lived engine must not retain every
+        # retired request's prompt/tokens forever. TTFT aggregates below are
+        # exact over the full lifetime; percentiles use this recent window.
+        self.finished: Deque[RequestState] = deque(maxlen=keep_finished)
+        # metrics
+        self.submitted = 0
+        self.admitted = 0
+        self.retired = 0
+        self.max_queue_depth = 0
+        self._queue_tick_sum = 0
+        self._ttft_sum = 0.0
+        self._ttft_n = 0
+
+    # --- queue ----------------------------------------------------------
+    def submit(self, rs: RequestState, tick: int, now: float) -> None:
+        rs.submit_tick = tick
+        rs.submit_time = now
+        self.waiting.append(rs)
+        self.submitted += 1
+        self.max_queue_depth = max(self.max_queue_depth, len(self.waiting))
+
+    def pick(self, free_slots: int, tick: int,
+             can_admit: Callable[[RequestState], bool]) -> List[RequestState]:
+        """Choose requests to admit this tick (arrival order, head-of-line
+        blocking on resources: a request that can't reserve blocks waits and
+        nothing behind it jumps the queue)."""
+        budget = min(free_slots, self.max_prefills_per_tick)
+        chosen: List[RequestState] = []
+        while self.waiting and len(chosen) < budget:
+            if not can_admit(self.waiting[0]):
+                break
+            rs = self.waiting.popleft()
+            rs.admit_tick = tick
+            self._queue_tick_sum += rs.queue_ticks
+            self.admitted += 1
+            chosen.append(rs)
+        return chosen
+
+    def retire(self, rs: RequestState, tick: int, now: float,
+               reason: str) -> None:
+        rs.finish_tick = tick
+        rs.finish_time = now
+        rs.finish_reason = reason
+        self.retired += 1
+        if rs.ttft is not None:
+            self._ttft_sum += rs.ttft
+            self._ttft_n += 1
+        self.finished.append(rs)
+
+    # --- metrics --------------------------------------------------------
+    def metrics(self) -> dict:
+        recent = [rs.ttft for rs in self.finished if rs.ttft is not None]
+        return {
+            "policy": self.policy,
+            "submitted": self.submitted,
+            "admitted": self.admitted,
+            "retired": self.retired,
+            "waiting": len(self.waiting),
+            "max_queue_depth": self.max_queue_depth,
+            "mean_queue_ticks": (self._queue_tick_sum / self.admitted
+                                 if self.admitted else 0.0),
+            "mean_ttft_s": (self._ttft_sum / self._ttft_n
+                            if self._ttft_n else None),
+            "p90_ttft_s": (float(np.percentile(recent, 90))
+                           if recent else None),
+        }

@@ -1,6 +1,7 @@
 """PoT/APoT slope projection properties."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.pwlf.approx import (encoding_value, project_apot,

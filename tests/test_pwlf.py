@@ -1,6 +1,7 @@
 """Algorithm 1 (greedy integer-aware PWLF) unit + property tests."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.core.folding import ACTIVATIONS
