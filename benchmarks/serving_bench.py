@@ -8,6 +8,9 @@ the paper's serving story is that the GRAU unit makes the quantized column
 cheap in hardware, and this bench gives the apples-to-apples software oracle.
 
     PYTHONPATH=src python benchmarks/serving_bench.py --out serving_report.json
+    PYTHONPATH=src python benchmarks/serving_bench.py --mesh 1x4
+      (adds a sharded section: tokens/sec on a 1-device engine vs the same
+       trace on a (data x model) mesh over forced host CPU devices)
 """
 from __future__ import annotations
 
@@ -15,15 +18,29 @@ import argparse
 import json
 import time
 
-import jax
 import numpy as np
 
+import jax
+
 from repro.configs.archs import get_config
+from repro.launch.mesh import ensure_host_devices, parse_mesh_spec
 from repro.models import lm
 from repro.models.config import GRAUConfig
 from repro.serve import kv_cache as kvc
 from repro.serve.engine import EngineConfig, Request, ServeEngine
 from repro.serve.sampling import SamplingParams
+
+
+def warmup(engine: ServeEngine, trace, sampling: SamplingParams) -> int:
+    """Trace the decode step and every prefill bucket the trace can reach,
+    so timed runs measure serving, not XLA. Returns the warm compile count."""
+    max_ctx = max(len(p) for _, p, _ in trace) - 1
+    buckets = [b for b in engine.buckets
+               if b <= kvc.bucket_for(max_ctx, engine.buckets)]
+    engine.run([Request(rid=10_000 + i, prompt=np.arange(2, 2 + b + 1),
+                        max_new_tokens=2, sampling=sampling)
+                for i, b in enumerate(buckets)])
+    return engine.compile_count()
 
 
 def synth_trace(n: int, mean_interarrival_ticks: float, vocab: int,
@@ -85,8 +102,15 @@ def main() -> None:
     ap.add_argument("--interarrival", type=float, default=2.0,
                     help="mean request inter-arrival time in decode ticks")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default=None,
+                    help="also benchmark sharded serving on a 'M' or 'DxM' "
+                         "mesh (forces host devices on CPU) vs 1 device")
     ap.add_argument("--out", default=None, help="write the JSON report here")
     args = ap.parse_args()
+
+    mesh_shape = parse_mesh_spec(args.mesh) if args.mesh else None
+    if mesh_shape:
+        ensure_host_devices(mesh_shape[0] * mesh_shape[1])
 
     base_cfg = get_config(args.arch, smoke=True)
     report = {
@@ -112,16 +136,7 @@ def main() -> None:
                 cfg, params,
                 EngineConfig(slots=args.slots, max_seq=args.max_seq,
                              seed=args.seed))
-            # warmup: trace the decode step and every prefill bucket the
-            # trace can reach, so the timed run measures serving, not XLA
-            max_ctx = max(len(p) for _, p, _ in trace) - 1
-            buckets = [b for b in engine.buckets
-                       if b <= kvc.bucket_for(max_ctx, engine.buckets)]
-            warm = [Request(rid=10_000 + i, prompt=np.arange(2, 2 + b + 1),
-                            max_new_tokens=2, sampling=sampling)
-                    for i, b in enumerate(buckets)]
-            engine.run(warm)
-            warm_compiles = engine.compile_count()
+            warm_compiles = warmup(engine, trace, sampling)
 
             stats = run_trace(engine, trace, sampling)
             stats["recompiles_after_warmup"] = (engine.compile_count()
@@ -133,6 +148,33 @@ def main() -> None:
                   f"p90 {stats['ttft_p90_s'] * 1e3:.1f} ms "
                   f"[{stats['backend']}, "
                   f"{stats['recompiles_after_warmup']} recompiles]")
+
+    if mesh_shape:
+        # sharded vs single-device: same float/greedy trace, so the delta is
+        # purely the mesh (on forced host CPU devices expect overhead, not
+        # speedup — the point is the apples-to-apples wiring and the report
+        # format, which carries over unchanged to real accelerators)
+        from repro.launch.mesh import make_serve_mesh
+        params, _ = lm.init_lm(base_cfg, jax.random.PRNGKey(0),
+                               dtype=jax.numpy.float32)
+        report["mesh_comparison"] = {}
+        meshes = {"1 device": None,
+                  f"{mesh_shape[0]}x{mesh_shape[1]} mesh":
+                      make_serve_mesh(*mesh_shape)}
+        for label, mesh in meshes.items():
+            engine = ServeEngine(
+                base_cfg, params,
+                EngineConfig(slots=args.slots, max_seq=args.max_seq,
+                             seed=args.seed),
+                mesh=mesh)
+            warm_compiles = warmup(engine, trace, SamplingParams())
+            stats = run_trace(engine, trace, SamplingParams())
+            stats["recompiles_after_warmup"] = (engine.compile_count()
+                                                - warm_compiles)
+            report["mesh_comparison"][label] = stats
+            print(f"mesh {label}: {stats['tokens_per_s']:.1f} tok/s, "
+                  f"TTFT p50 {stats['ttft_p50_s'] * 1e3:.1f} ms "
+                  f"[{stats['recompiles_after_warmup']} recompiles]")
 
     payload = json.dumps(report, indent=2)
     if args.out:

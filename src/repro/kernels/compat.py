@@ -1,0 +1,28 @@
+"""Version-tolerant shims over the Pallas TPU API surface.
+
+The Pallas compiler-params class was renamed across JAX releases
+(`pltpu.TPUCompilerParams` in <= 0.4.x, `pltpu.CompilerParams` from the
+0.5 line onward, with a deprecation window where only one of the two
+exists). The kernels in this package are written against the *semantics*
+(dimension_semantics, etc.), which never changed — this module resolves
+whichever spelling the installed JAX provides so the same kernel source
+runs on both, in compiled and interpret mode.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+# Resolved once at import: the class, under whichever name this JAX ships.
+_COMPILER_PARAMS_CLS = getattr(
+    pltpu, "CompilerParams", None) or getattr(pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    """Build the pallas_call `compiler_params` value for this JAX version.
+
+    Accepts the keyword surface shared by both spellings
+    (`dimension_semantics`, `vmem_limit_bytes`, ...) and returns an instance
+    of whichever class exists. Unknown kwargs raise, exactly as the
+    underlying constructor would.
+    """
+    return _COMPILER_PARAMS_CLS(**kwargs)

@@ -80,7 +80,7 @@ def _grau_kernel(
         acc += jnp.where(fire, term, 0)
 
     y = sign * acc + bias
-    o_ref[...] = jnp.clip(y, qmin, qmax).astype(jnp.int8)
+    o_ref[...] = jnp.clip(y, qmin, qmax).astype(o_ref.dtype)
 
 
 @functools.partial(
@@ -101,9 +101,14 @@ def grau_pallas(
     interpret: bool = False,
 ) -> jax.Array:
     """Apply a GRAU register file to a 2D int32 array. See ops.grau for the
-    user-facing wrapper (padding, reshapes, spec packing)."""
+    user-facing wrapper (padding, reshapes, spec packing).
+
+    Output dtype follows the register file's signedness: int8 for signed
+    modes, uint8 for unsigned (an unsigned 8-bit clamp to [0, 255] does not
+    fit int8 — the mixed-precision mode register picks the output bus)."""
     m, n = x.shape
     bm, bn = block
+    out_dtype = jnp.int8 if qmin < 0 else jnp.uint8
     grid = (pl.cdiv(m, bm), pl.cdiv(n, bn))
     smem = lambda shape: pl.BlockSpec(shape, lambda i, j: (0, 0), memory_space=pltpu.SMEM)
     return pl.pallas_call(
@@ -120,7 +125,7 @@ def grau_pallas(
             pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int8),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         interpret=interpret,
     )(
         bp.reshape(1, -1),

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
 from repro.pwlf.spec import MAX_SEGMENTS
 
 DEFAULT_TILES = (256, 256, 512)
@@ -75,7 +76,7 @@ def _mm_grau_kernel(
             fire = (jnp.right_shift(bits, k) & 1) != 0
             acc += jnp.where(fire, term, 0)
         y = sign * acc + bias
-        o_ref[...] = jnp.clip(y, qmin, qmax).astype(jnp.int8)
+        o_ref[...] = jnp.clip(y, qmin, qmax).astype(o_ref.dtype)
 
 
 @functools.partial(
@@ -101,6 +102,8 @@ def matmul_grau_pallas(
     k2, n = w.shape
     assert k == k2, (x.shape, w.shape)
     bm, bn, bk = tiles
+    # output bus signedness comes from the mode register (see kernels/grau.py)
+    out_dtype = jnp.int8 if qmin < 0 else jnp.uint8
     grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))
     smem = lambda shape: pl.BlockSpec(shape, lambda i, j, kk: (0, 0), memory_space=pltpu.SMEM)
     return pl.pallas_call(
@@ -119,10 +122,10 @@ def matmul_grau_pallas(
             pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int8),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
     )(

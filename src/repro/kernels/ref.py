@@ -8,9 +8,15 @@ from repro.core.grau import grau_apply_int
 from repro.pwlf.spec import GRAUSpec
 
 
+def _out_dtype(spec: GRAUSpec):
+    # matches the kernels: signed modes emit int8, unsigned uint8 (a [0, 255]
+    # clamp does not fit int8 without wrapping)
+    return jnp.int8 if spec.qmin < 0 else jnp.uint8
+
+
 def grau_ref(x: jax.Array, spec: GRAUSpec) -> jax.Array:
-    """Oracle for kernels/grau.py: int32 MAC outputs -> int8 quantized acts."""
-    return grau_apply_int(x, spec).astype(jnp.int8)
+    """Oracle for kernels/grau.py: int32 MAC outputs -> 8-bit quantized acts."""
+    return grau_apply_int(x, spec).astype(_out_dtype(spec))
 
 
 def matmul_grau_ref(x: jax.Array, w: jax.Array, spec: GRAUSpec) -> jax.Array:
@@ -21,4 +27,4 @@ def matmul_grau_ref(x: jax.Array, w: jax.Array, spec: GRAUSpec) -> jax.Array:
     acc = jax.lax.dot_general(
         x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
     )
-    return grau_apply_int(acc, spec).astype(jnp.int8)
+    return grau_apply_int(acc, spec).astype(_out_dtype(spec))

@@ -25,7 +25,7 @@ import jax
 from repro.configs.archs import ARCHS, get_config
 from repro.configs.shapes import SHAPES, cell_status
 from repro.launch import steps as steps_lib
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, named_shardings, use_mesh
 
 OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
 
@@ -43,8 +43,10 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
     t0 = time.time()
     bundle = steps_lib.build_cell(cfg, shape, mesh, **overrides)
-    with jax.set_mesh(mesh):
-        jitted = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+    with use_mesh(mesh):
+        jitted = jax.jit(bundle.fn,
+                         in_shardings=named_shardings(mesh,
+                                                      bundle.in_shardings),
                          donate_argnums=bundle.donate_argnums)
         lowered = jitted.lower(*bundle.args)
         t_lower = time.time() - t0
@@ -53,6 +55,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # pre-0.5 returns [dict], newer dict
+        cost = cost[0]
     hlo = compiled.as_text()
     # Trip-count-aware totals (raw cost_analysis counts while bodies once;
     # see roofline/hlo.py). All values are per-device.

@@ -1,28 +1,27 @@
 """Serving launcher: continuous-batching decode over a slot pool, with the
-paged KV cache on pageable archs and scheduler/engine metrics reporting.
+paged KV cache on pageable archs, optional mesh sharding, and
+scheduler/engine metrics reporting.
 
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --requests 6
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b \
       --temperature 0.8 --top-p 0.9 --policy prefill
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --mesh 1x4
+    (on CPU, forces 4 host devices automatically; see docs/sharding.md)
 """
 from __future__ import annotations
 
 import argparse
 import json
 
-import jax
 import numpy as np
-
-from repro.configs.archs import get_config
-from repro.models import lm
-from repro.serve.engine import EngineConfig, Request, ServeEngine
-from repro.serve.sampling import SamplingParams
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--mesh", default=None,
+                    help="serve sharded: 'M' (tensor-parallel) or 'DxM'")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
@@ -37,6 +36,20 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    from repro.launch.mesh import ensure_host_devices, parse_mesh_spec
+    mesh_shape = parse_mesh_spec(args.mesh) if args.mesh else None
+    if mesh_shape:
+        ensure_host_devices(mesh_shape[0] * mesh_shape[1])
+
+    import jax
+
+    from repro.configs.archs import get_config
+    from repro.launch.mesh import make_serve_mesh
+    from repro.models import lm
+    from repro.serve.engine import EngineConfig, Request, ServeEngine
+    from repro.serve.sampling import SamplingParams
+
+    mesh = make_serve_mesh(*mesh_shape) if mesh_shape else None
     cfg = get_config(args.arch, smoke=True)
     params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0), dtype=jax.numpy.float32)
     paged = None if args.backend == "auto" else (args.backend == "paged")
@@ -44,7 +57,8 @@ def main() -> None:
         cfg, params,
         EngineConfig(slots=args.slots, max_seq=args.max_seq, paged=paged,
                      page_size=args.page_size, policy=args.policy,
-                     seed=args.seed))
+                     seed=args.seed),
+        mesh=mesh)
 
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, top_p=args.top_p)

@@ -20,7 +20,7 @@ from repro.configs.archs import get_config
 from repro.configs.shapes import SHAPES, ShapeSpec
 from repro.data.pipeline import make_lm_batch_for
 from repro.launch import steps as steps_lib
-from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.mesh import make_host_mesh, make_production_mesh, use_mesh
 from repro.models import lm
 from repro.train import optim
 from repro.train.loop import LoopConfig, run
@@ -67,7 +67,7 @@ def main() -> None:
     params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0), dtype=dtype)
     opt_state = optim.init_opt_state(params)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         jitted = jax.jit(step_fn, donate_argnums=(0, 1))
         params, opt_state, hist = run(
             train_step=jitted,

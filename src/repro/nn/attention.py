@@ -217,14 +217,24 @@ def paged_view(cache: PagedKVCache, st: PagedState) -> Tuple[jax.Array, jax.Arra
 
     The view is transient (one decode step); persistent storage stays paged.
     Garbage read through null-block entries is masked by `length` downstream.
+    Under a sharding context the gathered view is pinned to the pool's layout
+    (kv heads / head_dim on `model`, slots on the data axes) so GSPMD doesn't
+    rematerialize the view when the reshape changes the dim structure.
     """
     slots, blocks_per_slot = st.block_table.shape
     block_size = cache.k.shape[1]
     kvh, hd = cache.k.shape[2], cache.k.shape[3]
     seq = blocks_per_slot * block_size
-    k = cache.k[st.block_table].reshape(slots, seq, kvh, hd)
-    v = cache.v[st.block_table].reshape(slots, seq, kvh, hd)
-    return k, v
+
+    def view(pool):
+        dense = pool[st.block_table]
+        dense = shard_ctx.constrain(dense, "batch", None, None,
+                                    "kv_heads", "head_dim")
+        dense = dense.reshape(slots, seq, kvh, hd)
+        return shard_ctx.constrain(dense, "batch", None,
+                                   "kv_heads", "head_dim")
+
+    return view(cache.k), view(cache.v)
 
 
 # ---------------------------------------------------------------------------

@@ -104,9 +104,15 @@ class _CountingJit:
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, mesh=None):
+        """`mesh` (optional jax Mesh with ("data", "model") axes) turns on
+        sharded serving: params are placed tensor-parallel, KV storage is
+        head-sharded over `model`, and the decode slot batch shards over
+        `data` — see serve/sharding.py for the placement scheme and
+        docs/sharding.md for how to run this on forced host devices."""
         self.cfg, self.params, self.ecfg = cfg, params, ecfg
         self.dtype = dtype
+        self.mesh = mesh
         self._act = lm.make_act(cfg)
         self._has_ssm = any(spec.kind == "mamba"
                             for period, _ in cfg.groups for spec in period)
@@ -131,6 +137,16 @@ class ServeEngine:
         else:
             self.caches = lm.init_caches(cfg, ecfg.slots, ecfg.max_seq,
                                          dtype=dtype)
+
+        if mesh is not None:
+            from repro.serve import sharding as shard_lib
+            self.params = shard_lib.place_params(self.params, cfg, mesh)
+            if self.paged:
+                self.caches = shard_lib.place_paged_pools(self.caches, cfg,
+                                                          mesh)
+            else:
+                self.caches = shard_lib.place_dense_caches(self.caches, cfg,
+                                                           mesh, ecfg.slots)
 
         if ecfg.prefill_buckets is not None:
             self.buckets = tuple(sorted(ecfg.prefill_buckets))
@@ -165,11 +181,18 @@ class ServeEngine:
         # the cache tree is dead after every call (immediately reassigned),
         # so donate it: XLA aliases input->output pool buffers in place
         # instead of copying the whole KV pool per decoded token
-        self._decode = _CountingJit(self._decode_fn, "decode",
+        decode_fn, prefill_fn, reset_fn = (self._decode_fn, self._prefill_fn,
+                                           self._reset_fn)
+        if mesh is not None:
+            # activation-sharding constraints must be live while these trace
+            from repro.serve import sharding as shard_lib
+            decode_fn = shard_lib.with_shard_ctx(decode_fn, mesh, cfg)
+            prefill_fn = shard_lib.with_shard_ctx(prefill_fn, mesh, cfg)
+        self._decode = _CountingJit(decode_fn, "decode",
                                     donate_argnums=(2,))
-        self._prefill = _CountingJit(self._prefill_fn, "prefill",
+        self._prefill = _CountingJit(prefill_fn, "prefill",
                                      donate_argnums=(3,))
-        self._reset = _CountingJit(self._reset_fn, "reset_slot",
+        self._reset = _CountingJit(reset_fn, "reset_slot",
                                    donate_argnums=(0,))
         self._jits = (self._decode, self._prefill, self._reset)
 
@@ -401,6 +424,9 @@ class ServeEngine:
         m["compiles"] = self.compile_count()
         m["compiles_by_fn"] = {j.name: j.compiles for j in self._jits}
         m["backend"] = "paged" if self.paged else "dense"
+        if self.mesh is not None:
+            from repro.serve import sharding as shard_lib
+            m["mesh"] = shard_lib.mesh_summary(self.mesh)
         if self.paged:
             m["free_blocks"] = self.allocator.free_blocks
             m["total_blocks"] = self.allocator.num_blocks

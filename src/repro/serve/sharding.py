@@ -1,0 +1,93 @@
+"""Placement for sharded serving: params, KV storage, per-tick slot state.
+
+The serving scheme differs from training's FSDP x TP (launch/steps.py):
+
+  * params — pure tensor parallelism: `model`-axis shards on heads / kv-heads
+    / mlp / experts / vocab, everything replicated over `data`. Serving reads
+    weights every tick, so FSDP's embed-dim sharding would all-gather the
+    full matrix per decode step; replication trades HBM for zero gather.
+  * paged KV pool — kv-head axis over `model`; the block axis is replicated
+    over `data` (any slot may own any block, so a data-sharded pool would
+    need per-shard allocators — that is the multi-host follow-up, not this
+    layer). Decode batch (slots) shards over `data` via the activation rules.
+  * dense caches — launch/steps.cache_pspecs: slot batch over `data`,
+    kv heads over `model`.
+  * slot state (tokens, lengths, sampler batch, PRNG key) — tiny host
+    arrays handed to jit uncommitted each tick; the embed-lookup constraint
+    re-shards the token batch over `data` on entry to the model.
+
+Everything resolves through the same logical-axis rules as training
+(nn/common.DEFAULT_RULES, nn/shard_ctx._ACT_RULES) so a future mesh axis
+(e.g. `pod`) composes without touching the engine.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.launch import steps as steps_lib
+# make_serve_mesh/parse_mesh_spec re-exported so engine callers can build
+# meshes without touching launch/
+from repro.launch.mesh import (make_serve_mesh, named_shardings,  # noqa: F401
+                               parse_mesh_spec)
+from repro.models.config import ModelConfig
+from repro.nn.attention import PagedKVCache
+
+
+def _axis_size(mesh: Mesh, axis: str) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get(axis, 1)
+
+
+def activation_overrides(cfg: ModelConfig, mesh: Mesh):
+    """Serving reuses training's rule overrides (sequence parallelism for
+    archs whose heads don't divide the model axis)."""
+    return steps_lib.act_rules(cfg, mesh)
+
+
+def with_shard_ctx(fn, mesh: Mesh, cfg: ModelConfig):
+    """Wrap a jit body so activation constraints resolve while it traces."""
+    return steps_lib._with_shard_ctx(fn, mesh, activation_overrides(cfg, mesh))
+
+
+def place_params(params, cfg: ModelConfig, mesh: Mesh):
+    """Tensor-parallel placement (no FSDP): returns the committed param tree."""
+    _, pspecs = steps_lib.param_pspecs(cfg, mesh, fsdp=False)
+    return jax.device_put(params, named_shardings(mesh, pspecs))
+
+
+def place_dense_caches(caches, cfg: ModelConfig, mesh: Mesh, slots: int):
+    """Dense (slots, max_seq) caches: slot batch over data, heads over model."""
+    pspecs = steps_lib.cache_pspecs(cfg, mesh, slots)
+    return jax.device_put(caches, named_shardings(mesh, pspecs))
+
+
+def paged_pool_pspecs(cfg: ModelConfig, mesh: Mesh):
+    """PartitionSpec tree mirroring kv_cache.init_paged_caches' structure.
+
+    Pool leaves are (repeats, num_blocks, block_size, kv_heads, head_dim);
+    kv heads shard over `model` when divisible (head_dim as the fallback,
+    matching cache_pspecs), blocks stay whole on every data replica.
+    """
+    m = _axis_size(mesh, "model")
+    if cfg.kv_heads_phys % m == 0:
+        spec = P(None, None, None, "model", None)
+    elif cfg.head_dim % m == 0:
+        spec = P(None, None, None, None, "model")
+    else:
+        spec = P(None, None, None, None, None)
+    return tuple(
+        tuple(PagedKVCache(k=spec, v=spec) for _ in period)
+        for period, _ in cfg.groups)
+
+
+def place_paged_pools(pools, cfg: ModelConfig, mesh: Mesh):
+    return jax.device_put(pools,
+                          named_shardings(mesh, paged_pool_pspecs(cfg, mesh)))
+
+
+def mesh_summary(mesh: Mesh) -> str:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    body = "x".join(f"{a}={sizes[a]}" for a in mesh.axis_names)
+    return f"mesh({body}, devices={int(np.prod(mesh.devices.shape))})"

@@ -1,8 +1,26 @@
-import numpy as np
-import pytest
+"""Test-process environment: forced multi-device host platform + shared rng.
 
-# NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device
-# (the 512-device override belongs exclusively to repro.launch.dryrun).
+XLA_FLAGS must be set before the first jax backend initialization, and
+conftest is imported before any test module, so this is the one place the
+whole suite can be given a deterministic device count. Forcing 4 host CPU
+devices makes the sharded serving path (tests/test_sharding.py) testable
+without hardware while leaving single-device tests untouched (unsharded
+computation runs on device 0 regardless of how many devices exist).
+
+The count is overridable — CI runs a second matrix job with a different
+XLA_FLAGS to check the suite is really device-count parametrized, and
+repro.launch.dryrun still owns its own 512-device override (it sets the flag
+itself before importing jax, outside pytest).
+"""
+import os
+
+_FORCE = "--xla_force_host_platform_device_count"
+_flags = os.environ.get("XLA_FLAGS", "")
+if _FORCE not in _flags:
+    os.environ["XLA_FLAGS"] = f"{_flags} {_FORCE}=4".strip()
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,124 @@
+"""Differential tests: every GRAU implementation agrees bit-exactly.
+
+Three implementations of the paper's datapath exist — the Pallas kernel
+(kernels/grau.py, run in interpret mode on CPU), the jnp oracle
+(core.grau.grau_apply_int) and the numpy int64 host reference
+(core.grau.grau_reference_int) — plus the fused MXU epilogue
+(kernels/matmul_grau.py) against its unfused GEMM->GRAU oracle. Specs here
+are *randomized register files* (random breakpoints, enc rows, signs,
+biases, pre-shift sign, output precision), not fitted ones, so agreement
+can't lean on any structure the fitter produces.
+
+Inputs are bounded to |x| <= 2**20 with <= 8 exponent stages: the kernel and
+jnp oracle accumulate in int32, the host reference in int64, and the
+contract is only bit-exactness on ranges the 32-bit datapath represents
+(8 * (2**20 << 2) < 2**31), matching the hardware's fixed accumulator width.
+
+Property-based variants run when hypothesis is installed (CI does); the
+seeded sweeps below always run, so this file never goes dark locally.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.grau import grau_apply_int, grau_reference_int
+from repro.kernels import ops
+from repro.kernels.ref import matmul_grau_ref
+from repro.pwlf.spec import make_spec
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+X_BOUND = 1 << 20
+
+
+def random_spec(rng: np.random.Generator):
+    """A structurally valid, otherwise unconstrained GRAU register file."""
+    segments = int(rng.integers(1, 9))
+    num_exponents = int(rng.integers(1, 9))
+    out_bits = int(rng.choice([2, 4, 8]))
+    out_signed = bool(rng.integers(0, 2)) or out_bits == 2  # 2-bit unsigned
+    # is fine too, but keep at least some negative-capable range in play
+    bps = np.sort(rng.choice(
+        np.arange(-X_BOUND, X_BOUND), size=segments - 1, replace=False)
+    ) if segments > 1 else np.empty((0,), np.int64)
+    return make_spec(
+        breakpoints=bps,
+        enc=rng.integers(0, 2, size=(segments, num_exponents)),
+        sign=rng.choice([-1, 1], size=segments),
+        bias=rng.integers(-100, 101, size=segments),
+        pre_shift=int(rng.integers(-2, 9)),   # both shift directions
+        num_exponents=num_exponents,
+        out_bits=out_bits,
+        out_signed=out_signed,
+    )
+
+
+def _assert_trio_agrees(x: np.ndarray, spec) -> None:
+    xj = jnp.asarray(x, jnp.int32)
+    kernel = np.asarray(ops.grau(xj, spec, interpret=True), np.int64)
+    oracle = np.asarray(grau_apply_int(xj, spec), np.int64)
+    host = grau_reference_int(x, spec)
+    np.testing.assert_array_equal(kernel, oracle)
+    np.testing.assert_array_equal(kernel, host)
+
+
+@pytest.mark.parametrize("case", range(20))
+def test_grau_trio_bit_exact_seeded(case):
+    rng = np.random.default_rng(1000 + case)
+    spec = random_spec(rng)
+    shape = tuple(rng.integers(1, 130, size=int(rng.integers(1, 4))))
+    x = rng.integers(-X_BOUND, X_BOUND, size=shape)
+    _assert_trio_agrees(x, spec)
+
+
+def test_grau_trio_bit_exact_at_breakpoints():
+    """Comparator edges (x == bp, bp +/- 1) are where an off-by-one in the
+    strict/non-strict comparison would hide; probe them directly."""
+    rng = np.random.default_rng(7)
+    for _ in range(10):
+        spec = random_spec(rng)
+        bps = np.asarray(spec.breakpoints, np.int64)
+        real = bps[bps < np.iinfo(np.int32).max]          # skip pad entries
+        probes = np.concatenate([real - 1, real, real + 1,
+                                 np.array([-X_BOUND, 0, X_BOUND - 1])])
+        _assert_trio_agrees(np.clip(probes, -X_BOUND, X_BOUND - 1), spec)
+
+
+@pytest.mark.parametrize("case", range(10))
+def test_matmul_grau_fused_vs_unfused_seeded(case):
+    rng = np.random.default_rng(2000 + case)
+    spec = random_spec(rng)
+    m, k, n = (int(rng.integers(1, 97)) for _ in range(3))
+    x = jnp.asarray(rng.integers(-128, 128, size=(m, k)), jnp.int8)
+    w = jnp.asarray(rng.integers(-128, 128, size=(k, n)), jnp.int8)
+    got = ops.matmul_grau(x, w, spec, tiles=(64, 64, 64), interpret=True)
+    want = matmul_grau_ref(x, w, spec)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 2**32 - 1),
+           rows=st.integers(1, 80), cols=st.integers(1, 200))
+    def test_grau_trio_bit_exact_hypothesis(seed, rows, cols):
+        rng = np.random.default_rng(seed)
+        spec = random_spec(rng)
+        x = rng.integers(-X_BOUND, X_BOUND, size=(rows, cols))
+        _assert_trio_agrees(x, spec)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**32 - 1), m=st.integers(1, 70),
+           k=st.integers(1, 70), n=st.integers(1, 70))
+    def test_matmul_grau_fused_vs_unfused_hypothesis(seed, m, k, n):
+        rng = np.random.default_rng(seed)
+        spec = random_spec(rng)
+        x = jnp.asarray(rng.integers(-128, 128, size=(m, k)), jnp.int8)
+        w = jnp.asarray(rng.integers(-128, 128, size=(k, n)), jnp.int8)
+        got = ops.matmul_grau(x, w, spec, tiles=(64, 64, 64), interpret=True)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(matmul_grau_ref(x, w, spec)))

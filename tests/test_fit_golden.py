@@ -1,0 +1,60 @@
+"""Golden regression guard for the offline fitting flow (paper Tables 3/4).
+
+Pins max-error bounds for the end-to-end fold -> Algorithm-1 fit -> APoT
+projection pipeline on the three activations the paper reports. The pipeline
+is fully deterministic (fixed sampling protocol, no RNG), so today's measured
+errors (recorded in the comments) only move if someone changes the fitter,
+the projection, or the folding — and then these fail loudly instead of
+silently degrading every downstream accuracy table.
+
+Bounds carry ~50% headroom over measured values so legitimate numerical
+refactors (e.g. reassociating a sum) don't trip them; a real regression
+typically blows up by integer factors.
+"""
+import pytest
+
+from repro.core.build import build_grau
+from repro.core.folding import fold
+
+# (activation, s_out, segments) -> (fit_max_abs bound, int_max_abs bound).
+# Measured on the seed pipeline: silu 6: 2.44/2, 8: 0.95/2; gelu 6: 2.00/3,
+# 8: 0.68/2; tanh 6: 8.88/10, 8: 5.56/6  (integer errors in output LSBs).
+GOLDEN = {
+    ("silu", 2**-4, 6): (3.5, 4),
+    ("silu", 2**-4, 8): (1.5, 3),
+    ("gelu", 2**-4, 6): (3.0, 5),
+    ("gelu", 2**-4, 8): (1.2, 3),
+    ("tanh", 2**-7, 6): (13.0, 16),
+    ("tanh", 2**-7, 8): (8.5, 10),
+}
+
+
+def _build(act: str, s_out: float, segments: int):
+    folded = fold(act, s_in=2**-10, s_out=s_out, out_bits=8)
+    return build_grau(folded, mac_range=(-30000, 30000), segments=segments,
+                      num_exponents=8, mode="apot", bias_mode="lsq")
+
+
+@pytest.mark.parametrize("act,s_out,segments", sorted(GOLDEN, key=str))
+def test_fitted_spec_max_error_within_golden_bound(act, s_out, segments):
+    fit_bound, int_bound = GOLDEN[(act, s_out, segments)]
+    res = _build(act, s_out, segments)
+    # float-domain PWLF fit quality (Algorithm 1 + per-segment least squares)
+    assert res.fit.max_abs_err <= fit_bound, (
+        f"{act}/{segments}seg PWLF fit regressed: "
+        f"max_abs_err={res.fit.max_abs_err:.4f} > {fit_bound}")
+    # integer-domain end-to-end error of the emitted register file (the
+    # number that actually bounds accelerator accuracy; in output LSBs)
+    assert res.int_max_abs <= int_bound, (
+        f"{act}/{segments}seg GRAU spec regressed: "
+        f"int_max_abs={res.int_max_abs:.1f} > {int_bound}")
+
+
+@pytest.mark.parametrize("act,s_out", [("silu", 2**-4), ("gelu", 2**-4),
+                                       ("tanh", 2**-7)])
+def test_more_segments_tighten_the_golden_activations(act, s_out):
+    """8-segment instances must not fit worse than 6-segment ones (the
+    paper's segment-count scaling argument, Table 4)."""
+    r6, r8 = _build(act, s_out, 6), _build(act, s_out, 8)
+    assert r8.fit.rms_err <= r6.fit.rms_err + 1e-9
+    assert r8.int_rms <= r6.int_rms + 0.05
