@@ -1,0 +1,65 @@
+"""Gate a benchmark JSON against a checked-in baseline.
+
+    PYTHONPATH=src python benchmarks/check_regression.py \
+        --bench BENCH_serving.json \
+        --baseline benchmarks/baselines/serving_cpu_baseline.json
+
+The baseline maps dotted report paths to floor values; a measured value below
+``floor * (1 - max_regression)`` fails the run. Floors are deliberately
+conservative for shared CI runners (absolute tokens/sec varies with host
+load), while the decode-scaling *speedup* is a same-process ratio and gates
+the actual property this repo cares about: the bucketed decode path must not
+regress toward the pre-PR full-capacity gather.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def lookup(report: dict, dotted: str):
+    cur = report
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", required=True)
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--max-regression", type=float, default=0.2,
+                    help="allowed fractional drop below the baseline floor")
+    args = ap.parse_args()
+
+    with open(args.bench) as f:
+        report = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    failures = []
+    for path, floor in baseline["metrics"].items():
+        got = lookup(report, path)
+        gate = floor * (1.0 - args.max_regression)
+        if got is None:
+            failures.append(f"{path}: missing from {args.bench}")
+            continue
+        status = "OK " if got >= gate else "FAIL"
+        print(f"{status} {path}: {got:.3f} (baseline {floor:.3f}, "
+              f"gate {gate:.3f})")
+        if got < gate:
+            failures.append(f"{path}: {got:.3f} < gate {gate:.3f}")
+    if failures:
+        print("\nregression gate FAILED:", file=sys.stderr)
+        for f_ in failures:
+            print(f"  {f_}", file=sys.stderr)
+        return 1
+    print("regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,12 +1,23 @@
-"""Kernel micro-bench: GRAU epilogue fusion traffic accounting + wall time.
+"""Kernel micro-bench: GRAU epilogue fusion + paged-attention decode traffic
+accounting, with wall time and bit-exactness checks.
 
 On this CPU container the Pallas kernels run in interpret mode, so wall time
-is NOT a TPU number; the TPU-relevant output is the HBM-traffic model of the
-fused int8 GEMM + GRAU epilogue vs. the unfused (matmul -> int32 out ->
-requant pass) baseline — the quantity the §Perf memory-roofline claims use.
+is NOT a TPU number; the TPU-relevant outputs are the HBM-traffic models:
+
+  * fused int8 GEMM + GRAU epilogue vs the unfused (matmul -> int32 out ->
+    requant pass) baseline — the quantity the §Perf memory-roofline claims
+    use; and
+  * the paged-attention decode kernel's per-step KV bytes at the live-block
+    bucket vs the pre-PR full-capacity gather — the decode-path scaling law
+    (live tokens, not pool size) that benchmarks/serving_bench.py measures
+    end-to-end.
+
+``PYTHONPATH=src python benchmarks/kernel_bench.py``  writes BENCH_kernels.json.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -16,7 +27,8 @@ import numpy as np
 from repro.core.build import build_grau
 from repro.core.folding import fold
 from repro.kernels import ops
-from repro.kernels.ref import grau_ref, matmul_grau_ref
+from repro.kernels.paged_attention import decode_grid, paged_attention
+from repro.kernels.ref import grau_ref, matmul_grau_ref, paged_attention_ref
 
 
 def traffic_model(m, k, n):
@@ -27,21 +39,35 @@ def traffic_model(m, k, n):
     return fused, unfused
 
 
-def _time(f, *args, reps=3):
-    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else None
-    outs = f(*args)
-    jax.block_until_ready(outs)
+def paged_traffic_model(slots, kvh, h, d, block_size, live_blocks,
+                        full_blocks, dtype_bytes=4):
+    """Per-decode-step KV HBM reads: block-table-driven kernel (live blocks
+    only, each block fetched once per kv head) vs the pre-PR full-capacity
+    gather (every mapped-or-not table column, materialized densely)."""
+    per_block = block_size * d * 2 * dtype_bytes          # k + v
+    qo = slots * h * d * 2 * dtype_bytes                  # q in, out written
+    live = slots * kvh * live_blocks * per_block + qo
+    full = slots * kvh * full_blocks * per_block + qo
+    return live, full
+
+
+def _time(f, reps=3):
+    jax.block_until_ready(f())
     t0 = time.perf_counter()
     for _ in range(reps):
-        jax.block_until_ready(f(*args))
+        jax.block_until_ready(f())
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def run(quick: bool = False):
-    rows = []
-    spec = build_grau(fold("silu", s_in=2**-10, s_out=2**-4, out_bits=8),
+def _grau_spec():
+    return build_grau(fold("silu", s_in=2**-10, s_out=2**-4, out_bits=8),
                       mac_range=(-30000, 30000), segments=6, num_exponents=8,
                       mode="apot", bias_mode="lsq").spec
+
+
+def bench_matmul_grau(quick: bool):
+    rows = []
+    spec = _grau_spec()
     shapes = [(256, 512, 256)] if quick else [(256, 512, 256), (512, 1024, 512)]
     for m, k, n in shapes:
         key = jax.random.PRNGKey(0)
@@ -56,8 +82,9 @@ def run(quick: bool = False):
                                           interpret=True)
                           == matmul_grau_ref(x, w, spec)))
         fused_b, unfused_b = traffic_model(m, k, n)
-        rows.append({"shape": (m, k, n), "us_fused_interp": us_fused,
-                     "us_ref": us_ref, "bitexact": ok,
+        rows.append({"kernel": "matmul_grau", "shape": (m, k, n),
+                     "us_fused_interp": us_fused, "us_ref": us_ref,
+                     "bitexact": ok,
                      "traffic_saving": 1 - fused_b / unfused_b})
         print(f"kernel,matmul_grau,{m}x{k}x{n},us_interp={us_fused:.0f},"
               f"us_ref={us_ref:.0f},bitexact={ok},"
@@ -70,9 +97,91 @@ def run(quick: bool = False):
     us = _time(lambda: ops.grau(xq, spec, interpret=True))
     ok = bool(jnp.all(ops.grau(xq, spec, interpret=True) == grau_ref(xq, spec)))
     print(f"kernel,grau,512x1024,us_interp={us:.0f},bitexact={ok}", flush=True)
-    rows.append({"shape": (512, 1024), "us_fused_interp": us, "bitexact": ok})
+    rows.append({"kernel": "grau", "shape": (512, 1024),
+                 "us_fused_interp": us, "bitexact": ok})
+    return rows
+
+
+def bench_paged_attention(quick: bool):
+    rows = []
+    rng = np.random.default_rng(0)
+    slots, h, kvh, d, bs = 4, 8, 2, 64, 16
+    full_blocks = 32 if quick else 128          # slot capacity in blocks
+    num_blocks = slots * full_blocks + 1
+    lengths = np.array([9, 25, 17, 30], np.int32)   # live << capacity
+    live_blocks = int(max(-(-int(n) // bs) for n in lengths))
+    bucket = 1 << (live_blocks - 1).bit_length()
+
+    q = jnp.asarray(rng.normal(size=(slots, h, d)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(num_blocks, bs, kvh, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(num_blocks, bs, kvh, d)), jnp.float32)
+    table = np.zeros((slots, full_blocks), np.int32)
+    free = list(range(1, num_blocks))
+    rng.shuffle(free)
+    for s in range(slots):
+        for j in range(-(-int(lengths[s]) // bs)):
+            table[s, j] = free.pop()
+    bt = jnp.asarray(table)
+    ln = jnp.asarray(lengths)
+
+    want = paged_attention_ref(q, kp, vp, bt[:, :bucket], ln)
+    got = paged_attention(q, kp, vp, bt[:, :bucket], ln)
+    close = bool(np.allclose(np.asarray(got), np.asarray(want),
+                             rtol=3e-5, atol=3e-5))
+
+    spec = _grau_spec()
+    gq = paged_attention(q, kp, vp, bt[:, :bucket], ln, spec=spec,
+                         s_in=2**-8)
+    wq = paged_attention_ref(q, kp, vp, bt[:, :bucket], ln, spec=spec,
+                             s_in=2**-8)
+    bitexact = bool(np.array_equal(np.asarray(gq), np.asarray(wq)))
+
+    us_bucket = _time(lambda: paged_attention(q, kp, vp, bt[:, :bucket], ln))
+    us_full = _time(lambda: paged_attention(q, kp, vp, bt, ln))
+    us_gather_bucket = _time(
+        lambda: paged_attention_ref(q, kp, vp, bt[:, :bucket], ln))
+    us_gather_full = _time(lambda: paged_attention_ref(q, kp, vp, bt, ln))
+    live_b, full_b = paged_traffic_model(slots, kvh, h, d, bs, live_blocks,
+                                         full_blocks)
+    row = {
+        "kernel": "paged_attention",
+        "slots": slots, "kv_heads": kvh, "head_dim": d, "block_size": bs,
+        "blocks_per_slot": full_blocks, "live_blocks": live_blocks,
+        "bucket": bucket,
+        "grid_bucket": decode_grid(slots, kvh, bucket),
+        "grid_full": decode_grid(slots, kvh, full_blocks),
+        "us_kernel_interp_bucket": us_bucket,
+        "us_kernel_interp_full_table": us_full,
+        "us_gather_bucket": us_gather_bucket,
+        "us_gather_full_table": us_gather_full,
+        "float_close": close,
+        "grau_epilogue_bitexact": bitexact,
+        "kv_bytes_per_step_live": live_b,
+        "kv_bytes_per_step_full": full_b,
+        "traffic_saving": 1 - live_b / full_b,
+    }
+    rows.append(row)
+    print(f"kernel,paged_attention,slots={slots},bpslot={full_blocks},"
+          f"live={live_blocks},us_interp_bucket={us_bucket:.0f},"
+          f"us_interp_full={us_full:.0f},float_close={close},"
+          f"grau_bitexact={bitexact},"
+          f"kv_traffic_saving={100 * (1 - live_b / full_b):.1f}%",
+          flush=True)
+    return rows
+
+
+def run(quick: bool = False, out: str | None = None):
+    rows = bench_matmul_grau(quick) + bench_paged_attention(quick)
+    if out:
+        with open(out, "w") as f:
+            json.dump({"rows": rows}, f, indent=2, default=str)
+        print(f"wrote {out}", flush=True)
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="BENCH_kernels.json")
+    args = ap.parse_args()
+    run(quick=args.quick, out=args.out)

@@ -7,10 +7,24 @@ with float activations and with GRAU-quantized (QAT surrogate) activations —
 the paper's serving story is that the GRAU unit makes the quantized column
 cheap in hardware, and this bench gives the apples-to-apples software oracle.
 
-    PYTHONPATH=src python benchmarks/serving_bench.py --out serving_report.json
+The `decode_scaling` section is the paged-attention acceptance measurement:
+at a large `blocks_per_slot` (long slot capacity, short live requests) it
+serves the same trace through
+
+  * `dense_gather_full`  — the pre-PR decode path: every tick gathers each
+    slot's *entire* block-table row into a dense view (decode cost follows
+    pool capacity), and
+  * `paged_bucketed`     — the decode-bucket path (Pallas kernel on TPU,
+    bucketed gather on host CPU): decode cost follows live tokens,
+
+and reports tokens/sec for both plus per-step gathered bytes from the
+trip-count-aware HLO cost analysis (engine.decode_cost).
+
+    PYTHONPATH=src python benchmarks/serving_bench.py          # BENCH_serving.json
     PYTHONPATH=src python benchmarks/serving_bench.py --mesh 1x4
       (adds a sharded section: tokens/sec on a 1-device engine vs the same
        trace on a (data x model) mesh over forced host CPU devices)
+    PYTHONPATH=src python benchmarks/serving_bench.py --quick  # CI smoke
 """
 from __future__ import annotations
 
@@ -26,31 +40,18 @@ from repro.configs.archs import get_config
 from repro.launch.mesh import ensure_host_devices, parse_mesh_spec
 from repro.models import lm
 from repro.models.config import GRAUConfig
-from repro.serve import kv_cache as kvc
 from repro.serve.engine import EngineConfig, Request, ServeEngine
 from repro.serve.sampling import SamplingParams
 
 
-def warmup(engine: ServeEngine, trace, sampling: SamplingParams) -> int:
-    """Trace the decode step and every prefill bucket the trace can reach,
-    so timed runs measure serving, not XLA. Returns the warm compile count."""
-    max_ctx = max(len(p) for _, p, _ in trace) - 1
-    buckets = [b for b in engine.buckets
-               if b <= kvc.bucket_for(max_ctx, engine.buckets)]
-    engine.run([Request(rid=10_000 + i, prompt=np.arange(2, 2 + b + 1),
-                        max_new_tokens=2, sampling=sampling)
-                for i, b in enumerate(buckets)])
-    return engine.compile_count()
-
-
 def synth_trace(n: int, mean_interarrival_ticks: float, vocab: int,
-                max_new: int, seed: int):
+                max_new: int, seed: int, max_prompt: int = 24):
     """Poisson arrivals: (arrival_tick, prompt, max_new) per request."""
     rng = np.random.default_rng(seed)
     gaps = rng.exponential(mean_interarrival_ticks, size=n)
     arrivals = np.floor(np.cumsum(gaps)).astype(int)
     return [(int(a),
-             rng.integers(2, vocab, size=int(rng.integers(4, 24))),
+             rng.integers(2, vocab, size=int(rng.integers(4, max_prompt))),
              max_new)
             for a in arrivals]
 
@@ -86,10 +87,71 @@ def run_trace(engine: ServeEngine, trace, sampling: SamplingParams,
         "ttft_mean_s": float(np.mean(ttfts)),
         "ttft_p50_s": float(np.percentile(ttfts, 50)),
         "ttft_p90_s": float(np.percentile(ttfts, 90)),
+        "ttft_p99_s": float(np.percentile(ttfts, 99)),
         "ticks": ticks,
         "compiles": engine.compile_count(),
         "backend": "paged" if engine.paged else "dense",
     }
+
+
+def bench_decode_scaling(cfg, params, args):
+    """Pre-PR full-table gather vs bucketed decode at large blocks_per_slot.
+
+    The trace is deliberately long (hundreds of decode ticks) and each
+    variant is timed `--scaling-reps` times with the median reported: the
+    per-tick wall cost on host CPU is small enough that a single short
+    window would be dominated by scheduler noise, which the CI regression
+    gate must not be.
+    """
+    trace = synth_trace(args.scaling_requests, 1.0, cfg.vocab_size,
+                        max(args.max_new, 16), args.seed)
+    base = dict(slots=max(args.slots, 8), max_seq=args.scaling_max_seq,
+                page_size=16, seed=args.seed)
+    blocks_per_slot = -(-args.scaling_max_seq // 16)
+    # the largest context the trace can reach decides which decode bucket
+    # the bucketed engine actually runs — report decode_cost for that one
+    max_ctx = max(len(p) + m for _, p, m in trace)
+    live_blocks = -(-(max_ctx + 1) // 16)
+    variants = {
+        # pre-PR cost model: one decode signature whose block table always
+        # spans the whole slot capacity
+        "dense_gather_full": EngineConfig(
+            decode_buckets=(blocks_per_slot,), paged_impl="gather", **base),
+        # the shipped path (auto impl: Pallas kernel on TPU, bucketed
+        # gather on host CPU)
+        "paged_bucketed": EngineConfig(**base),
+    }
+    out = {"blocks_per_slot": blocks_per_slot,
+           "max_seq": args.scaling_max_seq, "slots": base["slots"]}
+    for name, ecfg in variants.items():
+        reps = []
+        for _ in range(args.scaling_reps):
+            engine = ServeEngine(cfg, params, ecfg)
+            engine.warmup()
+            reps.append(run_trace(engine, trace, SamplingParams()))
+        stats = sorted(reps, key=lambda s: s["tokens_per_s"])[len(reps) // 2]
+        stats["tokens_per_s_reps"] = [r["tokens_per_s"] for r in reps]
+        from repro.serve import kv_cache as kvc
+        bucket = kvc.bucket_for(min(live_blocks, blocks_per_slot),
+                                engine.decode_buckets)
+        cost = engine.decode_cost(bucket if name == "paged_bucketed"
+                                  else blocks_per_slot)
+        stats["decode_cost_per_step"] = cost
+        stats["paged_impl"] = engine.paged_impl
+        out[name] = stats
+        print(f"decode_scaling/{name}: {stats['tokens_per_s']:.1f} tok/s "
+              f"[{engine.paged_impl}], gathered {cost['gather_bytes']:.0f} "
+              "B/step", flush=True)
+    out["speedup"] = (out["paged_bucketed"]["tokens_per_s"]
+                      / max(out["dense_gather_full"]["tokens_per_s"], 1e-9))
+    out["gather_bytes_ratio"] = (
+        out["dense_gather_full"]["decode_cost_per_step"]["gather_bytes"]
+        / max(out["paged_bucketed"]["decode_cost_per_step"]["gather_bytes"],
+              1e-9))
+    print(f"decode_scaling: {out['speedup']:.2f}x tokens/sec, "
+          f"{out['gather_bytes_ratio']:.1f}x fewer gathered bytes/step",
+          flush=True)
+    return out
 
 
 def main() -> None:
@@ -101,12 +163,27 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--interarrival", type=float, default=2.0,
                     help="mean request inter-arrival time in decode ticks")
+    ap.add_argument("--scaling-max-seq", type=int, default=2048,
+                    help="slot capacity for the decode_scaling section")
+    ap.add_argument("--scaling-requests", type=int, default=48)
+    ap.add_argument("--scaling-reps", type=int, default=3,
+                    help="repetitions per decode_scaling variant (median)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizes: fewer requests, smaller capacity")
     ap.add_argument("--mesh", default=None,
                     help="also benchmark sharded serving on a 'M' or 'DxM' "
                          "mesh (forces host devices on CPU) vs 1 device")
-    ap.add_argument("--out", default=None, help="write the JSON report here")
+    ap.add_argument("--out", default="BENCH_serving.json",
+                    help="write the JSON report here")
     args = ap.parse_args()
+    if args.quick:
+        # shrink the float/grau trace, NOT the scaling section's slot
+        # capacity or tick count: the decode_scaling ratio only separates
+        # cleanly from scheduler noise with a long trace at large
+        # blocks_per_slot
+        args.requests = 6
+        args.scaling_requests = 32
 
     mesh_shape = parse_mesh_spec(args.mesh) if args.mesh else None
     if mesh_shape:
@@ -136,7 +213,7 @@ def main() -> None:
                 cfg, params,
                 EngineConfig(slots=args.slots, max_seq=args.max_seq,
                              seed=args.seed))
-            warm_compiles = warmup(engine, trace, sampling)
+            warm_compiles = engine.warmup()
 
             stats = run_trace(engine, trace, sampling)
             stats["recompiles_after_warmup"] = (engine.compile_count()
@@ -145,9 +222,14 @@ def main() -> None:
             print(f"{act_name}/{samp_name}: "
                   f"{stats['tokens_per_s']:.1f} tok/s, "
                   f"TTFT p50 {stats['ttft_p50_s'] * 1e3:.1f} ms, "
-                  f"p90 {stats['ttft_p90_s'] * 1e3:.1f} ms "
+                  f"p99 {stats['ttft_p99_s'] * 1e3:.1f} ms "
                   f"[{stats['backend']}, "
-                  f"{stats['recompiles_after_warmup']} recompiles]")
+                  f"{stats['recompiles_after_warmup']} recompiles]",
+                  flush=True)
+
+    params, _ = lm.init_lm(base_cfg, jax.random.PRNGKey(0),
+                           dtype=jax.numpy.float32)
+    report["decode_scaling"] = bench_decode_scaling(base_cfg, params, args)
 
     if mesh_shape:
         # sharded vs single-device: same float/greedy trace, so the delta is
@@ -155,8 +237,6 @@ def main() -> None:
         # speedup — the point is the apples-to-apples wiring and the report
         # format, which carries over unchanged to real accelerators)
         from repro.launch.mesh import make_serve_mesh
-        params, _ = lm.init_lm(base_cfg, jax.random.PRNGKey(0),
-                               dtype=jax.numpy.float32)
         report["mesh_comparison"] = {}
         meshes = {"1 device": None,
                   f"{mesh_shape[0]}x{mesh_shape[1]} mesh":
@@ -167,14 +247,15 @@ def main() -> None:
                 EngineConfig(slots=args.slots, max_seq=args.max_seq,
                              seed=args.seed),
                 mesh=mesh)
-            warm_compiles = warmup(engine, trace, SamplingParams())
+            warm_compiles = engine.warmup()
             stats = run_trace(engine, trace, SamplingParams())
             stats["recompiles_after_warmup"] = (engine.compile_count()
                                                 - warm_compiles)
             report["mesh_comparison"][label] = stats
             print(f"mesh {label}: {stats['tokens_per_s']:.1f} tok/s, "
                   f"TTFT p50 {stats['ttft_p50_s'] * 1e3:.1f} ms "
-                  f"[{stats['recompiles_after_warmup']} recompiles]")
+                  f"[{stats['recompiles_after_warmup']} recompiles]",
+                  flush=True)
 
     payload = json.dumps(report, indent=2)
     if args.out:

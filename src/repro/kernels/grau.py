@@ -36,20 +36,16 @@ from repro.pwlf.spec import MAX_EXPONENTS, MAX_SEGMENTS
 DEFAULT_BLOCK = (256, 512)
 
 
-def _grau_kernel(
-    bp_ref,        # (1, MAX_SEGMENTS-1) int32 SMEM
-    encp_ref,      # (1, MAX_SEGMENTS)   int32 SMEM (bit-packed enc rows)
-    sign_ref,      # (1, MAX_SEGMENTS)   int32 SMEM
-    bias_ref,      # (1, MAX_SEGMENTS)   int32 SMEM
-    pre_ref,       # (1, 1)              int32 SMEM
-    x_ref,         # (bm, bn) int32 VMEM
-    o_ref,         # (bm, bn) int8  VMEM
-    *,
-    num_exponents: int,
-    qmin: int,
-    qmax: int,
-):
-    x = x_ref[...]
+def grau_datapath(x, bp_ref, encp_ref, sign_ref, bias_ref, pre_ref, *,
+                  num_exponents: int, qmin: int, qmax: int):
+    """The shared in-kernel GRAU datapath: int32 array -> clipped int32.
+
+    Register-file refs are (1, MAX_SEGMENTS[-1]) / (1, 1) SMEM scalars (plain
+    kernel inputs or scalar-prefetch args — both index the same way). Every
+    GRAU-bearing kernel (standalone unit, GEMM epilogue, paged-attention
+    epilogue) calls this one function, so the executable RTL spec exists in
+    exactly one place.
+    """
     pre = pre_ref[0, 0]
 
     # --- comparator bank -> per-element segment index -------------------
@@ -79,8 +75,26 @@ def _grau_kernel(
         fire = (jnp.right_shift(bits, k) & 1) != 0
         acc += jnp.where(fire, term, 0)
 
-    y = sign * acc + bias
-    o_ref[...] = jnp.clip(y, qmin, qmax).astype(o_ref.dtype)
+    return jnp.clip(sign * acc + bias, qmin, qmax)
+
+
+def _grau_kernel(
+    bp_ref,        # (1, MAX_SEGMENTS-1) int32 SMEM
+    encp_ref,      # (1, MAX_SEGMENTS)   int32 SMEM (bit-packed enc rows)
+    sign_ref,      # (1, MAX_SEGMENTS)   int32 SMEM
+    bias_ref,      # (1, MAX_SEGMENTS)   int32 SMEM
+    pre_ref,       # (1, 1)              int32 SMEM
+    x_ref,         # (bm, bn) int32 VMEM
+    o_ref,         # (bm, bn) int8  VMEM
+    *,
+    num_exponents: int,
+    qmin: int,
+    qmax: int,
+):
+    y = grau_datapath(x_ref[...], bp_ref, encp_ref, sign_ref, bias_ref,
+                      pre_ref, num_exponents=num_exponents, qmin=qmin,
+                      qmax=qmax)
+    o_ref[...] = y.astype(o_ref.dtype)
 
 
 @functools.partial(

@@ -24,6 +24,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.compat import tpu_compiler_params
+from repro.kernels.grau import grau_datapath
 from repro.pwlf.spec import MAX_SEGMENTS
 
 DEFAULT_TILES = (256, 256, 512)
@@ -52,31 +53,10 @@ def _mm_grau_kernel(
 
     @pl.when(pl.program_id(2) == k_steps - 1)
     def _epilogue():
-        x = acc_ref[...]
-        pre = pre_ref[0, 0]
-        seg = jnp.zeros(x.shape, jnp.int32)
-        for i in range(MAX_SEGMENTS - 1):
-            seg += (x > bp_ref[0, i]).astype(jnp.int32)
-        bits = jnp.zeros(x.shape, jnp.int32)
-        sign = jnp.zeros(x.shape, jnp.int32)
-        bias = jnp.zeros(x.shape, jnp.int32)
-        for s in range(MAX_SEGMENTS):
-            m = seg == s
-            bits = jnp.where(m, encp_ref[0, s], bits)
-            sign = jnp.where(m, sign_ref[0, s], sign)
-            bias = jnp.where(m, bias_ref[0, s], bias)
-        acc = jnp.zeros(x.shape, jnp.int32)
-        for k in range(num_exponents):
-            s_amt = pre + k
-            term = jnp.where(
-                s_amt >= 0,
-                jnp.right_shift(x, jnp.maximum(s_amt, 0)),
-                jnp.left_shift(x, jnp.maximum(-s_amt, 0)),
-            )
-            fire = (jnp.right_shift(bits, k) & 1) != 0
-            acc += jnp.where(fire, term, 0)
-        y = sign * acc + bias
-        o_ref[...] = jnp.clip(y, qmin, qmax).astype(o_ref.dtype)
+        y = grau_datapath(acc_ref[...], bp_ref, encp_ref, sign_ref, bias_ref,
+                          pre_ref, num_exponents=num_exponents, qmin=qmin,
+                          qmax=qmax)
+        o_ref[...] = y.astype(o_ref.dtype)
 
 
 @functools.partial(

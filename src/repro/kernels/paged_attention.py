@@ -1,0 +1,235 @@
+"""Pallas paged-attention decode kernel: flash decode *through* the block
+table, so per-step HBM traffic scales with live tokens, not pool capacity.
+
+The serving engine stores K/V in a shared pool of fixed-size blocks
+(nn/attention.PagedKVCache); a slot owns only the blocks its sequence
+occupies.  The pre-existing decode path gathered every slot's whole
+block-table row into a dense (slots, blocks_per_slot * block_size, kvh, hd)
+view per layer per tick — O(slot capacity) HBM reads regardless of how short
+the live sequences are.  This kernel is the vLLM-style fix: the block table
+and per-slot lengths are *scalar-prefetched*, the BlockSpec index map resolves
+`block_table[slot, j]` to pick which pool block the next grid step DMAs, and
+an online-softmax (flash) recurrence accumulates over exactly the mapped
+blocks.  Dead grid steps (j beyond a slot's live blocks) clamp the index map
+to the last live block — Pallas elides the re-fetch when consecutive indices
+match — and `pl.when` skips their compute, so both DMA bytes and FLOPs follow
+`lengths`, not `blocks_per_slot`.
+
+Grid: (slots, kv_heads, nblocks), block axis innermost with the online-softmax
+carry (m, l, acc) in VMEM scratch — the decode analogue of
+kernels/flash_attention.py.  GQA is native: one grid row loads a kv head's
+block once and attends all `h // kvh` query heads against it.
+
+Epilogue: optionally fused GRAU quantization ("End-to-End MAC to Quant" for
+the attention output) — the normalized f32 output is scaled into the int32
+MAC domain and pushed through the same `grau_datapath` as the GEMM kernels,
+writing int8/uint8 straight to HBM.  The register file rides in as scalar
+prefetch, so reconfiguring the activation/precision never recompiles.
+
+On non-TPU backends the kernel runs in interpret mode (functionally exact,
+used by the differential tests); the serving engine's CPU hot path is the
+bucketed dense gather (nn/attention.paged_view with `max_blocks`), which
+scales the same way — see docs/perf.md.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.grau import grau_datapath
+from repro.pwlf.spec import GRAUSpec
+
+NEG_INF = -1e30
+
+
+def decode_grid(slots: int, kv_heads: int, nblocks: int) -> Tuple[int, int, int]:
+    """The kernel's grid for a decode step over `nblocks` table columns.
+
+    Exposed so tests can assert the work scales with the live-block bucket
+    (`nblocks`), never with the pool's block count.
+    """
+    return (slots, kv_heads, nblocks)
+
+
+def _live_blocks(length, block_size: int):
+    # ceil(length / block_size), clamped to >= 1 so idle slots (length 0)
+    # still resolve a block index (the null block; output is ignored).
+    return jnp.maximum(pl.cdiv(length, block_size), 1)
+
+
+def _attend_block(s, j, len_ref, q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref,
+                  *, block_size: int, scale: float):
+    """One (slot, kv_head, block) tile of the online-softmax recurrence.
+
+    `s`/`j` are passed in (not re-read via pl.program_id) because this runs
+    inside a pl.when body, where interpret mode cannot substitute program_id.
+    """
+    q = q_ref[0, 0].astype(jnp.float32)              # (g, d)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)        # (bs, d)
+    lg = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    pos = j * block_size + jax.lax.broadcasted_iota(jnp.int32, lg.shape, 1)
+    lg = jnp.where(pos < len_ref[s], lg, NEG_INF)
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(lg, axis=-1, keepdims=True))
+    p = jnp.exp(lg - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+
+def _make_paged_kernel(*, block_size: int, nblocks: int, scale: float,
+                       quant: Optional[Tuple[int, int, int]] = None):
+    """One kernel body for both epilogues; `quant` (num_exponents, qmin,
+    qmax) switches the finish step to the fused GRAU datapath (whose
+    register-file refs then precede the tensor refs as scalar prefetch)."""
+
+    def kernel(bt_ref, len_ref, *refs):
+        if quant is None:
+            q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
+        else:
+            (bp_ref, encp_ref, sign_ref, bias_ref, pre_ref, sbits_ref,
+             q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref) = refs
+        s = pl.program_id(0)
+        j = pl.program_id(2)
+
+        @pl.when(j == 0)
+        def _init():
+            m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        @pl.when(j < _live_blocks(len_ref[s], block_size))
+        def _blk():
+            _attend_block(s, j, len_ref, q_ref, k_ref, v_ref, m_ref, l_ref,
+                          acc_ref, block_size=block_size, scale=scale)
+
+        @pl.when(j == nblocks - 1)
+        def _finish():
+            out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+            if quant is None:
+                o_ref[0, 0] = out.astype(o_ref.dtype)
+                return
+            num_exponents, qmin, qmax = quant
+            # the f32 -> int32 MAC-domain scale rides in as raw float bits
+            # (scalar prefetch is int32); reconstructing via bitcast keeps
+            # it runtime data
+            inv_s = jax.lax.bitcast_convert_type(sbits_ref[0, 0],
+                                                 jnp.float32)
+            xq = jnp.round(out * inv_s).astype(jnp.int32)
+            y = grau_datapath(xq, bp_ref, encp_ref, sign_ref, bias_ref,
+                              pre_ref, num_exponents=num_exponents,
+                              qmin=qmin, qmax=qmax)
+            o_ref[0, 0] = y.astype(o_ref.dtype)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "s_in", "interpret"))
+def _paged_attention_jit(
+    q: jax.Array,             # (slots, h, d)
+    k_pool: jax.Array,        # (num_blocks, block_size, kvh, d)
+    v_pool: jax.Array,
+    block_table: jax.Array,   # (slots, nblocks) int32; 0 = null block
+    lengths: jax.Array,       # (slots,) int32 — positions to attend per slot
+    spec: Optional[GRAUSpec],
+    *,
+    scale: Optional[float],
+    s_in: Optional[float],
+    interpret: bool,
+) -> jax.Array:
+    slots, h, d = q.shape
+    nb, block_size, kvh = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    assert h % kvh == 0, (h, kvh)
+    g = h // kvh
+    nblocks = block_table.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(slots, kvh, g, d)
+
+    def q_index(s, hh, j, *_refs):
+        return (s, hh, 0, 0)
+
+    def kv_index(s, hh, j, bt_ref, len_ref, *_rest):
+        # clamp dead steps to the last live block: consecutive equal indices
+        # make Pallas skip the re-fetch, so dead capacity costs no DMA
+        jj = jnp.minimum(j, _live_blocks(len_ref[s], block_size) - 1)
+        return (bt_ref[s, jj], 0, hh, 0)
+
+    scalars = [block_table.astype(jnp.int32), lengths.astype(jnp.int32)]
+    if spec is None:
+        kernel = _make_paged_kernel(block_size=block_size, nblocks=nblocks,
+                                    scale=scale)
+        out_dtype = q.dtype
+    else:
+        assert s_in is not None, "GRAU epilogue needs the MAC-domain scale"
+        from repro.kernels.ops import pack_spec
+        bp, encp, sign, bias, pre = pack_spec(spec)
+        sbits = jnp.asarray(np.float32(1.0 / s_in).view(np.int32))
+        scalars += [bp.reshape(1, -1), encp.reshape(1, -1),
+                    sign.reshape(1, -1), bias.reshape(1, -1),
+                    pre.reshape(1, 1), sbits.reshape(1, 1)]
+        kernel = _make_paged_kernel(
+            block_size=block_size, nblocks=nblocks, scale=scale,
+            quant=(spec.num_exponents, spec.qmin, spec.qmax))
+        out_dtype = jnp.int8 if spec.qmin < 0 else jnp.uint8
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=len(scalars),
+        grid=decode_grid(slots, kvh, nblocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), q_index),
+            pl.BlockSpec((1, block_size, 1, d), kv_index),
+            pl.BlockSpec((1, block_size, 1, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), q_index),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((slots, kvh, g, d), out_dtype),
+        interpret=interpret,
+    )(*scalars, qg, k_pool, v_pool)
+    return out.reshape(slots, h, d)
+
+
+def paged_attention(
+    q: jax.Array,             # (slots, h, d)
+    k_pool: jax.Array,        # (num_blocks, block_size, kvh, d)
+    v_pool: jax.Array,
+    block_table: jax.Array,   # (slots, nblocks) int32; 0 = null block
+    lengths: jax.Array,       # (slots,) int32 — positions to attend per slot
+    *,
+    scale: Optional[float] = None,
+    spec: Optional[GRAUSpec] = None,
+    s_in: Optional[float] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Flash decode over the mapped blocks of each slot.
+
+    `nblocks` (the table width) is the live-block bucket the caller chose —
+    the engine slices its full table to the smallest bucket covering the
+    longest live sequence, so the grid never covers dead capacity.  With
+    `spec` (+ `s_in`, the f32->MAC-domain scale), the GRAU epilogue quantizes
+    the output to the spec's 8-bit bus; otherwise output dtype follows q.
+
+    Jitted (interpret-mode pallas_call needs a jit context); the GRAUSpec
+    register file is a pytree argument, so reconfiguring the epilogue's
+    activation or precision never retraces.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _paged_attention_jit(q, k_pool, v_pool, block_table, lengths, spec,
+                                scale=scale, s_in=s_in, interpret=interpret)

@@ -1,11 +1,15 @@
 """Pure-jnp oracles for the Pallas kernels (the correctness ground truth)."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
 from repro.core.grau import grau_apply_int
 from repro.pwlf.spec import GRAUSpec
+
+NEG_INF = -1e30
 
 
 def _out_dtype(spec: GRAUSpec):
@@ -28,3 +32,46 @@ def matmul_grau_ref(x: jax.Array, w: jax.Array, spec: GRAUSpec) -> jax.Array:
         x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
     )
     return grau_apply_int(acc, spec).astype(_out_dtype(spec))
+
+
+def attn_output_quant(o: jax.Array, spec: GRAUSpec, s_in: float) -> jax.Array:
+    """The GRAU attention-output epilogue's math, on an f32 attention output:
+    scale into the int32 MAC domain, run the datapath, emit the 8-bit bus."""
+    xq = jnp.round(o.astype(jnp.float32) * (1.0 / s_in)).astype(jnp.int32)
+    return grau_apply_int(xq, spec).astype(_out_dtype(spec))
+
+
+def paged_attention_ref(
+    q: jax.Array,             # (slots, h, d)
+    k_pool: jax.Array,        # (num_blocks, block_size, kvh, d)
+    v_pool: jax.Array,
+    block_table: jax.Array,   # (slots, nblocks) int32
+    lengths: jax.Array,       # (slots,) int32 — attended positions per slot
+    *,
+    scale: Optional[float] = None,
+    spec: Optional[GRAUSpec] = None,
+    s_in: Optional[float] = None,
+) -> jax.Array:
+    """Oracle for kernels/paged_attention.py: gather the dense per-slot view
+    through the block table (exactly nn/attention.paged_view's layout), run
+    masked softmax attention, optionally apply the GRAU output epilogue."""
+    slots, h, d = q.shape
+    block_size, kvh = k_pool.shape[1], k_pool.shape[2]
+    nblocks = block_table.shape[1]
+    g = h // kvh
+    scale = scale if scale is not None else d ** -0.5
+    seq = nblocks * block_size
+    kd = k_pool[block_table].reshape(slots, seq, kvh, d)
+    vd = v_pool[block_table].reshape(slots, seq, kvh, d)
+    qg = q.reshape(slots, kvh, g, d)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                        kd.astype(jnp.float32)) * scale
+    valid = jnp.arange(seq)[None] < lengths[:, None]
+    logits = jnp.where(valid[:, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, vd.astype(jnp.float32))
+    o = o.reshape(slots, h, d)
+    if spec is not None:
+        assert s_in is not None
+        return attn_output_quant(o, spec, s_in)
+    return o.astype(q.dtype)

@@ -141,7 +141,8 @@ REMAT_POLICIES = {
 
 
 def _run_group(params, caches, x, period, cfg, *, positions, act, encoder_out,
-               mode, q_chunk, kv_chunk, remat=None, paged=None):
+               mode, q_chunk, kv_chunk, remat=None, paged=None,
+               paged_impl="gather", attn_quant=None):
     """Scan one (period, repeats) group. caches: tuple per period-layer or None."""
     use_caches = caches is not None
 
@@ -158,6 +159,7 @@ def _run_group(params, caches, x, period, cfg, *, positions, act, encoder_out,
                 layer_params[f"l{li}"], h, spec, cfg, positions=positions,
                 act=act, cache=c, encoder_out=encoder_out, mode=mode,
                 q_chunk=q_chunk, kv_chunk=kv_chunk, paged=paged,
+                paged_impl=paged_impl, attn_quant=attn_quant,
             )
             new_caches.append(c_new)
             aux = aux + a
@@ -190,6 +192,8 @@ def apply_lm(
     kv_chunk: int = 1024,
     remat: Optional[str] = None,          # None | "dots" | "full"
     paged: Optional[PagedState] = None,   # paged-KV decode (serve/kv_cache.py)
+    paged_impl: str = "gather",           # "gather" | "kernel" (Pallas)
+    attn_quant=None,                      # nn.attention.AttnQuant epilogue
 ) -> Tuple[jax.Array, Any, jax.Array]:
     """Returns (logits, new_caches, aux_loss)."""
     act = act or make_act(cfg)
@@ -217,7 +221,8 @@ def apply_lm(
         x, aux, ys = _run_group(
             params[f"group{gi}"], gcaches, x, period, cfg,
             positions=positions, act=act, encoder_out=encoder_out, mode=mode,
-            q_chunk=q_chunk, kv_chunk=kv_chunk, remat=remat, paged=paged)
+            q_chunk=q_chunk, kv_chunk=kv_chunk, remat=remat, paged=paged,
+            paged_impl=paged_impl, attn_quant=attn_quant)
         aux_total = aux_total + aux
         new_caches.append(ys)
 
@@ -276,15 +281,19 @@ def run_encoder(params, cfg: ModelConfig, frames: jax.Array, *, act=None,
 
 def decode_step(params, cfg: ModelConfig, tokens: jax.Array, caches, *,
                 act=None, encoder_out: Optional[jax.Array] = None,
-                paged: Optional[PagedState] = None):
+                paged: Optional[PagedState] = None,
+                paged_impl: str = "gather", attn_quant=None):
     """One serving step: tokens (b, 1) + caches -> (logits, new caches).
 
     For enc-dec models pass precomputed `encoder_out` (computed once at
     request admission, not per token). With `paged`, caches are PagedKVCache
-    pools and per-slot positions come from `paged.length`."""
+    pools and per-slot positions come from `paged.length`; `paged.block_table`
+    may be bucket-sliced to the live-block count, and `paged_impl` picks the
+    Pallas flash-decode kernel vs the gathered dense-view fallback."""
     logits, new_caches, _ = apply_lm(
         params, cfg, tokens, mode="decode", caches=caches, act=act,
-        encoder_out=encoder_out, positions=None, paged=paged)
+        encoder_out=encoder_out, positions=None, paged=paged,
+        paged_impl=paged_impl, attn_quant=attn_quant)
     return logits, new_caches
 
 

@@ -14,7 +14,7 @@ lowers to a psum — flash-decoding-style partial reduction, for free via GSPMD.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -212,22 +212,29 @@ def paged_update(cache: PagedKVCache, k_new: jax.Array, v_new: jax.Array,
     )
 
 
-def paged_view(cache: PagedKVCache, st: PagedState) -> Tuple[jax.Array, jax.Array]:
+def paged_view(cache: PagedKVCache, st: PagedState,
+               max_blocks: Optional[int] = None) -> Tuple[jax.Array, jax.Array]:
     """Gather each slot's blocks into a dense (slots, logical_seq, ...) view.
 
     The view is transient (one decode step); persistent storage stays paged.
     Garbage read through null-block entries is masked by `length` downstream.
+    With `max_blocks`, only the first `max_blocks` table columns are gathered
+    — the engine passes its live-block bucket here, so the view's footprint
+    scales with live context instead of slot capacity (the serving engine
+    usually pre-slices the table instead; both spellings are equivalent).
     Under a sharding context the gathered view is pinned to the pool's layout
     (kv heads / head_dim on `model`, slots on the data axes) so GSPMD doesn't
     rematerialize the view when the reshape changes the dim structure.
     """
-    slots, blocks_per_slot = st.block_table.shape
+    table = (st.block_table if max_blocks is None
+             else st.block_table[:, :max_blocks])
+    slots, blocks_per_slot = table.shape
     block_size = cache.k.shape[1]
     kvh, hd = cache.k.shape[2], cache.k.shape[3]
     seq = blocks_per_slot * block_size
 
     def view(pool):
-        dense = pool[st.block_table]
+        dense = pool[table]
         dense = shard_ctx.constrain(dense, "batch", None, None,
                                     "kv_heads", "head_dim")
         dense = dense.reshape(slots, seq, kvh, hd)
@@ -235,6 +242,58 @@ def paged_view(cache: PagedKVCache, st: PagedState) -> Tuple[jax.Array, jax.Arra
                                    "kv_heads", "head_dim")
 
     return view(cache.k), view(cache.v)
+
+
+class AttnQuant(NamedTuple):
+    """GRAU register file + scales for the fused attention-output epilogue.
+
+    `spec` is the unit's register file, `s_in` maps the f32 attention output
+    into its int32 MAC domain, `s_out` dequantizes the 8-bit bus back to f32
+    for the output projection (serve/engine wires this from a GRAUActivation).
+    """
+    spec: Any
+    s_in: float
+    s_out: float
+
+
+def paged_decode_attention(
+    q: jax.Array,                     # (b, 1, h, d)
+    cache: PagedKVCache,
+    st: PagedState,                   # table possibly bucket-sliced; length =
+                                      # positions already written - 1
+    *,
+    impl: str = "gather",             # "gather" | "kernel"
+    quant: Optional[AttnQuant] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """One-token attention over a slot's mapped blocks (current token already
+    written via `paged_update`, hence `st.length + 1` attended positions).
+
+    impl="kernel" runs the Pallas flash-decode kernel
+    (kernels/paged_attention.py); impl="gather" is the dense-view fallback and
+    differential-test oracle.  Both honor the optional fused GRAU output
+    epilogue and return (b, 1, h, d) float (dequantized when quantizing).
+    """
+    b, _, h, d = q.shape
+    lengths = st.length + 1
+    if impl == "kernel":
+        from repro.kernels import paged_attention as paged_kernel
+        o = paged_kernel.paged_attention(
+            q[:, 0], cache.k, cache.v, st.block_table, lengths, scale=scale,
+            spec=quant.spec if quant is not None else None,
+            s_in=quant.s_in if quant is not None else None)
+        if quant is not None:
+            o = o.astype(jnp.float32) * quant.s_out
+        return o[:, None].astype(q.dtype)
+    if impl != "gather":
+        raise ValueError(f"unknown paged decode impl {impl!r}")
+    kd, vd = paged_view(cache, st)
+    o = decode_attention(q, KVCache(kd, vd, lengths), scale=scale)
+    if quant is not None:
+        from repro.kernels.ref import attn_output_quant
+        oq = attn_output_quant(o[:, 0], quant.spec, quant.s_in)
+        o = (oq.astype(jnp.float32) * quant.s_out)[:, None].astype(q.dtype)
+    return o
 
 
 # ---------------------------------------------------------------------------

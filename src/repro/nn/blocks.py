@@ -126,19 +126,23 @@ def apply_attention(
 
 def decode_attention_block(
     params, x, cfg, *, cache, paged: Optional[PagedState] = None,
+    paged_impl: str = "gather", attn_quant=None,
 ) -> Tuple[jax.Array, Any]:
     """One-token decode. x: (b, 1, d).
 
     With `paged`, `cache` is a PagedKVCache pool: the new position is written
-    through the block table and attention runs over a gathered dense view."""
+    through the block table and attention runs over the mapped blocks — via
+    the Pallas flash-decode kernel (paged_impl="kernel") or the gathered
+    dense-view fallback ("gather"); `attn_quant` fuses the GRAU output
+    epilogue on either path."""
     q, k, v = _qkv(params, x, cfg)
     if paged is not None:
         pos = paged.length[:, None]                              # (b,1)
         q = apply_rope(q, pos, cfg.rope_theta)
         k = apply_rope(k, pos, cfg.rope_theta)
         cache = attn_lib.paged_update(cache, k, v, paged)
-        kd, vd = attn_lib.paged_view(cache, paged)
-        o = attn_lib.decode_attention(q, KVCache(kd, vd, paged.length + 1))
+        o = attn_lib.paged_decode_attention(q, cache, paged, impl=paged_impl,
+                                            quant=attn_quant)
         return jnp.einsum("bshk,hkd->bsd", o, params["wo"]), cache
     pos = cache.length[:, None]                                  # (b,1)
     q = apply_rope(q, pos, cfg.rope_theta)
@@ -293,6 +297,7 @@ def apply_layer(
     mode: str = "train",        # "train" | "prefill" | "decode"
     q_chunk: int = 1024, kv_chunk: int = 1024,
     paged: Optional[PagedState] = None,
+    paged_impl: str = "gather", attn_quant=None,
 ) -> Tuple[jax.Array, Any, jax.Array]:
     """Returns (x, new_cache, aux_loss).
 
@@ -311,7 +316,9 @@ def apply_layer(
                 a, cache = decode_mla(p, h, cfg, cache=cache)
             else:
                 a, cache = decode_attention_block(p, h, cfg, cache=cache,
-                                                  paged=paged)
+                                                  paged=paged,
+                                                  paged_impl=paged_impl,
+                                                  attn_quant=attn_quant)
         else:
             want_cache = cache if mode == "prefill" else None
             if cfg.mla is not None:

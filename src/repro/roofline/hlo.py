@@ -78,6 +78,11 @@ class Totals:
     dot_bytes: float = 0.0      # dot operand+output bytes (fusion-independent lower bound)
     collective: float = 0.0
     collective_by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # output bytes per HLO opcode: lets callers isolate one traffic class —
+    # e.g. `bytes_by_op["gather"]` is the paged decode path's gathered-view
+    # traffic, independent of full-pool-shaped in-place scatter outputs that
+    # donation aliases away at runtime (serve/engine.decode_cost uses this)
+    bytes_by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     def add(self, other: "Totals", mult: float = 1.0):
         self.flops += other.flops * mult
@@ -86,6 +91,8 @@ class Totals:
         self.collective += other.collective * mult
         for k, v in other.collective_by_op.items():
             self.collective_by_op[k] = self.collective_by_op.get(k, 0.0) + v * mult
+        for k, v in other.bytes_by_op.items():
+            self.bytes_by_op[k] = self.bytes_by_op.get(k, 0.0) + v * mult
 
 
 class HLOModule:
@@ -207,7 +214,19 @@ class HLOModule:
             # memory proxy: output bytes of every instruction boundary
             if op not in ("parameter", "constant", "get-tuple-element", "tuple",
                           "bitcast", "while", "call", "conditional"):
-                t.bytes += _shape_bytes(ins.shape)
+                b = _shape_bytes(ins.shape)
+                t.bytes += b
+                t.bytes_by_op[op] = t.bytes_by_op.get(op, 0.0) + b
+                if op == "fusion":
+                    # a gather fused with elementwise ops keeps its traffic
+                    # class: attribute the fusion's bytes to the fused gather
+                    cm = _CALLS.search(ins.rest)
+                    for fins in (self.computations.get(cm.group(1), [])
+                                 if cm else []):
+                        if fins.op == "gather":
+                            t.bytes_by_op["gather"] = (
+                                t.bytes_by_op.get("gather", 0.0) + b)
+                            break
         self._memo[comp] = t
         return t
 

@@ -1,21 +1,34 @@
 """Continuous-batching serving engine: paged KV cache, bucketed jitted
-prefill, pluggable admission scheduling, and static-shape sampling.
+prefill, decode-length buckets, pluggable admission scheduling, and
+static-shape sampling — with a decode hot loop that stays on device.
 
 Request lifecycle: `submit()` enqueues; each `step()` (one decode tick) the
 scheduler admits waiting requests into free slots — one jitted `prefill_step`
 call per admission, padded to a small set of bucketed lengths — then a single
-fused decode+sample jit advances every live slot one token. Slots whose
-sequence hits EOS / max_tokens are retired, their blocks are returned to the
-pool, and the finished request is delivered via `poll()` (or collected in
-completion order by the synchronous `run()`).
+fused decode+sample+terminate jit advances every live slot one token. Slots
+whose sequence hits EOS / max_tokens are flagged *inside* the decode jit;
+the host learns about completions (and delivers tokens, recycles slots and
+blocks) only when the pending tick buffer is drained — `poll()`, a tick with
+admission pressure, or the pending cap — so the decode loop never blocks on a
+device->host sync per token.
+
+Decode cost scales with live tokens, not pool capacity: the paged decode jit
+is traced once per *decode block bucket* (kv_cache.decode_block_buckets) and
+each tick slices the block table to the smallest bucket covering the longest
+live sequence. Attention then runs either through the Pallas flash-decode
+kernel (kernels/paged_attention.py — block-table-driven DMA, the TPU path) or
+the bucketed dense gather (nn/attention.paged_view — the oracle and host-CPU
+path); both touch O(live blocks) of KV, never O(blocks_per_slot).
 
 Static-shape invariants (serving never recompiles after warmup):
-  * the decode+sample step always sees (slots, 1) tokens, the same cache
-    tree, (slots,)-shaped sampler params, and a fresh PRNG key per tick;
+  * the decode+sample step sees (slots, 1) tokens, the same cache tree,
+    (slots,)-shaped slot state and sampler params, and one block-table shape
+    per decode bucket — `warmup()` traces every bucket up front;
   * prefill traces once per bucket length (len(buckets) variants, bounded);
-  * per-request sampling heterogeneity lives in array *values*, never shapes.
-`compile_count()` reports distinct jit signatures so tests can assert the
-invariant directly.
+  * per-request sampling heterogeneity lives in array *values*, never shapes,
+    and the packed sampler batch is rebuilt only on admission, not per tick.
+`compile_count()` reports the number of traces (not a cache-size proxy that
+donation or cache eviction could mask) so tests can assert the invariant.
 
 Cache backends:
   * paged (default for plain GQA/MHA decoders): block-pool storage with
@@ -30,7 +43,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,7 +51,8 @@ import numpy as np
 
 from repro.models import lm
 from repro.models.config import ModelConfig
-from repro.nn.attention import CrossKV, KVCache, MLACache, PagedState
+from repro.nn.attention import (AttnQuant, CrossKV, KVCache, MLACache,
+                                PagedState)
 from repro.nn.mamba2 import SSMState
 from repro.serve import kv_cache as kvc
 from repro.serve import sampling as samp_lib
@@ -67,39 +81,63 @@ class EngineConfig:
     page_size: int = 16           # tokens per KV block
     num_blocks: Optional[int] = None   # pool size; None = no oversubscription
     prefill_buckets: Optional[Tuple[int, ...]] = None
+    decode_buckets: Optional[Tuple[int, ...]] = None  # live-block ladder;
+    # None = auto power-of-two ladder up to blocks_per_slot (paged only)
+    paged_impl: Optional[str] = None   # None = auto ("kernel" on TPU,
+    # "gather" elsewhere/under a mesh) | "kernel" | "gather"
+    attn_grau: Optional[Any] = None    # GRAUActivation-like (spec/s_in/s_out):
+    # fuse the GRAU quantization epilogue on the paged attention output
     policy: str = "fcfs"          # "fcfs" | "prefill" (see serve/scheduler.py)
     max_prefills_per_tick: Optional[int] = None
+    max_pending_ticks: int = 32   # force a host drain after this many
+    # undelivered decode ticks (bounds ghost decode past an unseen EOS)
     seed: int = 0
 
 
 class _CountingJit:
-    """jax.jit wrapper exposing its compile count (distinct traced sigs).
+    """jax.jit wrapper counting actual traces (distinct compilations).
 
-    Counting reads the jit cache size on demand — the decode hot loop pays
-    zero bookkeeping per call. Falls back to hashing input shapes per call
-    only on jax builds without `_cache_size`.
+    The count increments inside the traced function, so nothing can mask a
+    retrace: not donation-induced signature churn, not jit-cache eviction,
+    and not the shape-only hashing a host-side fallback would do (weak-type
+    or sharding-driven retraces have identical shapes). The previous
+    implementation read the jit cache size, which a retrace that *replaces*
+    an evicted entry leaves unchanged.
     """
 
     def __init__(self, fn, name: str, donate_argnums=()):
-        self._jit = jax.jit(fn, donate_argnums=donate_argnums)
         self.name = name
-        self._has_cache_size = hasattr(self._jit, "_cache_size")
-        self._seen = set() if not self._has_cache_size else None
+        self._traces = 0
+
+        def counted(*args):
+            self._traces += 1
+            return fn(*args)
+
+        self._jit = jax.jit(counted, donate_argnums=donate_argnums)
 
     def __call__(self, *args):
-        if not self._has_cache_size:
-            leaves, treedef = jax.tree.flatten(args)
-            self._seen.add((treedef, tuple(
-                (getattr(x, "shape", ()),
-                 str(getattr(x, "dtype", type(x).__name__)))
-                for x in leaves)))
         return self._jit(*args)
 
     @property
     def compiles(self) -> int:
-        if self._has_cache_size:
-            return int(self._jit._cache_size())
-        return len(self._seen)
+        return self._traces
+
+
+class _SlotState(NamedTuple):
+    """Device-resident per-slot decode state, donated through the decode jit
+    every tick (no host round-trip, no per-step buffer copies)."""
+    last_tok: jax.Array    # (slots, 1) int32 — token fed to the next decode
+    lengths: jax.Array     # (slots,) int32 — valid context length (paged pos)
+    remaining: jax.Array   # (slots,) int32 — decode budget left
+    active: jax.Array      # (slots,) bool — slot is generating
+
+
+class _TickRecord(NamedTuple):
+    """One enqueued decode tick awaiting host-side delivery."""
+    tick: int
+    slots: Tuple[int, ...]   # host-believed active slots at enqueue time
+    tokens: jax.Array        # (slots,) int32 sampled tokens (on device)
+    done: jax.Array          # (slots,) bool fused EOS/max-token flags
 
 
 class ServeEngine:
@@ -124,6 +162,32 @@ class ServeEngine:
             raise ValueError(f"{cfg.name}: paged KV cache unsupported "
                              "(SSM/MLA/enc-dec arch); use paged=False")
 
+        if ecfg.paged_impl not in (None, "kernel", "gather"):
+            raise ValueError(f"unknown paged_impl {ecfg.paged_impl!r}")
+        if ecfg.paged_impl is not None and not self.paged:
+            raise ValueError("paged_impl requires the paged backend")
+        if ecfg.attn_grau is not None and not self.paged:
+            raise ValueError("attn_grau epilogue requires the paged backend")
+        if ecfg.paged_impl == "kernel" and mesh is not None:
+            # the Pallas kernel has no GSPMD partitioning rule: under a mesh
+            # it would silently rematerialize per-slot tensors on every step
+            # (see serve/sharding.py); shard_map'ing it is the follow-up
+            raise ValueError("paged_impl='kernel' is not supported under a "
+                             "mesh; use the gather path (auto) for now")
+        if ecfg.paged_impl is not None:
+            self.paged_impl = ecfg.paged_impl
+        else:
+            # the Pallas kernel is the TPU fast path; on host backends its
+            # interpret mode is correctness-only, so serving uses the
+            # bucketed gather there (same O(live tokens) scaling)
+            self.paged_impl = ("kernel" if jax.default_backend() == "tpu"
+                               and mesh is None else "gather")
+        self._attn_quant = None
+        if ecfg.attn_grau is not None:
+            g = ecfg.attn_grau
+            self._attn_quant = AttnQuant(spec=g.spec, s_in=float(g.s_in),
+                                         s_out=float(g.s_out))
+
         if self.paged:
             self.blocks_per_slot = kvc.blocks_for(ecfg.max_seq, ecfg.page_size)
             num_blocks = (ecfg.num_blocks if ecfg.num_blocks is not None else
@@ -134,9 +198,20 @@ class ServeEngine:
                                                 ecfg.page_size, dtype=dtype)
             self.block_table = np.zeros(
                 (ecfg.slots, self.blocks_per_slot), np.int32)
+            if ecfg.decode_buckets is not None:
+                self.decode_buckets = tuple(sorted(set(ecfg.decode_buckets)))
+                if (self.decode_buckets[0] < 1
+                        or self.decode_buckets[-1] != self.blocks_per_slot):
+                    raise ValueError(
+                        f"decode_buckets {self.decode_buckets} must be >= 1 "
+                        f"and end at blocks_per_slot={self.blocks_per_slot}")
+            else:
+                self.decode_buckets = kvc.decode_block_buckets(
+                    self.blocks_per_slot)
         else:
             self.caches = lm.init_caches(cfg, ecfg.slots, ecfg.max_seq,
                                          dtype=dtype)
+            self.decode_buckets = ()
 
         if mesh is not None:
             from repro.serve import sharding as shard_lib
@@ -164,12 +239,19 @@ class ServeEngine:
                 raise ValueError("paged prefill buckets must be multiples of "
                                  f"page_size={ecfg.page_size}: {self.buckets}")
 
-        # host-side slot state
+        # host-side slot bookkeeping; the decode-path twin lives on device
+        # in self._state (and is only read back at drain time)
         self.slot_req: List[Optional[RequestState]] = [None] * ecfg.slots
-        self.lengths = np.zeros(ecfg.slots, np.int32)
-        self.last_tok = np.zeros((ecfg.slots, 1), np.int32)
-        self.remaining = np.zeros(ecfg.slots, np.int32)
+        self._host_len = np.zeros(ecfg.slots, np.int32)  # conservative shadow
         self._samp: List[SamplingParams] = [SamplingParams()] * ecfg.slots
+        self._sp_packed = samp_lib.pack(self._samp)
+        self._state = _SlotState(
+            last_tok=jnp.zeros((ecfg.slots, 1), jnp.int32),
+            lengths=jnp.zeros((ecfg.slots,), jnp.int32),
+            remaining=jnp.zeros((ecfg.slots,), jnp.int32),
+            active=jnp.zeros((ecfg.slots,), bool),
+        )
+        self._pending: List[_TickRecord] = []
 
         self.scheduler = Scheduler(ecfg.policy, ecfg.max_prefills_per_tick)
         self.stats: Dict[str, Any] = {"ticks": 0, "decode_tokens": 0,
@@ -178,9 +260,9 @@ class ServeEngine:
         self._requests: Dict[int, Request] = {}
         self._finished_unpolled: List[RequestState] = []
 
-        # the cache tree is dead after every call (immediately reassigned),
-        # so donate it: XLA aliases input->output pool buffers in place
-        # instead of copying the whole KV pool per decoded token
+        # the cache tree and slot state are dead after every call
+        # (immediately reassigned), so donate them: XLA aliases input->output
+        # buffers in place instead of copying the KV pool per decoded token
         decode_fn, prefill_fn, reset_fn = (self._decode_fn, self._prefill_fn,
                                            self._reset_fn)
         if mesh is not None:
@@ -189,7 +271,7 @@ class ServeEngine:
             decode_fn = shard_lib.with_shard_ctx(decode_fn, mesh, cfg)
             prefill_fn = shard_lib.with_shard_ctx(prefill_fn, mesh, cfg)
         self._decode = _CountingJit(decode_fn, "decode",
-                                    donate_argnums=(2,))
+                                    donate_argnums=(1, 2))
         self._prefill = _CountingJit(prefill_fn, "prefill",
                                      donate_argnums=(3,))
         self._reset = _CountingJit(reset_fn, "reset_slot",
@@ -198,14 +280,32 @@ class ServeEngine:
 
     # --- jitted bodies ---------------------------------------------------
 
-    def _decode_fn(self, params, tok, caches, block_table, lengths, sp, key):
-        """Fused global decode step + per-slot sampling (static shapes)."""
-        paged = (PagedState(block_table, lengths)
+    def _decode_fn(self, params, caches, state, block_table, sp, key):
+        """Fused global decode step + sampling + termination (static shapes).
+
+        EOS/max-token flags are computed here so the host never has to sync
+        per tick to decide whether a slot finished; inactive slots decode
+        masked garbage (writes land in the null block / stale rows) and
+        their state is held frozen by `state.active`.
+        """
+        paged = (PagedState(block_table, state.lengths)
                  if block_table is not None else None)
-        logits, caches = lm.decode_step(params, self.cfg, tok, caches,
-                                        act=self._act, paged=paged)
+        logits, caches = lm.decode_step(params, self.cfg, state.last_tok,
+                                        caches, act=self._act, paged=paged,
+                                        paged_impl=self.paged_impl,
+                                        attn_quant=self._attn_quant)
         nxt = samp_lib.sample(logits[:, -1], sp, key)
-        return nxt, caches
+        act_i = state.active.astype(jnp.int32)
+        remaining = state.remaining - act_i
+        done = state.active & ((nxt == self.ecfg.eos_id) | (remaining <= 0))
+        state = _SlotState(
+            last_tok=jnp.where(state.active[:, None], nxt[:, None],
+                               state.last_tok),
+            lengths=state.lengths + act_i,
+            remaining=remaining,
+            active=state.active & ~done,
+        )
+        return caches, state, nxt, done
 
     def _prefill_fn(self, params, tokens, true_length, caches, slot_or_row,
                     encoder_frames):
@@ -277,9 +377,13 @@ class ServeEngine:
     def poll(self) -> List[Request]:
         """Requests finished since the last poll, in completion order.
 
-        Delivered requests are dropped from the engine's live table (their
-        rid becomes reusable); lifecycle records stay on scheduler.finished
-        for metrics."""
+        Draining happens here: every pending decode tick's tokens and
+        termination flags are pulled to host in one batch, slots/blocks are
+        recycled, and finished requests become deliverable. Delivered
+        requests are dropped from the engine's live table (their rid becomes
+        reusable); lifecycle records stay on scheduler.finished for metrics.
+        """
+        self._drain()
         out = [self._requests.pop(rs.rid) for rs in self._finished_unpolled]
         self._finished_unpolled = []
         return out
@@ -331,17 +435,24 @@ class ServeEngine:
         self.stats["prefill_tokens"] += ctx
         rs.slot = slot
         self.slot_req[slot] = rs
-        self.lengths[slot] = ctx
-        self.last_tok[slot, 0] = int(rs.prompt[-1])
-        self.remaining[slot] = rs.max_new_tokens
+        self._host_len[slot] = ctx
         self._samp[slot] = rs.sampling
+        # packed sampler state is rebuilt here (admissions) only — never in
+        # the per-tick hot loop
+        self._sp_packed = samp_lib.pack(self._samp)
+        st = self._state
+        self._state = _SlotState(
+            last_tok=st.last_tok.at[slot, 0].set(int(rs.prompt[-1])),
+            lengths=st.lengths.at[slot].set(ctx),
+            remaining=st.remaining.at[slot].set(int(rs.max_new_tokens)),
+            active=st.active.at[slot].set(True),
+        )
 
     def _retire(self, slot: int, rs: RequestState, reason: str,
-                now: float) -> None:
-        self.scheduler.retire(rs, self.stats["ticks"], now, reason)
+                now: float, tick: int) -> None:
+        self.scheduler.retire(rs, tick, now, reason)
         self.slot_req[slot] = None
-        self.lengths[slot] = 0
-        self.last_tok[slot, 0] = 0
+        self._host_len[slot] = 0
         if self.paged:
             self.allocator.free(rs.blocks)
             rs.blocks = []
@@ -350,46 +461,106 @@ class ServeEngine:
 
     # --- decode tick ------------------------------------------------------
 
-    def step(self) -> Dict[int, int]:
-        """Admissions + one global decode step; {rid: new_token} for live slots."""
-        free = self.slot_req.count(None)
-        if free and self.scheduler.waiting:
-            for rs in self.scheduler.pick(free, self.stats["ticks"],
-                                          self._can_admit):
-                self._admit(rs)
+    def _decode_bucket(self, active: List[int]) -> int:
+        """Smallest decode block bucket covering every live context (+1 for
+        the token being written this tick). `_host_len` is a conservative
+        shadow — it keeps counting for device-finished-but-undrained slots,
+        which can only round the bucket up, never under-cover."""
+        need = max(kvc.blocks_for(int(self._host_len[s]) + 1,
+                                  self.ecfg.page_size) for s in active)
+        return kvc.bucket_for(min(need, self.blocks_per_slot),
+                              self.decode_buckets)
+
+    def step(self) -> int:
+        """Admissions + one enqueued decode tick; returns the number of live
+        slots advanced. Sampled tokens and termination flags stay on device
+        until the next drain (poll(), admission pressure, or the pending
+        cap) — the hot loop never blocks on a host sync per token."""
+        if self.scheduler.waiting:
+            # admission decisions need an up-to-date view of free slots
+            self._drain()
+            free = self.slot_req.count(None)
+            if free:
+                for rs in self.scheduler.pick(free, self.stats["ticks"],
+                                              self._can_admit):
+                    self._admit(rs)
 
         active = [s for s, r in enumerate(self.slot_req) if r is not None]
         if not active:
-            return {}
+            return 0
 
         key = jax.random.fold_in(self._key, self.stats["ticks"])
-        sp = samp_lib.pack(self._samp)
-        bt = self.block_table if self.paged else None
-        lens = self.lengths if self.paged else None
-        nxt, self.caches = self._decode(self.params, self.last_tok,
-                                        self.caches, bt, lens, sp, key)
-        nxt = np.asarray(nxt)
-        now = time.perf_counter()
-
-        emitted: Dict[int, int] = {}
-        for slot in active:
-            rs = self.slot_req[slot]
-            tok = int(nxt[slot])
-            rs.out_tokens.append(tok)
-            emitted[rs.rid] = tok
-            if rs.first_token_time is None:
-                rs.first_token_time = now
-            self.lengths[slot] += 1
-            self.last_tok[slot, 0] = tok
-            self.remaining[slot] -= 1
-            if tok == self.ecfg.eos_id:
-                self._retire(slot, rs, "eos", now)
-            elif self.remaining[slot] <= 0:
-                self._retire(slot, rs, "max_tokens", now)
-
-        self.stats["decode_tokens"] += len(active)
+        bt = (self.block_table[:, :self._decode_bucket(active)]
+              if self.paged else None)
+        self.caches, self._state, nxt, done = self._decode(
+            self.params, self.caches, self._state, bt, self._sp_packed, key)
+        self._pending.append(_TickRecord(self.stats["ticks"], tuple(active),
+                                         nxt, done))
+        self._host_len[active] += 1
         self.stats["ticks"] += 1
-        return emitted
+        if len(self._pending) >= self.ecfg.max_pending_ticks:
+            self._drain()
+        return len(active)
+
+    def _drain(self) -> None:
+        """Deliver every pending decode tick: one host sync per drained batch
+        instead of one per token. Ticks are replayed in order so retirement
+        and slot recycling land exactly where the per-tick loop would have
+        put them (a slot freed at tick t is admissible at tick t+1 for any
+        caller that polls between steps)."""
+        if not self._pending:
+            return
+        pending, self._pending = self._pending, []
+        for rec in pending:
+            toks = np.asarray(rec.tokens)
+            done = np.asarray(rec.done)
+            now = time.perf_counter()
+            for slot in rec.slots:
+                rs = self.slot_req[slot]
+                if rs is None:
+                    # ghost tick: the slot finished at an earlier (buffered)
+                    # tick; its masked decode output is dropped
+                    continue
+                tok = int(toks[slot])
+                rs.out_tokens.append(tok)
+                if rs.first_token_time is None:
+                    rs.first_token_time = now
+                self.stats["decode_tokens"] += 1
+                if done[slot]:
+                    reason = ("eos" if tok == self.ecfg.eos_id
+                              else "max_tokens")
+                    self._retire(slot, rs, reason, now, rec.tick)
+
+    # --- warmup -----------------------------------------------------------
+
+    def warmup(self, prefill: bool = True) -> int:
+        """Trace the decode jit for every decode bucket (and the prefill jit
+        for every prefill bucket) with inert inputs, so serving never
+        compiles again. Idle-slot decode writes land in the null block /
+        stale rows exactly as during normal ghost ticks; trash prefills
+        target the null block row (paged) or a to-be-overwritten slot row
+        (dense). Returns the warm compile count."""
+        assert all(r is None for r in self.slot_req) and not self._pending, \
+            "warmup() requires an idle engine"
+        buckets = self.decode_buckets if self.paged else (None,)
+        for i, nb in enumerate(buckets):
+            bt = self.block_table[:, :nb] if self.paged else None
+            key = jax.random.fold_in(self._key, np.uint32(2**31 + i))
+            self.caches, self._state, _, _ = self._decode(
+                self.params, self.caches, self._state, bt, self._sp_packed,
+                key)
+        if prefill and self.bucketed:
+            ef = (np.zeros((1, self.cfg.encoder.num_frames, self.cfg.d_model),
+                           np.float32) if self.cfg.encoder is not None
+                  else None)
+            for b in self.buckets:
+                toks = np.zeros((1, b), np.int32)
+                tl = np.array([1], np.int32)
+                target = (np.full(self.blocks_per_slot, kvc.NULL_BLOCK,
+                                  np.int32) if self.paged else np.int32(0))
+                self.caches = self._prefill(self.params, toks, tl,
+                                            self.caches, target, ef)
+        return self.compile_count()
 
     # --- synchronous driver ----------------------------------------------
 
@@ -404,7 +575,7 @@ class ServeEngine:
         while ((self.scheduler.waiting or any(r is not None
                                               for r in self.slot_req))
                and ticks < max_ticks):
-            made_progress = bool(self.step()) or not self.scheduler.waiting
+            made_progress = self.step() > 0 or not self.scheduler.waiting
             completed.extend(self.poll())
             ticks += 1
             if not made_progress and not any(r is not None
@@ -415,8 +586,34 @@ class ServeEngine:
     # --- introspection ---------------------------------------------------
 
     def compile_count(self) -> int:
-        """Total distinct jit signatures traced — must not grow after warmup."""
+        """Total distinct jit traces — must not grow after warmup."""
         return sum(j.compiles for j in self._jits)
+
+    def decode_cost(self, bucket: Optional[int] = None) -> Dict[str, float]:
+        """Roofline terms of one decode tick at a given decode bucket, from
+        the trip-count-aware HLO analyzer (roofline/hlo.py).
+
+        `gather_bytes` is the paged KV read traffic (the dense-view gather)
+        — the quantity that must scale with live context, never with pool
+        capacity. `bytes` is the raw instruction-boundary proxy; it includes
+        full-pool-shaped scatter *outputs* that donation aliases in place at
+        runtime, so it overstates pool-size sensitivity (see docs/perf.md)."""
+        from repro.roofline.hlo import analyze_hlo
+        if self.paged:
+            bucket = bucket or self.decode_buckets[-1]
+            bt = jax.ShapeDtypeStruct((self.ecfg.slots, bucket), jnp.int32)
+        else:
+            bt = None
+        shapes = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+            (self.params, self.caches, self._state, bt,
+             samp_lib.pack(self._samp), self._key))
+        hlo = (jax.jit(self._decode_fn)
+               .lower(*shapes).compile().as_text())
+        t = analyze_hlo(hlo)
+        return {"flops": t.flops, "bytes": t.bytes,
+                "dot_bytes": t.dot_bytes,
+                "gather_bytes": t.bytes_by_op.get("gather", 0.0)}
 
     def metrics(self) -> Dict[str, Any]:
         m = dict(self.scheduler.metrics())
@@ -424,10 +621,12 @@ class ServeEngine:
         m["compiles"] = self.compile_count()
         m["compiles_by_fn"] = {j.name: j.compiles for j in self._jits}
         m["backend"] = "paged" if self.paged else "dense"
+        if self.paged:
+            m["paged_impl"] = self.paged_impl
+            m["decode_buckets"] = list(self.decode_buckets)
+            m["free_blocks"] = self.allocator.free_blocks
+            m["total_blocks"] = self.allocator.num_blocks
         if self.mesh is not None:
             from repro.serve import sharding as shard_lib
             m["mesh"] = shard_lib.mesh_summary(self.mesh)
-        if self.paged:
-            m["free_blocks"] = self.allocator.free_blocks
-            m["total_blocks"] = self.allocator.num_blocks
         return m

@@ -62,6 +62,23 @@ def bucket_for(n: int, buckets: Sequence[int]) -> int:
     raise ValueError(f"length {n} exceeds largest prefill bucket {buckets[-1]}")
 
 
+def decode_block_buckets(blocks_per_slot: int) -> Tuple[int, ...]:
+    """Power-of-two ladder of live-block counts for the decode step.
+
+    The engine traces its decode jit once per bucket (block-table width) and
+    each tick runs the smallest bucket covering the longest live sequence, so
+    per-step gather/kernel work scales with live context instead of
+    `blocks_per_slot` — the decode-side analogue of the prefill buckets.
+    """
+    buckets = []
+    b = 1
+    while b < blocks_per_slot:
+        buckets.append(b)
+        b *= 2
+    buckets.append(blocks_per_slot)
+    return tuple(sorted(set(buckets)))
+
+
 # ---------------------------------------------------------------------------
 # Host-side block allocator
 # ---------------------------------------------------------------------------

@@ -12,9 +12,16 @@ The serving scheme differs from training's FSDP x TP (launch/steps.py):
     layer). Decode batch (slots) shards over `data` via the activation rules.
   * dense caches — launch/steps.cache_pspecs: slot batch over `data`,
     kv heads over `model`.
-  * slot state (tokens, lengths, sampler batch, PRNG key) — tiny host
-    arrays handed to jit uncommitted each tick; the embed-lookup constraint
-    re-shards the token batch over `data` on entry to the model.
+  * slot state (last token, lengths, decode budget, active mask) — a tiny
+    device-resident tree donated through the decode jit each tick; the
+    sampler batch and PRNG key ride in uncommitted, and the embed-lookup
+    constraint re-shards the token batch over `data` on entry to the model.
+  * paged decode impl — under a mesh the engine uses the dense-gather path
+    (the Pallas paged-attention kernel has no GSPMD partitioning rule, so
+    the engine rejects an explicit kernel+mesh combination; sharding it via
+    shard_map over the kv-head axis is the follow-up). Both impls are
+    O(live blocks) per step: the mesh path gathers through the
+    bucket-sliced block table (docs/perf.md).
 
 Everything resolves through the same logical-axis rules as training
 (nn/common.DEFAULT_RULES, nn/shard_ctx._ACT_RULES) so a future mesh axis

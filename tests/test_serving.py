@@ -268,18 +268,100 @@ def test_paged_admission_blocks_gate(small_lm):
 def test_no_recompile_after_warmup(small_lm):
     cfg, params = small_lm
     engine = ServeEngine(cfg, params, EngineConfig(slots=2, max_seq=64))
-    # warmup: covers every prefill bucket <= max prompt below + decode step
+    # warmup() traces every decode bucket and prefill bucket up front
+    warm_compiles = engine.warmup()
+    assert warm_compiles >= 2                 # decode + >=1 prefill bucket
+    # organic traffic reaching the same buckets adds nothing
     warm = [Request(rid=100 + i, prompt=np.arange(2, 2 + n),
                     max_new_tokens=2)
             for i, n in enumerate([3, 9, 17, 33])]
     engine.run(warm)
-    warm_compiles = engine.compile_count()
-    assert warm_compiles >= 2                 # decode + >=1 prefill bucket
+    assert engine.compile_count() == warm_compiles
 
     reqs = make_requests(cfg, 8, max_new=5, seed=3)
     engine.run(reqs)
     assert engine.compile_count() == warm_compiles
     assert all(len(r.out_tokens) >= 1 for r in reqs)
+
+
+def test_counting_jit_counts_shape_identical_retrace():
+    """A retrace whose input shapes/dtypes are unchanged (weak-type flip)
+    must still be counted — the old cache-size/shape-hash probes missed it."""
+    from repro.serve.engine import _CountingJit
+    cj = _CountingJit(lambda x: x * 2, "probe")
+    cj(jnp.float32(1.0))           # strong f32 scalar
+    cj(1.0)                        # weak-typed python float: same shape/dtype
+    cj(1.0)                        # cached — no new trace
+    assert cj.compiles == 2
+
+
+def test_donation_does_not_add_signatures(small_lm):
+    """Donated caches/slot state flow through thousands of decode ticks; the
+    trace counter must stay flat after warmup under both backends."""
+    cfg, params = small_lm
+    for paged in (True, False):
+        engine = ServeEngine(cfg, params,
+                             EngineConfig(slots=2, max_seq=64, page_size=8,
+                                          paged=paged))
+        warm = engine.warmup()
+        engine.run(make_requests(cfg, 6, max_new=5, seed=11))
+        engine.run(make_requests(cfg, 6, max_new=3, seed=12))
+        assert engine.compile_count() == warm, f"paged={paged}"
+
+
+def test_decode_bucket_ladder():
+    assert kvc.decode_block_buckets(1) == (1,)
+    assert kvc.decode_block_buckets(8) == (1, 2, 4, 8)
+    assert kvc.decode_block_buckets(12) == (1, 2, 4, 8, 12)
+    for n in (1, 3, 7, 32):
+        ladder = kvc.decode_block_buckets(n)
+        assert ladder[-1] == n and ladder[0] == 1
+        assert list(ladder) == sorted(set(ladder))
+
+
+def test_decode_buckets_cover_traffic(small_lm):
+    """Short and long requests mixed: every tick's bucket must cover the
+    longest live context, and the generated tokens must equal the
+    full-table (pre-bucketing) configuration's output."""
+    cfg, params = small_lm
+    full = ServeEngine(cfg, params, EngineConfig(
+        slots=2, max_seq=64, page_size=8, decode_buckets=(8,)))
+    auto = ServeEngine(cfg, params, EngineConfig(
+        slots=2, max_seq=64, page_size=8))
+    assert auto.decode_buckets == (1, 2, 4, 8)
+    outs = []
+    for engine in (full, auto):
+        reqs = [Request(rid=i, prompt=np.arange(2, 2 + n),
+                        max_new_tokens=m)
+                for i, (n, m) in enumerate([(3, 2), (40, 8), (5, 12)])]
+        engine.run(reqs)
+        outs.append({r.rid: r.out_tokens for r in reqs})
+    assert outs[0] == outs[1]
+
+
+def test_poll_batched_drain_matches_per_tick_poll(small_lm):
+    """Running many ticks without polling (host sync deferred) must deliver
+    exactly the tokens a poll-every-tick driver sees."""
+    cfg, params = small_lm
+    reqs_a = make_requests(cfg, 3, max_new=6, seed=21)
+    reqs_b = make_requests(cfg, 3, max_new=6, seed=21)
+
+    per_tick = ServeEngine(cfg, params, EngineConfig(slots=3, max_seq=64))
+    done_a = per_tick.run(reqs_a)                    # polls every tick
+
+    deferred = ServeEngine(cfg, params, EngineConfig(slots=3, max_seq=64))
+    for r in reqs_b:
+        deferred.submit(r)
+    for _ in range(4):
+        deferred.step()                              # no poll: ticks buffer
+    done_b = list(deferred.poll())
+    while (deferred.scheduler.waiting
+           or any(s is not None for s in deferred.slot_req)):
+        deferred.step()
+        done_b.extend(deferred.poll())
+    assert {r.rid: r.out_tokens for r in reqs_a} == \
+           {r.rid: r.out_tokens for r in reqs_b}
+    assert len(done_a) == len(done_b) == 3
 
 
 # ---------------------------------------------------------------------------

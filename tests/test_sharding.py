@@ -209,11 +209,35 @@ def test_engine_sharded_sampling_state_partitions(params):
 
 
 def test_engine_sharded_never_recompiles_after_warmup(params):
-    """The static-shape serving invariant must hold under a mesh too."""
+    """The static-shape serving invariant must hold under a mesh too: after
+    warmup() traces every decode/prefill bucket, donated caches and slot
+    state cycling through two full traffic waves add zero jit signatures."""
     mesh = _mesh_or_skip(2, 2)
     eng = ServeEngine(CFG, params,
                       EngineConfig(slots=SLOTS, max_seq=MAX_SEQ), mesh=mesh)
+    warm = eng.warmup()
     _mixed_traffic(eng, _requests())
-    warm = eng.compile_count()
     _mixed_traffic(eng, _requests())
     assert eng.compile_count() == warm
+
+
+def test_kernel_engine_matches_sharded_gather_engine(params):
+    """Cross-impl differential under the CI mesh matrix: a single-device
+    engine on the Pallas paged-attention kernel must emit the same tokens
+    as a mesh-sharded engine on the dense-gather oracle path."""
+    mesh = _mesh_or_skip(1, 4)
+    ecfg = EngineConfig(slots=SLOTS, max_seq=MAX_SEQ)
+    kern = ServeEngine(CFG, params,
+                       EngineConfig(slots=SLOTS, max_seq=MAX_SEQ,
+                                    paged_impl="kernel"))
+    kern_toks = _mixed_traffic(kern, _requests())
+    sharded = ServeEngine(CFG, params, ecfg, mesh=mesh)
+    assert sharded.paged_impl == "gather"    # auto: kernel never under mesh
+    sh_toks = _mixed_traffic(sharded, _requests())
+    assert kern_toks == sh_toks
+    # explicit kernel+mesh is rejected: the kernel has no GSPMD rule and
+    # would silently rematerialize per-slot tensors every step
+    with pytest.raises(ValueError, match="mesh"):
+        ServeEngine(CFG, params,
+                    EngineConfig(slots=SLOTS, max_seq=MAX_SEQ,
+                                 paged_impl="kernel"), mesh=mesh)
