@@ -4,12 +4,17 @@
         --bench BENCH_serving.json \
         --baseline benchmarks/baselines/serving_cpu_baseline.json
 
-The baseline maps dotted report paths to floor values; a measured value below
-``floor * (1 - max_regression)`` fails the run. Floors are deliberately
-conservative for shared CI runners (absolute tokens/sec varies with host
-load), while the decode-scaling *speedup* is a same-process ratio and gates
-the actual property this repo cares about: the bucketed decode path must not
-regress toward the pre-PR full-capacity gather.
+The baseline's ``metrics`` map dotted report paths to floor values: a
+measured value below ``floor * (1 - max_regression)`` fails the run.
+``ceilings`` are the latency/cost mirror image: a measured value above
+``ceiling * (1 + max_regression)`` fails (TTFT percentiles, prefill tokens
+per request — quantities where growth is the regression). Floors are
+deliberately conservative for shared CI runners (absolute tokens/sec varies
+with host load), while the decode-scaling speedup, the prefix-caching TTFT
+improvement and the prefill-tokens-avoided fraction are same-process ratios
+and gate the actual properties this repo cares about: bucketed decode must
+not regress toward the full-capacity gather, and shared-prefix reuse must
+keep avoiding prompt recomputation.
 """
 from __future__ import annotations
 
@@ -41,7 +46,7 @@ def main() -> int:
         baseline = json.load(f)
 
     failures = []
-    for path, floor in baseline["metrics"].items():
+    for path, floor in baseline.get("metrics", {}).items():
         got = lookup(report, path)
         gate = floor * (1.0 - args.max_regression)
         if got is None:
@@ -52,6 +57,23 @@ def main() -> int:
               f"gate {gate:.3f})")
         if got < gate:
             failures.append(f"{path}: {got:.3f} < gate {gate:.3f}")
+    for path, ceiling in baseline.get("ceilings", {}).items():
+        got = lookup(report, path)
+        gate = ceiling * (1.0 + args.max_regression)
+        if got is None:
+            failures.append(f"{path}: missing from {args.bench}")
+            continue
+        status = "OK " if got <= gate else "FAIL"
+        print(f"{status} {path}: {got:.3f} (ceiling {ceiling:.3f}, "
+              f"gate {gate:.3f})")
+        if got > gate:
+            failures.append(f"{path}: {got:.3f} > gate {gate:.3f}")
+    for path, want in baseline.get("exact", {}).items():
+        got = lookup(report, path)
+        ok = got == want
+        print(f"{'OK ' if ok else 'FAIL'} {path}: {got!r} (expected {want!r})")
+        if not ok:
+            failures.append(f"{path}: {got!r} != {want!r}")
     if failures:
         print("\nregression gate FAILED:", file=sys.stderr)
         for f_ in failures:

@@ -56,6 +56,30 @@ def synth_trace(n: int, mean_interarrival_ticks: float, vocab: int,
             for a in arrivals]
 
 
+def synth_shared_prefix_trace(n: int, mean_interarrival_ticks: float,
+                              vocab: int, max_new: int, seed: int, *,
+                              prefix_len: int = 96, n_prefixes: int = 4,
+                              tail_lo: int = 4, tail_hi: int = 32):
+    """Poisson arrivals where every prompt is one of `n_prefixes` shared
+    system prompts plus a unique tail — the traffic shape prefix caching
+    targets. Returns (trace, overlap_frac)."""
+    rng = np.random.default_rng(seed)
+    prefixes = [rng.integers(2, vocab, size=prefix_len)
+                for _ in range(n_prefixes)]
+    gaps = rng.exponential(mean_interarrival_ticks, size=n)
+    arrivals = np.floor(np.cumsum(gaps)).astype(int)
+    trace, total, shared = [], 0, 0
+    for a in arrivals:
+        pre = prefixes[int(rng.integers(0, n_prefixes))]
+        tail = rng.integers(2, vocab,
+                            size=int(rng.integers(tail_lo, tail_hi)))
+        prompt = np.concatenate([pre, tail])
+        total += len(prompt)
+        shared += len(pre)
+        trace.append((int(a), prompt, max_new))
+    return trace, shared / total
+
+
 def run_trace(engine: ServeEngine, trace, sampling: SamplingParams,
               max_ticks: int = 100000):
     """Submit requests as their arrival tick passes; drain to completion."""
@@ -154,6 +178,83 @@ def bench_decode_scaling(cfg, params, args):
     return out
 
 
+def bench_prefix_caching(cfg, params, args):
+    """Shared-prefix trace through cache-off vs cache-on engines.
+
+    Both engines run the identical chunk-grid prefill state machine (so the
+    comparison isolates *reuse*, and token streams stay bit-identical); the
+    section reports prefix hit rate, prefill tokens avoided, and TTFT
+    p50/p99 improvement — the admission-latency win of not re-computing the
+    shared system prompt. Each variant is timed `--prefix-reps` times with
+    the median kept (same rationale as decode_scaling: the CI gate must not
+    be scheduler noise).
+    """
+    trace, overlap = synth_shared_prefix_trace(
+        args.prefix_requests, args.interarrival, cfg.vocab_size,
+        max(args.max_new, 8), args.seed, prefix_len=args.prefix_len)
+    base = dict(slots=max(args.slots, 4), max_seq=256, page_size=16,
+                prefill_chunk=32, seed=args.seed)
+    out = {"prefix_len": args.prefix_len, "overlap_frac": overlap,
+           "requests": args.prefix_requests, "prefill_chunk": 32,
+           "slots": base["slots"]}
+    tokens = {}
+    for name, on in (("cache_off", False), ("cache_on", True)):
+        reps = []
+        for _ in range(args.prefix_reps):
+            engine = ServeEngine(cfg, params,
+                                 EngineConfig(prefix_cache=on, **base))
+            warm = engine.warmup()
+            stats = run_trace(engine, trace, SamplingParams())
+            stats["recompiles_after_warmup"] = (engine.compile_count()
+                                                - warm)
+            m = engine.metrics()
+            stats["prefill_tokens"] = m["prefill_tokens"]
+            stats["cached_prefix_tokens"] = m["cached_prefix_tokens"]
+            stats["prefix_hit_rate"] = m["prefix_hit_rate"]
+            stats["evictions"] = m["evictions"]
+            stats["prefill_tokens_per_request"] = \
+                m["prefill_tokens_per_request"]
+            reps.append(stats)
+            toks = {rs.rid: tuple(rs.out_tokens)
+                    for rs in engine.scheduler.finished}
+        tokens[name] = toks
+        out[name] = sorted(reps, key=lambda s: s["ttft_p50_s"])[len(reps) // 2]
+        print(f"prefix_caching/{name}: TTFT p50 "
+              f"{out[name]['ttft_p50_s'] * 1e3:.1f} ms, p99 "
+              f"{out[name]['ttft_p99_s'] * 1e3:.1f} ms, "
+              f"{out[name]['prefill_tokens']} prefill tokens computed, "
+              f"hit rate {out[name]['prefix_hit_rate']:.2f} "
+              f"[{out[name]['recompiles_after_warmup']} recompiles]",
+              flush=True)
+    # reuse must be invisible in the streams: bit-identical tokens — checked
+    # in float mode (the timed runs above) and in GRAU mode (one short pass)
+    out["tokens_bit_identical"] = tokens["cache_on"] == tokens["cache_off"]
+    grau_cfg = cfg.replace(grau=GRAUConfig())
+    gparams, _ = lm.init_lm(grau_cfg, jax.random.PRNGKey(0),
+                            dtype=jax.numpy.float32)
+    gtoks = {}
+    for on in (False, True):
+        engine = ServeEngine(grau_cfg, gparams,
+                             EngineConfig(prefix_cache=on, **base))
+        run_trace(engine, trace[:12], SamplingParams())
+        gtoks[on] = {rs.rid: tuple(rs.out_tokens)
+                     for rs in engine.scheduler.finished}
+    out["tokens_bit_identical_grau"] = gtoks[True] == gtoks[False]
+    out["ttft_p50_improvement"] = (out["cache_off"]["ttft_p50_s"]
+                                   / max(out["cache_on"]["ttft_p50_s"], 1e-9))
+    out["ttft_p99_improvement"] = (out["cache_off"]["ttft_p99_s"]
+                                   / max(out["cache_on"]["ttft_p99_s"], 1e-9))
+    out["prefill_tokens_avoided_frac"] = 1.0 - (
+        out["cache_on"]["prefill_tokens"]
+        / max(out["cache_off"]["prefill_tokens"], 1))
+    print(f"prefix_caching: {out['ttft_p50_improvement']:.2f}x TTFT p50, "
+          f"{out['ttft_p99_improvement']:.2f}x p99, "
+          f"{out['prefill_tokens_avoided_frac'] * 100:.0f}% prefill tokens "
+          f"avoided at {overlap * 100:.0f}% overlap, tokens bit-identical: "
+          f"{out['tokens_bit_identical']}", flush=True)
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-3b")
@@ -168,6 +269,16 @@ def main() -> None:
     ap.add_argument("--scaling-requests", type=int, default=48)
     ap.add_argument("--scaling-reps", type=int, default=3,
                     help="repetitions per decode_scaling variant (median)")
+    ap.add_argument("--prefix-requests", type=int, default=32,
+                    help="requests in the shared-prefix (prefix_caching) "
+                         "section")
+    ap.add_argument("--prefix-len", type=int, default=96,
+                    help="shared system-prompt length for prefix_caching")
+    ap.add_argument("--prefix-reps", type=int, default=3,
+                    help="repetitions per prefix_caching variant (median)")
+    ap.add_argument("--sections", default="all",
+                    help="comma list of sections to run: "
+                         "runs,decode_scaling,prefix (default all)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke sizes: fewer requests, smaller capacity")
@@ -184,6 +295,13 @@ def main() -> None:
         # blocks_per_slot
         args.requests = 6
         args.scaling_requests = 32
+    for name in ("requests", "scaling_requests", "scaling_reps",
+                 "prefix_requests", "prefix_reps"):
+        if getattr(args, name) < 1:
+            ap.error(f"--{name.replace('_', '-')} must be >= 1")
+    sections = (("runs", "decode_scaling", "prefix")
+                if args.sections == "all"
+                else tuple(s.strip() for s in args.sections.split(",") if s))
 
     mesh_shape = parse_mesh_spec(args.mesh) if args.mesh else None
     if mesh_shape:
@@ -204,32 +322,38 @@ def main() -> None:
         "sampled": SamplingParams(temperature=0.8, top_k=50, top_p=0.95),
     }
 
-    for act_name, cfg in (("float", base_cfg),
-                          ("grau", base_cfg.replace(grau=GRAUConfig()))):
-        params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0),
-                               dtype=jax.numpy.float32)
-        for samp_name, sampling in samplers.items():
-            engine = ServeEngine(
-                cfg, params,
-                EngineConfig(slots=args.slots, max_seq=args.max_seq,
-                             seed=args.seed))
-            warm_compiles = engine.warmup()
+    if "runs" in sections:
+        for act_name, cfg in (("float", base_cfg),
+                              ("grau", base_cfg.replace(grau=GRAUConfig()))):
+            params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0),
+                                   dtype=jax.numpy.float32)
+            for samp_name, sampling in samplers.items():
+                engine = ServeEngine(
+                    cfg, params,
+                    EngineConfig(slots=args.slots, max_seq=args.max_seq,
+                                 seed=args.seed))
+                warm_compiles = engine.warmup()
 
-            stats = run_trace(engine, trace, sampling)
-            stats["recompiles_after_warmup"] = (engine.compile_count()
-                                                - warm_compiles)
-            report["runs"][f"{act_name}/{samp_name}"] = stats
-            print(f"{act_name}/{samp_name}: "
-                  f"{stats['tokens_per_s']:.1f} tok/s, "
-                  f"TTFT p50 {stats['ttft_p50_s'] * 1e3:.1f} ms, "
-                  f"p99 {stats['ttft_p99_s'] * 1e3:.1f} ms "
-                  f"[{stats['backend']}, "
-                  f"{stats['recompiles_after_warmup']} recompiles]",
-                  flush=True)
+                stats = run_trace(engine, trace, sampling)
+                stats["recompiles_after_warmup"] = (engine.compile_count()
+                                                    - warm_compiles)
+                report["runs"][f"{act_name}/{samp_name}"] = stats
+                print(f"{act_name}/{samp_name}: "
+                      f"{stats['tokens_per_s']:.1f} tok/s, "
+                      f"TTFT p50 {stats['ttft_p50_s'] * 1e3:.1f} ms, "
+                      f"p99 {stats['ttft_p99_s'] * 1e3:.1f} ms "
+                      f"[{stats['backend']}, "
+                      f"{stats['recompiles_after_warmup']} recompiles]",
+                      flush=True)
 
     params, _ = lm.init_lm(base_cfg, jax.random.PRNGKey(0),
                            dtype=jax.numpy.float32)
-    report["decode_scaling"] = bench_decode_scaling(base_cfg, params, args)
+    if "decode_scaling" in sections:
+        report["decode_scaling"] = bench_decode_scaling(base_cfg, params,
+                                                        args)
+    if "prefix" in sections:
+        report["prefix_caching"] = bench_prefix_caching(base_cfg, params,
+                                                        args)
 
     if mesh_shape:
         # sharded vs single-device: same float/greedy trace, so the delta is

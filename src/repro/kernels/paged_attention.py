@@ -1,5 +1,6 @@
-"""Pallas paged-attention decode kernel: flash decode *through* the block
-table, so per-step HBM traffic scales with live tokens, not pool capacity.
+"""Pallas paged-attention kernels: flash decode *and* chunked (multi-query)
+prefill *through* the block table, so per-step HBM traffic scales with live
+tokens, not pool capacity.
 
 The serving engine stores K/V in a shared pool of fixed-size blocks
 (nn/attention.PagedKVCache); a slot owns only the blocks its sequence
@@ -25,6 +26,14 @@ the attention output) — the normalized f32 output is scaled into the int32
 MAC domain and pushed through the same `grau_datapath` as the GEMM kernels,
 writing int8/uint8 straight to HBM.  The register file rides in as scalar
 prefetch, so reconfiguring the activation/precision never recompiles.
+
+Multi-query prefill mode (`paged_prefill_attention`): the chunked-prefill
+state machine (serve/engine) feeds C query positions at once, each row r
+attending positions 0..start+r — the pinned cached-prefix blocks *and* the
+chunk's own just-written blocks, all resolved through the same
+scalar-prefetched table. The kernel is the decode kernel with the online-
+softmax carry widened to (C*g, ·) and the position mask made per-row, so a
+prompt suffix never re-reads more than prefix+chunk bytes per layer.
 
 On non-TPU backends the kernel runs in interpret mode (functionally exact,
 used by the differential tests); the serving engine's CPU hot path is the
@@ -233,3 +242,177 @@ def paged_attention(
         interpret = jax.default_backend() != "tpu"
     return _paged_attention_jit(q, k_pool, v_pool, block_table, lengths, spec,
                                 scale=scale, s_in=s_in, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Multi-query (chunked-prefill) mode
+# ---------------------------------------------------------------------------
+
+def _attend_block_mq(s, j, start_ref, q_ref, k_ref, v_ref, m_ref, l_ref,
+                     acc_ref, *, block_size: int, scale: float, groups: int):
+    """One (slot, kv_head, block) tile with C query rows.
+
+    q rows are (chunk_row, group)-flattened; row r of the chunk attends pool
+    positions <= start[s] + r — causal over the chunk, unrestricted over the
+    already-written prefix."""
+    q = q_ref[0, 0].astype(jnp.float32)              # (C*g, d)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)        # (bs, d)
+    lg = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    pos = j * block_size + jax.lax.broadcasted_iota(jnp.int32, lg.shape, 1)
+    row = jax.lax.broadcasted_iota(jnp.int32, lg.shape, 0) // groups
+    lg = jnp.where(pos <= start_ref[s] + row, lg, NEG_INF)
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(lg, axis=-1, keepdims=True))
+    p = jnp.exp(lg - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+
+def _make_paged_prefill_kernel(*, block_size: int, nblocks: int, chunk: int,
+                               scale: float, groups: int,
+                               quant: Optional[Tuple[int, int, int]] = None):
+    def kernel(bt_ref, start_ref, *refs):
+        if quant is None:
+            q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
+        else:
+            (bp_ref, encp_ref, sign_ref, bias_ref, pre_ref, sbits_ref,
+             q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref) = refs
+        s = pl.program_id(0)
+        j = pl.program_id(2)
+
+        @pl.when(j == 0)
+        def _init():
+            m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        # the chunk's last row attends start + chunk positions; every block
+        # past that is dead (skipped compute, index map clamps the DMA)
+        @pl.when(j < _live_blocks(start_ref[s] + chunk, block_size))
+        def _blk():
+            _attend_block_mq(s, j, start_ref, q_ref, k_ref, v_ref, m_ref,
+                             l_ref, acc_ref, block_size=block_size,
+                             scale=scale, groups=groups)
+
+        @pl.when(j == nblocks - 1)
+        def _finish():
+            out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+            if quant is None:
+                o_ref[0, 0] = out.astype(o_ref.dtype)
+                return
+            num_exponents, qmin, qmax = quant
+            inv_s = jax.lax.bitcast_convert_type(sbits_ref[0, 0],
+                                                 jnp.float32)
+            xq = jnp.round(out * inv_s).astype(jnp.int32)
+            y = grau_datapath(xq, bp_ref, encp_ref, sign_ref, bias_ref,
+                              pre_ref, num_exponents=num_exponents,
+                              qmin=qmin, qmax=qmax)
+            o_ref[0, 0] = y.astype(o_ref.dtype)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "s_in", "interpret"))
+def _paged_prefill_jit(
+    q: jax.Array,             # (b, C, h, d) — one chunk of C query positions
+    k_pool: jax.Array,        # (num_blocks, block_size, kvh, d)
+    v_pool: jax.Array,
+    block_table: jax.Array,   # (b, nblocks) int32; 0 = null block
+    start: jax.Array,         # (b,) int32 — chunk start position per row 0
+    spec: Optional[GRAUSpec],
+    *,
+    scale: Optional[float],
+    s_in: Optional[float],
+    interpret: bool,
+) -> jax.Array:
+    b, chunk, h, d = q.shape
+    block_size, kvh = k_pool.shape[1], k_pool.shape[2]
+    assert h % kvh == 0, (h, kvh)
+    g = h // kvh
+    nblocks = block_table.shape[1]
+    scale = scale if scale is not None else d ** -0.5
+    # (chunk_row, group)-flattened query rows, one tile per kv head
+    qg = (q.reshape(b, chunk, kvh, g, d).transpose(0, 2, 1, 3, 4)
+          .reshape(b, kvh, chunk * g, d))
+
+    def q_index(s, hh, j, *_refs):
+        return (s, hh, 0, 0)
+
+    def kv_index(s, hh, j, bt_ref, start_ref, *_rest):
+        jj = jnp.minimum(
+            j, _live_blocks(start_ref[s] + chunk, block_size) - 1)
+        return (bt_ref[s, jj], 0, hh, 0)
+
+    scalars = [block_table.astype(jnp.int32), start.astype(jnp.int32)]
+    if spec is None:
+        kernel = _make_paged_prefill_kernel(
+            block_size=block_size, nblocks=nblocks, chunk=chunk, scale=scale,
+            groups=g)
+        out_dtype = q.dtype
+    else:
+        assert s_in is not None, "GRAU epilogue needs the MAC-domain scale"
+        from repro.kernels.ops import pack_spec
+        bp, encp, sign, bias, pre = pack_spec(spec)
+        sbits = jnp.asarray(np.float32(1.0 / s_in).view(np.int32))
+        scalars += [bp.reshape(1, -1), encp.reshape(1, -1),
+                    sign.reshape(1, -1), bias.reshape(1, -1),
+                    pre.reshape(1, 1), sbits.reshape(1, 1)]
+        kernel = _make_paged_prefill_kernel(
+            block_size=block_size, nblocks=nblocks, chunk=chunk, scale=scale,
+            groups=g, quant=(spec.num_exponents, spec.qmin, spec.qmax))
+        out_dtype = jnp.int8 if spec.qmin < 0 else jnp.uint8
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=len(scalars),
+        grid=decode_grid(b, kvh, nblocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk * g, d), q_index),
+            pl.BlockSpec((1, block_size, 1, d), kv_index),
+            pl.BlockSpec((1, block_size, 1, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk * g, d), q_index),
+        scratch_shapes=[
+            pltpu.VMEM((chunk * g, 1), jnp.float32),
+            pltpu.VMEM((chunk * g, 1), jnp.float32),
+            pltpu.VMEM((chunk * g, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, chunk * g, d), out_dtype),
+        interpret=interpret,
+    )(*scalars, qg, k_pool, v_pool)
+    return (out.reshape(b, kvh, chunk, g, d).transpose(0, 2, 1, 3, 4)
+            .reshape(b, chunk, h, d))
+
+
+def paged_prefill_attention(
+    q: jax.Array,             # (b, C, h, d) — one chunk of query positions
+    k_pool: jax.Array,        # (num_blocks, block_size, kvh, d)
+    v_pool: jax.Array,
+    block_table: jax.Array,   # (b, nblocks) int32; 0 = null block
+    start: jax.Array,         # (b,) int32 — absolute position of chunk row 0
+    *,
+    scale: Optional[float] = None,
+    spec: Optional[GRAUSpec] = None,
+    s_in: Optional[float] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Flash attention for one prefill chunk over a slot's mapped blocks.
+
+    Row r attends pool positions 0..start+r (the pinned cached-prefix blocks
+    plus the chunk's own blocks — the chunk's K/V must already be written
+    through the table, exactly like decode's write-then-attend). `nblocks`
+    is the chunk-position bucket the caller chose; with `spec` (+ `s_in`)
+    the fused GRAU epilogue quantizes the output to the 8-bit bus, matching
+    the decode kernel's epilogue bit for bit.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _paged_prefill_jit(q, k_pool, v_pool, block_table, start, spec,
+                              scale=scale, s_in=s_in, interpret=interpret)

@@ -75,3 +75,41 @@ def paged_attention_ref(
         assert s_in is not None
         return attn_output_quant(o, spec, s_in)
     return o.astype(q.dtype)
+
+
+def paged_prefill_ref(
+    q: jax.Array,             # (b, C, h, d) — one prefill chunk per row
+    k_pool: jax.Array,        # (num_blocks, block_size, kvh, d)
+    v_pool: jax.Array,
+    block_table: jax.Array,   # (b, nblocks) int32
+    start: jax.Array,         # (b,) int32 — absolute position of chunk row 0
+    *,
+    scale: Optional[float] = None,
+    spec: Optional[GRAUSpec] = None,
+    s_in: Optional[float] = None,
+) -> jax.Array:
+    """Oracle for the multi-query (chunked-prefill) paged-attention mode:
+    gather the dense per-slot view through the block table, then run masked
+    softmax attention where chunk row r attends positions 0..start+r."""
+    b, chunk, h, d = q.shape
+    block_size, kvh = k_pool.shape[1], k_pool.shape[2]
+    nblocks = block_table.shape[1]
+    g = h // kvh
+    scale = scale if scale is not None else d ** -0.5
+    seq = nblocks * block_size
+    kd = k_pool[block_table].reshape(b, seq, kvh, d)
+    vd = v_pool[block_table].reshape(b, seq, kvh, d)
+    qg = q.reshape(b, chunk, kvh, g, d)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        kd.astype(jnp.float32)) * scale
+    pos = jnp.arange(seq)
+    row_end = start[:, None] + jnp.arange(chunk)[None]        # (b, C)
+    valid = pos[None, None] <= row_end[..., None]             # (b, C, s)
+    logits = jnp.where(valid[:, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bkgqd", p, vd.astype(jnp.float32))
+    o = o.transpose(0, 3, 1, 2, 4).reshape(b, chunk, h, d)
+    if spec is not None:
+        assert s_in is not None
+        return attn_output_quant(o, spec, s_in)
+    return o.astype(q.dtype)

@@ -8,6 +8,11 @@ Example:
       --temperature 0.8 --top-p 0.9 --policy prefill
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --mesh 1x4
     (on CPU, forces 4 host devices automatically; see docs/sharding.md)
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b \
+      --prefix-cache --shared-prefix 48 --prefill-chunk 32
+    (radix-tree shared-prefix KV reuse + chunked prefill; --shared-prefix
+     makes the demo requests share a synthetic system prompt so the cache
+     has something to hit)
 """
 from __future__ import annotations
 
@@ -29,6 +34,17 @@ def main() -> None:
     ap.add_argument("--backend", choices=["auto", "paged", "dense"],
                     default="auto")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix-tree shared-prefix KV reuse (paged only)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked-prefill grid step (page-size multiple; "
+                         "default auto)")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="max prefill tokens per decode tick "
+                         "(default: one chunk)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend a shared synthetic system prompt of this "
+                         "many tokens to every request (prefix-cache demo)")
     ap.add_argument("--policy", choices=["fcfs", "prefill"], default="fcfs")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
@@ -57,6 +73,9 @@ def main() -> None:
         cfg, params,
         EngineConfig(slots=args.slots, max_seq=args.max_seq, paged=paged,
                      page_size=args.page_size, policy=args.policy,
+                     prefix_cache=args.prefix_cache,
+                     prefill_chunk=args.prefill_chunk,
+                     prefill_token_budget=args.prefill_budget,
                      seed=args.seed),
         mesh=mesh)
 
@@ -65,9 +84,13 @@ def main() -> None:
     rng = np.random.default_rng(args.seed)
     enc = (np.zeros((cfg.encoder.num_frames, cfg.d_model), np.float32)
            if cfg.encoder is not None else None)
+    shared = (rng.integers(2, cfg.vocab_size, size=args.shared_prefix)
+              if args.shared_prefix else np.zeros(0, np.int64))
     reqs = [Request(rid=i,
-                    prompt=rng.integers(2, cfg.vocab_size,
-                                        size=int(rng.integers(4, 12))),
+                    prompt=np.concatenate(
+                        [shared,
+                         rng.integers(2, cfg.vocab_size,
+                                      size=int(rng.integers(4, 12)))]),
                     max_new_tokens=args.max_new, sampling=sampling,
                     encoder_frames=enc)
             for i in range(args.requests)]
@@ -75,7 +98,11 @@ def main() -> None:
     for r in done:
         print(f"req {r.rid}: prompt={len(r.prompt)} toks -> "
               f"generated {len(r.out_tokens or [])}: {(r.out_tokens or [])[:8]}...")
-    print(json.dumps(engine.metrics(), indent=2, default=str))
+    m = engine.metrics()
+    print(f"prefix cache: hit_rate={m['prefix_hit_rate']:.2f} "
+          f"cached_prefix_tokens={m['cached_prefix_tokens']} "
+          f"evictions={m['evictions']}")
+    print(json.dumps(m, indent=2, default=str))
 
 
 if __name__ == "__main__":

@@ -318,7 +318,9 @@ def set_cache_lengths(caches, lengths: jax.Array):
 def prefill_step(params, cfg: ModelConfig, tokens: jax.Array, caches, *,
                  true_length: Optional[jax.Array] = None, act=None,
                  encoder_frames: Optional[jax.Array] = None,
-                 q_chunk: int = 1024, kv_chunk: int = 1024):
+                 q_chunk: int = 1024, kv_chunk: int = 1024,
+                 paged: Optional[PagedState] = None,
+                 paged_impl: str = "gather", attn_quant=None):
     """Jitted prompt ingestion: one call per admitted prompt batch.
 
     tokens: (b, s) right-padded to a bucket length so serving never traces a
@@ -327,10 +329,29 @@ def prefill_step(params, cfg: ModelConfig, tokens: jax.Array, caches, *,
     lengths are overridden so decode masks it out). Returns the logits at the
     last real position (b, vocab) and the filled caches.
 
+    With `paged`, this is one *chunk* of the chunked-prefill state machine:
+    `caches` are the PagedKVCache pools, `paged.block_table` is the slot's
+    (bucket-sliced) table row and `paged.length` the chunk's absolute start
+    position. The chunk's K/V are written through the table and attention
+    covers the already-resident prefix blocks (cached or previously
+    computed) plus the chunk — serve/engine drives one call per grid chunk.
+    Positions past the prompt write deterministic garbage into the slot's
+    own (or trash) blocks; decode overwrites them before they are ever
+    attended.
+
     NOTE: bucket padding is only sound for attention-style caches; recurrent
     (SSM) state absorbs padded tokens, so SSM-bearing archs must be prefilled
     at exact length (the engine enforces this).
     """
+    if paged is not None:
+        b, s = tokens.shape
+        positions = (paged.length[:, None]
+                     + jnp.arange(s, dtype=jnp.int32)[None])
+        logits, new_caches, _ = apply_lm(
+            params, cfg, tokens, mode="prefill", caches=caches, act=act,
+            positions=positions, paged=paged, paged_impl=paged_impl,
+            attn_quant=attn_quant, q_chunk=q_chunk, kv_chunk=kv_chunk)
+        return logits[:, -1], new_caches
     logits, new_caches, _ = apply_lm(
         params, cfg, tokens, mode="prefill", caches=caches, act=act,
         encoder_frames=encoder_frames, q_chunk=q_chunk, kv_chunk=kv_chunk)

@@ -296,6 +296,85 @@ def paged_decode_attention(
     return o
 
 
+def paged_prefill_update(cache: PagedKVCache, k_new: jax.Array,
+                         v_new: jax.Array, st: PagedState) -> PagedKVCache:
+    """Scatter one prefill chunk's K/V into the pool through the table.
+
+    k_new/v_new: (b, C, kvh, hd) with C a block multiple; st.length holds
+    each row's block-aligned chunk start, so the chunk occupies table columns
+    start//bs .. start//bs + C//bs - 1. Columns past a slot's reservation are
+    NULL_BLOCK and land in trash, like every other unmapped write.
+    """
+    block_size = cache.k.shape[1]
+    b, chunk = k_new.shape[0], k_new.shape[1]
+    assert chunk % block_size == 0, (chunk, block_size)
+    k, v = cache.k, cache.v
+    for i in range(b):
+        base = st.length[i] // block_size
+        for j in range(chunk // block_size):
+            blk = st.block_table[i, base + j]
+            sl = slice(j * block_size, (j + 1) * block_size)
+            kb = k_new[i, sl][None].astype(k.dtype)    # (1, bs, kvh, hd)
+            vb = v_new[i, sl][None].astype(v.dtype)
+            k = jax.lax.dynamic_update_slice(k, kb, (blk, 0, 0, 0))
+            v = jax.lax.dynamic_update_slice(v, vb, (blk, 0, 0, 0))
+    return PagedKVCache(k, v)
+
+
+def paged_prefill_attention(
+    q: jax.Array,                     # (b, C, h, d) — one prefill chunk
+    cache: PagedKVCache,
+    st: PagedState,                   # table sliced to the chunk-position
+                                      # bucket; length = chunk start position
+    *,
+    impl: str = "gather",             # "gather" | "kernel"
+    quant: Optional[AttnQuant] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Chunked-prefill attention over a slot's mapped blocks: row r of the
+    chunk attends positions 0..start+r — the already-cached/computed prefix
+    plus the chunk itself (its K/V written first via `paged_prefill_update`,
+    the multi-token analogue of decode's write-then-attend).
+
+    impl="kernel" is the Pallas multi-query mode; impl="gather" the dense-
+    view fallback and oracle. Both honor the fused GRAU output epilogue and
+    return (b, C, h, d) float (dequantized when quantizing).
+    """
+    b, chunk, h, d = q.shape
+    if impl == "kernel":
+        from repro.kernels import paged_attention as paged_kernel
+        o = paged_kernel.paged_prefill_attention(
+            q, cache.k, cache.v, st.block_table, st.length, scale=scale,
+            spec=quant.spec if quant is not None else None,
+            s_in=quant.s_in if quant is not None else None)
+        if quant is not None:
+            o = o.astype(jnp.float32) * quant.s_out
+        return o.astype(q.dtype)
+    if impl != "gather":
+        raise ValueError(f"unknown paged prefill impl {impl!r}")
+    kd, vd = paged_view(cache, st)
+    kvh = kd.shape[2]
+    g = h // kvh
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, chunk, kvh, g, d)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        kd.astype(jnp.float32)) * scale
+    logits = shard_ctx.constrain(logits, "batch", "kv_heads", None, "seq",
+                                 None)
+    pos = jnp.arange(kd.shape[1])
+    row_end = st.length[:, None] + jnp.arange(chunk)[None]    # (b, C)
+    valid = pos[None, None] <= row_end[..., None]             # (b, C, s)
+    logits = jnp.where(valid[:, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bkgqd", p, vd.astype(jnp.float32))
+    o = o.transpose(0, 3, 1, 2, 4).reshape(b, chunk, h, d)
+    if quant is not None:
+        from repro.kernels.ref import attn_output_quant
+        oq = attn_output_quant(o, quant.spec, quant.s_in)
+        o = oq.astype(jnp.float32) * quant.s_out
+    return o.astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # MLA (DeepSeek-V3 Multi-head Latent Attention)
 # ---------------------------------------------------------------------------

@@ -153,6 +153,27 @@ def decode_attention_block(
     return jnp.einsum("bshk,hkd->bsd", o, params["wo"]), cache
 
 
+def paged_prefill_attention_block(
+    params, x, cfg, *, positions, cache, paged: PagedState,
+    paged_impl: str = "gather", attn_quant=None,
+) -> Tuple[jax.Array, PagedKVCache]:
+    """One prefill chunk through the paged pool. x: (b, C, d).
+
+    The chunk's K/V are scattered into the pool through the block table
+    first, then multi-query attention runs over the already-written prefix
+    blocks plus the chunk itself — write-then-attend, exactly like decode,
+    so a suffix chunk attends the pinned cached-prefix blocks without any
+    dense re-materialization. `positions` are absolute (chunk start +
+    offset) and `paged.length` carries the chunk start per batch row."""
+    q, k, v = _qkv(params, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    cache = attn_lib.paged_prefill_update(cache, k, v, paged)
+    o = attn_lib.paged_prefill_attention(q, cache, paged, impl=paged_impl,
+                                         quant=attn_quant)
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"]), cache
+
+
 # ---------------------------------------------------------------------------
 # MLA attention (deepseek-v3)
 # ---------------------------------------------------------------------------
@@ -319,6 +340,11 @@ def apply_layer(
                                                   paged=paged,
                                                   paged_impl=paged_impl,
                                                   attn_quant=attn_quant)
+        elif mode == "prefill" and paged is not None:
+            # chunked prefill into the paged pool (cache is the block pool)
+            a, cache = paged_prefill_attention_block(
+                p, h, cfg, positions=positions, cache=cache, paged=paged,
+                paged_impl=paged_impl, attn_quant=attn_quant)
         else:
             want_cache = cache if mode == "prefill" else None
             if cfg.mla is not None:

@@ -1,16 +1,31 @@
-"""Continuous-batching serving engine: paged KV cache, bucketed jitted
-prefill, decode-length buckets, pluggable admission scheduling, and
-static-shape sampling — with a decode hot loop that stays on device.
+"""Continuous-batching serving engine: paged KV cache, chunked prefill with
+radix-tree prefix reuse, decode-length buckets, pluggable admission
+scheduling, and static-shape sampling — with a decode hot loop that stays on
+device.
 
 Request lifecycle: `submit()` enqueues; each `step()` (one decode tick) the
-scheduler admits waiting requests into free slots — one jitted `prefill_step`
-call per admission, padded to a small set of bucketed lengths — then a single
-fused decode+sample+terminate jit advances every live slot one token. Slots
-whose sequence hits EOS / max_tokens are flagged *inside* the decode jit;
-the host learns about completions (and delivers tokens, recycles slots and
-blocks) only when the pending tick buffer is drained — `poll()`, a tick with
+scheduler admits waiting requests into free slots, then a single fused
+decode+sample+terminate jit advances every live slot one token. Slots whose
+sequence hits EOS / max_tokens are flagged *inside* the decode jit; the host
+learns about completions (and delivers tokens, recycles slots and blocks)
+only when the pending tick buffer is drained — `poll()`, a tick with
 admission pressure, or the pending cap — so the decode loop never blocks on a
 device->host sync per token.
+
+Paged prefill is a chunked state machine on an *absolute* grid: an admitted
+prompt's context is computed in fixed `prefill_chunk`-token chunks (each a
+jitted multi-query forward that writes the chunk's K/V through the slot's
+block table and attends the already-resident prefix blocks), interleaved
+with decode ticks under the scheduler's prefill-token budget — a long prompt
+can no longer stall decode for its whole prefill. With
+`EngineConfig.prefix_cache`, admission first matches the prompt against a
+radix tree of block-aligned cached prefixes (serve/radix_cache.py), pins the
+matched blocks into the slot's table, and prefills only the suffix chunks;
+a partially-matched final block is duplicated copy-on-write. Because the
+chunk grid, chunk-table buckets, and per-position programs never depend on
+how much prefix was cached, cache-on and cache-off admissions produce
+bit-identical pool contents and token streams — reuse only *skips* work.
+(Dense/SSM backends keep the one-shot bucketed or exact-length prefill.)
 
 Decode cost scales with live tokens, not pool capacity: the paged decode jit
 is traced once per *decode block bucket* (kv_cache.decode_block_buckets) and
@@ -87,6 +102,15 @@ class EngineConfig:
     # "gather" elsewhere/under a mesh) | "kernel" | "gather"
     attn_grau: Optional[Any] = None    # GRAUActivation-like (spec/s_in/s_out):
     # fuse the GRAU quantization epilogue on the paged attention output
+    prefill_chunk: Optional[int] = None   # chunked-prefill grid step (paged;
+    # must be a page_size multiple). None = auto: 32, rounded up to one page
+    # for large page sizes. Prompts prefill in fixed chunks on an *absolute*
+    # grid, interleaved with decode ticks
+    prefill_token_budget: Optional[int] = None  # max prefill tokens per
+    # tick across all admitted slots; None = one chunk per tick
+    prefix_cache: bool = False    # radix-tree shared-prefix KV reuse
+    # (paged only): admissions pin the longest cached block-aligned prefix
+    # and prefill only the suffix
     policy: str = "fcfs"          # "fcfs" | "prefill" (see serve/scheduler.py)
     max_prefills_per_tick: Optional[int] = None
     max_pending_ticks: int = 32   # force a host drain after this many
@@ -130,6 +154,10 @@ class _SlotState(NamedTuple):
     lengths: jax.Array     # (slots,) int32 — valid context length (paged pos)
     remaining: jax.Array   # (slots,) int32 — decode budget left
     active: jax.Array      # (slots,) bool — slot is generating
+    sample_seed: jax.Array  # (slots,) int32 — per-request PRNG stream id
+    sample_step: jax.Array  # (slots,) int32 — draws made for this request;
+    # keys fold (seed, step), never the global tick, so sampled streams are
+    # schedule-invariant (prefix-cache hits change ticks, not tokens)
 
 
 class _TickRecord(NamedTuple):
@@ -188,6 +216,9 @@ class ServeEngine:
             self._attn_quant = AttnQuant(spec=g.spec, s_in=float(g.s_in),
                                          s_out=float(g.s_out))
 
+        if ecfg.prefix_cache and not self.paged:
+            raise ValueError("prefix_cache requires the paged backend")
+
         if self.paged:
             self.blocks_per_slot = kvc.blocks_for(ecfg.max_seq, ecfg.page_size)
             num_blocks = (ecfg.num_blocks if ecfg.num_blocks is not None else
@@ -196,8 +227,46 @@ class ServeEngine:
             self.allocator = kvc.BlockAllocator(num_blocks)
             self.caches = kvc.init_paged_caches(cfg, num_blocks,
                                                 ecfg.page_size, dtype=dtype)
+            if ecfg.prefill_chunk is None:
+                # auto: 32 tokens, rounded up to a whole page so any valid
+                # page_size works out of the box
+                self.prefill_chunk = max(32, ecfg.page_size)
+                self.prefill_chunk -= self.prefill_chunk % ecfg.page_size
+            else:
+                self.prefill_chunk = int(ecfg.prefill_chunk)
+            if (self.prefill_chunk < ecfg.page_size
+                    or self.prefill_chunk % ecfg.page_size):
+                raise ValueError(
+                    f"prefill_chunk={self.prefill_chunk} must be a positive "
+                    f"multiple of page_size={ecfg.page_size}")
+            budget = (ecfg.prefill_token_budget
+                      if ecfg.prefill_token_budget is not None
+                      else self.prefill_chunk)
+            if budget < self.prefill_chunk:
+                raise ValueError(
+                    f"prefill_token_budget={budget} below one chunk "
+                    f"({self.prefill_chunk}): admitted prompts could never "
+                    "finish prefilling")
+            self._prefill_budget = budget
+            # the table carries chunk-grid spill columns past blocks_per_slot
+            # (always NULL): the last grid chunk of a near-max_seq prompt may
+            # cover positions past the slot's reservation, and those writes
+            # must land in trash, not in a clamped (wrong) block
+            self._chunk_cols = (self.blocks_per_slot
+                                + self.prefill_chunk // ecfg.page_size)
+            self.chunk_buckets = kvc.decode_block_buckets(self._chunk_cols)
+            # widths organic traffic can actually reach (warmup traces
+            # exactly these; ladder entries past the last grid chunk never
+            # occur and would be wasted compiles)
+            self.chunk_widths = tuple(sorted({
+                kvc.chunk_table_width(p0, self.prefill_chunk,
+                                      ecfg.page_size, self.chunk_buckets)
+                for p0 in range(0, ecfg.max_seq - 1, self.prefill_chunk)}))
             self.block_table = np.zeros(
-                (ecfg.slots, self.blocks_per_slot), np.int32)
+                (ecfg.slots, self._chunk_cols), np.int32)
+            from repro.serve.radix_cache import RadixCache
+            self.radix = (RadixCache(self.allocator, ecfg.page_size)
+                          if ecfg.prefix_cache else None)
             if ecfg.decode_buckets is not None:
                 self.decode_buckets = tuple(sorted(set(ecfg.decode_buckets)))
                 if (self.decode_buckets[0] < 1
@@ -212,6 +281,7 @@ class ServeEngine:
             self.caches = lm.init_caches(cfg, ecfg.slots, ecfg.max_seq,
                                          dtype=dtype)
             self.decode_buckets = ()
+            self.radix = None
 
         if mesh is not None:
             from repro.serve import sharding as shard_lib
@@ -250,12 +320,21 @@ class ServeEngine:
             lengths=jnp.zeros((ecfg.slots,), jnp.int32),
             remaining=jnp.zeros((ecfg.slots,), jnp.int32),
             active=jnp.zeros((ecfg.slots,), bool),
+            sample_seed=jnp.zeros((ecfg.slots,), jnp.int32),
+            sample_step=jnp.zeros((ecfg.slots,), jnp.int32),
         )
         self._pending: List[_TickRecord] = []
+        self._prefilling: List[int] = []     # slots mid-chunked-prefill,
+        # admission order; chunk grants rotate round-robin across them
+        self._prefill_rr = 0
 
-        self.scheduler = Scheduler(ecfg.policy, ecfg.max_prefills_per_tick)
+        self.scheduler = Scheduler(
+            ecfg.policy, ecfg.max_prefills_per_tick,
+            prefill_token_budget=(self._prefill_budget if self.paged
+                                  else None))
         self.stats: Dict[str, Any] = {"ticks": 0, "decode_tokens": 0,
-                                      "prefill_tokens": 0}
+                                      "prefill_tokens": 0,
+                                      "cached_prefix_tokens": 0}
         self._key = jax.random.PRNGKey(ecfg.seed)
         self._requests: Dict[int, Request] = {}
         self._finished_unpolled: List[RequestState] = []
@@ -263,20 +342,28 @@ class ServeEngine:
         # the cache tree and slot state are dead after every call
         # (immediately reassigned), so donate them: XLA aliases input->output
         # buffers in place instead of copying the KV pool per decoded token
-        decode_fn, prefill_fn, reset_fn = (self._decode_fn, self._prefill_fn,
-                                           self._reset_fn)
+        decode_fn, prefill_fn, reset_fn, chunk_fn = (
+            self._decode_fn, self._prefill_fn, self._reset_fn, self._chunk_fn)
         if mesh is not None:
             # activation-sharding constraints must be live while these trace
             from repro.serve import sharding as shard_lib
             decode_fn = shard_lib.with_shard_ctx(decode_fn, mesh, cfg)
             prefill_fn = shard_lib.with_shard_ctx(prefill_fn, mesh, cfg)
+            chunk_fn = shard_lib.with_shard_ctx(chunk_fn, mesh, cfg)
         self._decode = _CountingJit(decode_fn, "decode",
                                     donate_argnums=(1, 2))
         self._prefill = _CountingJit(prefill_fn, "prefill",
                                      donate_argnums=(3,))
         self._reset = _CountingJit(reset_fn, "reset_slot",
                                    donate_argnums=(0,))
-        self._jits = (self._decode, self._prefill, self._reset)
+        # chunked-prefill chunk forward + the copy-on-write block copy
+        # (partial-block prefix reuse); paged engines only
+        self._chunk = _CountingJit(chunk_fn, "prefill_chunk",
+                                   donate_argnums=(2,))
+        self._copy = _CountingJit(self._copy_fn, "cow_copy",
+                                  donate_argnums=(0,))
+        self._jits = (self._decode, self._prefill, self._reset, self._chunk,
+                      self._copy)
 
     # --- jitted bodies ---------------------------------------------------
 
@@ -294,7 +381,13 @@ class ServeEngine:
                                         caches, act=self._act, paged=paged,
                                         paged_impl=self.paged_impl,
                                         attn_quant=self._attn_quant)
-        nxt = samp_lib.sample(logits[:, -1], sp, key)
+        # per-slot keys from (request stream id, draws so far): sampling is a
+        # pure function of the request and its progress, not of when the
+        # scheduler happened to run it
+        keys = jax.vmap(
+            lambda s, c: jax.random.fold_in(jax.random.fold_in(key, s), c)
+        )(state.sample_seed, state.sample_step)
+        nxt = samp_lib.sample(logits[:, -1], sp, keys)
         act_i = state.active.astype(jnp.int32)
         remaining = state.remaining - act_i
         done = state.active & ((nxt == self.ecfg.eos_id) | (remaining <= 0))
@@ -304,28 +397,48 @@ class ServeEngine:
             lengths=state.lengths + act_i,
             remaining=remaining,
             active=state.active & ~done,
+            sample_seed=state.sample_seed,
+            sample_step=state.sample_step + 1,
         )
         return caches, state, nxt, done
 
-    def _prefill_fn(self, params, tokens, true_length, caches, slot_or_row,
+    def _prefill_fn(self, params, tokens, true_length, caches, slot,
                     encoder_frames):
-        """One admitted prompt: run prefill_step on a fresh (1, bucket) cache
-        and install it — block scatter (paged) or slot row insert (dense)."""
+        """One admitted prompt on the *dense* backend: run prefill_step on a
+        fresh (1, bucket) cache and insert it as the slot's row. (Paged
+        prompts go through _chunk_fn — the chunked-prefill state machine —
+        and never call this.)"""
         pcaches = lm.init_caches(self.cfg, 1, tokens.shape[1],
                                  dtype=self.dtype)
         _, filled = lm.prefill_step(params, self.cfg, tokens, pcaches,
                                     true_length=true_length, act=self._act,
                                     encoder_frames=encoder_frames)
-        if self.paged:
-            return kvc.write_prompt_blocks(caches, filled, slot_or_row,
-                                           self.ecfg.page_size)
 
         def ins(big, small):
-            start = (0, slot_or_row) + (0,) * (big.ndim - 2)
+            start = (0, slot) + (0,) * (big.ndim - 2)
             return jax.lax.dynamic_update_slice(
                 big, small.astype(big.dtype), start)
 
         return jax.tree.map(ins, caches, filled)
+
+    def _chunk_fn(self, params, tokens, caches, table_row, p0):
+        """One chunk of the chunked-prefill state machine: tokens (1, C) at
+        absolute positions p0..p0+C-1, written through the slot's (bucket-
+        sliced) table row and attending the already-resident prefix blocks —
+        cached (pinned from the radix tree) and freshly computed blocks are
+        indistinguishable here, which is what keeps cache-on and cache-off
+        admissions bit-identical."""
+        st = PagedState(table_row, p0)
+        _, caches = lm.prefill_step(params, self.cfg, tokens, caches,
+                                    act=self._act, paged=st,
+                                    paged_impl=self.paged_impl,
+                                    attn_quant=self._attn_quant)
+        return caches
+
+    def _copy_fn(self, caches, src, dst):
+        """Copy-on-write: duplicate a partially-matched cached block into a
+        slot-private block before decode writes into it."""
+        return kvc.copy_pool_block(caches, src, dst)
 
     def _reset_fn(self, caches, slot):
         """Zero one slot's recurrent state / cache lengths (empty-context
@@ -394,35 +507,74 @@ class ServeEngine:
         return kvc.blocks_for(rs.prompt_len + rs.max_new_tokens,
                               self.ecfg.page_size)
 
-    def _can_admit(self, rs: RequestState) -> bool:
-        return (not self.paged) or self.allocator.can_alloc(
-            self._blocks_needed(rs))
+    def _match_prefix(self, rs: RequestState):
+        """Longest usable cached prefix for `rs` under the chunk grid:
+        (match, blocks, nodes, cached_tokens, cow_src). Pure — the engine
+        commits the match (LRU bump + hit/miss accounting) only once the
+        admission actually lands.
 
-    def _admit(self, rs: RequestState) -> None:
+        Full coverage (the whole context cached — block-aligned, or via a
+        copy-on-write partial block) uses every matched block; otherwise
+        reuse rounds *down* to a chunk-grid multiple so the suffix chunks
+        land on the same absolute grid positions — and therefore run the
+        same compiled programs on the same inputs — as a cache-off
+        admission. That rounding is what makes cache-on/cache-off token
+        streams and pool contents bit-identical.
+        """
+        ctx = rs.prompt_len - 1
+        if self.radix is None or ctx <= 0:
+            return None, [], [], 0, None
+        # memoized per request on the radix mutation clock: _can_admit and
+        # _admit_paged (and blocked-head retries across quiet ticks) share
+        # one trie walk instead of re-tupling the whole context each time
+        memo = rs.match_memo
+        if memo is not None and memo[0] == self.radix.clock:
+            return memo[1]
+        m = self.radix.match(rs.prompt[:ctx])
+        if m.tokens_matched + m.cow_tokens >= ctx:
+            out = (m, m.blocks, m.nodes, ctx, m.cow_src)
+        else:
+            used = ((m.tokens_matched // self.prefill_chunk)
+                    * self.prefill_chunk)
+            nb = used // self.ecfg.page_size
+            out = (m, m.blocks[:nb], m.nodes[:nb], used, None)
+        rs.match_memo = (self.radix.clock, out)
+        return out
+
+    def _can_admit(self, rs: RequestState) -> bool:
+        if not self.paged:
+            return True
+        need = self._blocks_needed(rs)
+        if self.radix is None:
+            return self.allocator.can_alloc(need)
+        _, blocks, _, _, _ = self._match_prefix(rs)
+        if need - len(blocks) <= self.allocator.free_blocks:
+            return True      # fits without eviction: skip the trie walk
+        # cache-only blocks are evictable headroom, but the matched chain is
+        # about to be pinned — never count it as both reused and evictable
+        headroom = max(0, self.radix.evictable_blocks() - len(blocks))
+        return need - len(blocks) <= self.allocator.free_blocks + headroom
+
+    def _admit(self, rs: RequestState) -> bool:
+        """Admit one picked request; False means the reservation no longer
+        fits (same-tick over-commit) and the caller must requeue it."""
         slot = self.slot_req.index(None)
         ctx = rs.prompt_len - 1       # prompt[-1] is fed by the first decode
-        # resolve the bucket before committing blocks: a ValueError here must
-        # not leak pool blocks
+        if self.paged:
+            return self._admit_paged(slot, rs, ctx)
+
+        # dense backend: one-shot prefill at admission (bucketed, or exact
+        # length for recurrent SSM state), then immediate activation
         bucket = (kvc.bucket_for(max(ctx, 1), self.buckets)
                   if self.bucketed else None)
-
-        if self.paged:
-            blocks = self.allocator.alloc(self._blocks_needed(rs))
-            assert blocks is not None   # guarded by _can_admit
-            rs.blocks = blocks
-            row = np.zeros(self.blocks_per_slot, np.int32)
-            row[:len(blocks)] = blocks
-            self.block_table[slot] = row
-
         if self.bucketed:
             toks = np.zeros((1, bucket), np.int32)
             toks[0, :ctx] = rs.prompt[:ctx]
             tl = np.array([ctx], np.int32)
             ef = (rs.encoder_frames[None].astype(np.float32)
                   if rs.encoder_frames is not None else None)
-            target = self.block_table[slot] if self.paged else np.int32(slot)
             self.caches = self._prefill(self.params, toks, tl, self.caches,
-                                        target, ef)
+                                        np.int32(slot), ef)
         elif ctx == 0:
             self.caches = self._reset(self.caches, np.int32(slot))
         else:
@@ -431,13 +583,90 @@ class ServeEngine:
             tl = np.array([ctx], np.int32)
             self.caches = self._prefill(self.params, toks, tl, self.caches,
                                         np.int32(slot), None)
-
         self.stats["prefill_tokens"] += ctx
+        rs.computed_prefill_tokens = ctx
+        rs.prefill_pos = rs.prefill_ctx = ctx
+        self._activate(slot, rs)
+        return True
+
+    def _admit_paged(self, slot: int, rs: RequestState, ctx: int) -> bool:
+        """Reserve blocks, pin the longest cached prefix, and arm the
+        chunk-grid suffix prefill. The decode-visible table row stays NULL
+        until activation, so ghost decode writes keep landing in trash while
+        the slot is still prefilling."""
+        total = self._blocks_needed(rs)
+        match, cached, nodes, cached_tokens, cow_src = self._match_prefix(rs)
+        if cached:
+            # pin + hold before any eviction runs: the matched chain must
+            # survive the allocation below even under pool pressure
+            self.radix.pin(nodes)
+            self.allocator.incref(cached)
+        need_new = total - len(cached)
+        if self.radix is not None and not self.allocator.can_alloc(need_new):
+            self.radix.evict(need_new)
+        blocks = self.allocator.alloc(need_new)
+        if blocks is None:
+            # over-committed within a multi-admission tick: every pick's
+            # headroom was evaluated against the same free/evictable set
+            # before any admission landed. Undo the holds; step() requeues
+            # the failures in arrival order and they retry next tick.
+            if cached:
+                self.allocator.free(cached)
+                self.radix.unpin(nodes)
+            return False
+        if match is not None:
+            # the admission is committed: now the hit/miss counts and the
+            # LRU clock may move (requeued retries never get here twice)
+            self.radix.commit(match)
+        rs.blocks = blocks
+        rs.cached_blocks = list(cached)
+        rs.radix_nodes = nodes
+        row = np.zeros(self._chunk_cols, np.int32)
+        row[:len(cached)] = cached
+        row[len(cached):total] = blocks
+        rs.table_row = row
+        if cow_src is not None:
+            # partial-block divergence: decode writes position ctx into the
+            # block holding the matched partial prefix — copy it into the
+            # slot's first private block so the shared copy stays pristine
+            self.caches = self._copy(self.caches, np.int32(cow_src),
+                                     np.int32(row[len(cached)]))
+        rs.slot = slot
+        self.slot_req[slot] = rs
+        rs.prefill_pos = cached_tokens
+        rs.prefill_ctx = ctx
+        # full coverage (block-aligned or COW) needs no chunks and may sit
+        # off the grid; partial reuse is always rounded onto it
+        rs.pending_chunks = ([] if cached_tokens >= ctx else
+                             list(kvc.chunk_starts(cached_tokens, ctx,
+                                                   self.prefill_chunk)))
+        rs.match_memo = None
+        rs.cached_prefix_tokens = cached_tokens
+        self.stats["cached_prefix_tokens"] += cached_tokens
+        # incremental-publish cursor: suffix chunks extend the trie from the
+        # end of the matched chain instead of re-walking from the root
+        rs.published_blocks = len(cached)
+        rs.radix_tail = nodes[-1] if nodes else None
+        if not rs.pending_chunks:
+            self._activate(slot, rs)
+        else:
+            self._prefilling.append(slot)
+        return True
+
+    def _activate(self, slot: int, rs: RequestState) -> None:
+        """Prefill complete: make the slot decode-visible (install its block
+        table row, arm the device slot state) and publish its full-block
+        prompt prefix to the radix cache for future admissions."""
+        ctx = rs.prefill_ctx
+        if self.paged:
+            self.block_table[slot] = rs.table_row
+            # suffix-chunk blocks were published per chunk as they were
+            # enqueued; fully-cached admissions have nothing new to insert
         rs.slot = slot
         self.slot_req[slot] = rs
         self._host_len[slot] = ctx
         self._samp[slot] = rs.sampling
-        # packed sampler state is rebuilt here (admissions) only — never in
+        # packed sampler state is rebuilt here (activations) only — never in
         # the per-tick hot loop
         self._sp_packed = samp_lib.pack(self._samp)
         st = self._state
@@ -446,7 +675,87 @@ class ServeEngine:
             lengths=st.lengths.at[slot].set(ctx),
             remaining=st.remaining.at[slot].set(int(rs.max_new_tokens)),
             active=st.active.at[slot].set(True),
+            sample_seed=st.sample_seed.at[slot].set(
+                int(rs.rid) & 0x7FFFFFFF),
+            sample_step=st.sample_step.at[slot].set(0),
         )
+
+    def _run_chunk(self, rs: RequestState) -> None:
+        p0 = rs.pending_chunks.pop(0)
+        C = self.prefill_chunk
+        W = kvc.chunk_table_width(p0, C, self.ecfg.page_size,
+                                  self.chunk_buckets)
+        toks = np.zeros((1, C), np.int32)
+        n = min(rs.prefill_ctx - p0, C)
+        toks[0, :n] = rs.prompt[p0:p0 + n]
+        self.caches = self._chunk(self.params, toks, self.caches,
+                                  rs.table_row[None, :W],
+                                  np.array([p0], np.int32))
+        rs.prefill_pos = p0 + C
+        rs.computed_prefill_tokens += n
+        self.stats["prefill_tokens"] += n
+        if self.radix is not None:
+            # publish the newly completed full blocks immediately (not at
+            # activation): a same-prefix request admitted one tick later can
+            # already pin them — enqueue order makes the values visible to
+            # any later reader via device data dependencies. The cursor
+            # resumes from the last published node, so a long prompt walks
+            # each trie level once, not once per chunk.
+            bs = self.ecfg.page_size
+            nfull = min(rs.prefill_pos, rs.prefill_ctx) // bs
+            prev = rs.published_blocks
+            if nfull > prev:
+                tail, walked = self.radix.insert(
+                    rs.prompt[prev * bs:nfull * bs],
+                    list(rs.table_row[prev:nfull]), node=rs.radix_tail)
+                # pin the extended chain: the resume cursor must survive
+                # eviction until retirement unpins it
+                self.radix.pin(walked)
+                rs.radix_nodes.extend(walked)
+                rs.radix_tail = tail
+                rs.published_blocks = nfull
+
+    def _run_prefill_chunks(self) -> int:
+        """Advance mid-prefill slots on the absolute chunk grid, spending at
+        most the scheduler's per-tick prefill token budget — the pacing that
+        keeps one long prompt from stalling every live decode.
+
+        Grants rotate round-robin across prefilling slots (one chunk per
+        slot per pass, starting offset advancing each tick), so a 13-chunk
+        prompt cannot head-of-line-block a 1-chunk prompt admitted behind
+        it. Chunk order across slots is value-invisible: slots write
+        disjoint blocks and shared cached blocks are read-only, so fairness
+        here is pure scheduling — token streams stay bit-identical.
+        Returns the number of chunks run."""
+        if not self._prefilling:
+            return 0
+        budget = self.scheduler.prefill_token_budget
+        C = self.prefill_chunk
+        start = self._prefill_rr % len(self._prefilling)
+        self._prefill_rr += 1
+        order = self._prefilling[start:] + self._prefilling[:start]
+        ran = 0
+        progressed = True
+        while budget >= C and progressed:
+            progressed = False
+            for slot in order:
+                if budget < C:
+                    break
+                rs = self.slot_req[slot]
+                if rs.pending_chunks:
+                    self._run_chunk(rs)
+                    budget -= C
+                    ran += 1
+                    progressed = True
+        still: List[int] = []
+        for slot in self._prefilling:
+            rs = self.slot_req[slot]
+            if not rs.pending_chunks:
+                self._activate(slot, rs)
+            else:
+                still.append(slot)
+        self._prefilling = still
+        return ran
 
     def _retire(self, slot: int, rs: RequestState, reason: str,
                 now: float, tick: int) -> None:
@@ -456,6 +765,14 @@ class ServeEngine:
         if self.paged:
             self.allocator.free(rs.blocks)
             rs.blocks = []
+            if rs.cached_blocks:
+                # drop the slot's hold on shared prefix blocks (the cache's
+                # own reference keeps them warm) and unpin the chain
+                self.allocator.free(rs.cached_blocks)
+                rs.cached_blocks = []
+            if rs.radix_nodes:
+                self.radix.unpin(rs.radix_nodes)
+                rs.radix_nodes = []
             self.block_table[slot] = kvc.NULL_BLOCK
         self._finished_unpolled.append(rs)
 
@@ -481,17 +798,28 @@ class ServeEngine:
             self._drain()
             free = self.slot_req.count(None)
             if free:
-                for rs in self.scheduler.pick(free, self.stats["ticks"],
-                                              self._can_admit):
-                    self._admit(rs)
+                not_admitted = [
+                    rs for rs in self.scheduler.pick(
+                        free, self.stats["ticks"], self._can_admit)
+                    if not self._admit(rs)]
+                # requeue failures back-to-front so appendleft restores
+                # arrival order at the queue head
+                for rs in reversed(not_admitted):
+                    self.scheduler.requeue_front(rs)
 
-        active = [s for s, r in enumerate(self.slot_req) if r is not None]
+        if self.paged:
+            # chunked prefill interleaves with decode under the budget;
+            # slots still mid-prefill are excluded from the decode batch
+            self._run_prefill_chunks()
+
+        active = [s for s, r in enumerate(self.slot_req)
+                  if r is not None and not r.pending_chunks]
         if not active:
             return 0
 
-        key = jax.random.fold_in(self._key, self.stats["ticks"])
         bt = (self.block_table[:, :self._decode_bucket(active)]
               if self.paged else None)
+        key = self._key    # per-slot keys are derived inside the decode jit
         self.caches, self._state, nxt, done = self._decode(
             self.params, self.caches, self._state, bt, self._sp_packed, key)
         self._pending.append(_TickRecord(self.stats["ticks"], tuple(active),
@@ -549,17 +877,26 @@ class ServeEngine:
             self.caches, self._state, _, _ = self._decode(
                 self.params, self.caches, self._state, bt, self._sp_packed,
                 key)
-        if prefill and self.bucketed:
+        if prefill and self.paged:
+            # chunked prefill: one trace per chunk-table bucket, plus the
+            # copy-on-write block copy — all against the null/trash block
+            toks = np.zeros((1, self.prefill_chunk), np.int32)
+            p0 = np.zeros(1, np.int32)
+            for w in self.chunk_widths:
+                row = np.full((1, w), kvc.NULL_BLOCK, np.int32)
+                self.caches = self._chunk(self.params, toks, self.caches,
+                                          row, p0)
+            self.caches = self._copy(self.caches, np.int32(kvc.NULL_BLOCK),
+                                     np.int32(kvc.NULL_BLOCK))
+        elif prefill and self.bucketed:
             ef = (np.zeros((1, self.cfg.encoder.num_frames, self.cfg.d_model),
                            np.float32) if self.cfg.encoder is not None
                   else None)
             for b in self.buckets:
                 toks = np.zeros((1, b), np.int32)
                 tl = np.array([1], np.int32)
-                target = (np.full(self.blocks_per_slot, kvc.NULL_BLOCK,
-                                  np.int32) if self.paged else np.int32(0))
                 self.caches = self._prefill(self.params, toks, tl,
-                                            self.caches, target, ef)
+                                            self.caches, np.int32(0), ef)
         return self.compile_count()
 
     # --- synchronous driver ----------------------------------------------
@@ -621,11 +958,25 @@ class ServeEngine:
         m["compiles"] = self.compile_count()
         m["compiles_by_fn"] = {j.name: j.compiles for j in self._jits}
         m["backend"] = "paged" if self.paged else "dense"
+        # prefix-cache counters are always present (zero when disabled) so
+        # dashboards/launchers can report them unconditionally
+        cached = self.stats["cached_prefix_tokens"]
+        computed = self.stats["prefill_tokens"]
+        m["cached_prefix_tokens"] = cached
+        m["prefix_hit_rate"] = cached / max(cached + computed, 1)
+        m["evictions"] = self.radix.evictions if self.radix else 0
         if self.paged:
             m["paged_impl"] = self.paged_impl
             m["decode_buckets"] = list(self.decode_buckets)
             m["free_blocks"] = self.allocator.free_blocks
             m["total_blocks"] = self.allocator.num_blocks
+            m["prefill_chunk"] = self.prefill_chunk
+            m["prefill_token_budget"] = self._prefill_budget
+            m["prefix_cache"] = self.radix is not None
+            if self.radix is not None:
+                m["prefix_cache_nodes"] = self.radix.num_nodes()
+                m["prefix_cache_hits"] = self.radix.hits
+                m["prefix_cache_misses"] = self.radix.misses
         if self.mesh is not None:
             from repro.serve import sharding as shard_lib
             m["mesh"] = shard_lib.mesh_summary(self.mesh)

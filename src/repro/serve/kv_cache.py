@@ -1,11 +1,12 @@
 """Paged KV-cache management for the serving engine.
 
 Storage is a pool of fixed-size blocks per layer (nn/attention.PagedKVCache);
-this module owns everything around it: the host-side block allocator
-(admission control + free-list recycling), pool construction mirroring
-lm.init_caches' (group, period-layer, repeats) tree structure, prompt-length
-bucketing, and the jit-friendly scatter that moves a bucket-padded prefill
-cache into a slot's blocks.
+this module owns everything around it: the host-side refcounted block
+allocator (admission control + free-list recycling + prefix sharing), pool
+construction mirroring lm.init_caches' (group, period-layer, repeats) tree
+structure, the prompt / decode-block / chunk-table bucket ladders, and the
+copy-on-write pool block copy. (The chunk K/V scatter itself lives with the
+attention code: nn/attention.paged_prefill_update.)
 
 Conventions
 -----------
@@ -21,13 +22,13 @@ Conventions
 from __future__ import annotations
 
 import math
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
-from repro.nn.attention import KVCache, PagedKVCache
+from repro.nn.attention import PagedKVCache
 
 NULL_BLOCK = 0
 
@@ -79,6 +80,32 @@ def decode_block_buckets(blocks_per_slot: int) -> Tuple[int, ...]:
     return tuple(sorted(set(buckets)))
 
 
+def chunk_starts(cached_tokens: int, ctx: int, chunk: int) -> Tuple[int, ...]:
+    """Absolute chunk-grid start positions covering [cached_tokens, ctx).
+
+    Chunked prefill always runs on the *absolute* grid (chunk k covers
+    positions [k*chunk, (k+1)*chunk)), never on a grid relative to the cached
+    prefix: that way cache-on and cache-off admissions execute the exact same
+    compiled chunk programs on bit-identical inputs, and prefix reuse only
+    decides which grid chunks are skipped. `cached_tokens` must sit on the
+    grid (the engine rounds reuse down to a chunk multiple).
+    """
+    if cached_tokens % chunk:
+        raise ValueError(f"cached prefix {cached_tokens} off the chunk grid "
+                         f"(chunk={chunk})")
+    return tuple(range(cached_tokens, max(ctx, cached_tokens), chunk))
+
+
+def chunk_table_width(p0: int, chunk: int, block_size: int,
+                      buckets: Sequence[int]) -> int:
+    """Block-table width for the chunk starting at `p0`: the smallest bucket
+    covering prefix + chunk. A pure function of the grid position (never of
+    how much prefix was cached), so the set of traced chunk programs — and
+    each position's compiled computation — is identical with and without
+    prefix caching."""
+    return bucket_for(blocks_for(p0 + chunk, block_size), buckets)
+
+
 # ---------------------------------------------------------------------------
 # Host-side block allocator
 # ---------------------------------------------------------------------------
@@ -88,17 +115,34 @@ def blocks_for(tokens: int, block_size: int) -> int:
 
 
 class BlockAllocator:
-    """Free-list allocator over the pool's block ids (block 0 reserved)."""
+    """Refcounted free-list allocator over the pool's block ids.
+
+    Block 0 (the null/trash block) is reserved and never handed out. Blocks
+    come back refcount 1 from `alloc`; prefix sharing (serve/radix_cache.py)
+    takes extra references with `incref`, and `free` *decrements* — a block
+    returns to the free list only when its last holder lets go.
+
+    Every transition is guarded: freeing a block that is not currently
+    allocated (double-free, never-allocated id, out-of-range id, the null
+    block) raises instead of silently appending to the free list — the
+    failure mode that corrupted the free list was a block appearing twice
+    and then being handed to two slots at once.
+    """
 
     def __init__(self, num_blocks: int):
         if num_blocks < 2:
             raise ValueError("need >= 2 blocks (block 0 is the null block)")
         self.num_blocks = num_blocks
         self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+        self._refs: Dict[int, int] = {}     # live block id -> refcount
 
     @property
     def free_blocks(self) -> int:
         return len(self._free)
+
+    @property
+    def live_blocks(self) -> int:
+        return len(self._refs)
 
     def can_alloc(self, n: int) -> bool:
         return n <= len(self._free)
@@ -107,12 +151,42 @@ class BlockAllocator:
         if not self.can_alloc(n):
             return None
         taken = [self._free.pop() for _ in range(n)]
+        for b in taken:
+            self._refs[b] = 1
         return taken
 
-    def free(self, blocks: Sequence[int]) -> None:
+    def refcount(self, block: int) -> int:
+        return self._refs.get(block, 0)
+
+    def incref(self, blocks: Sequence[int]) -> None:
+        """Take an extra reference on already-allocated blocks (prefix
+        sharing: a slot pinning cached blocks, the radix cache retaining a
+        retired request's prefix)."""
         for b in blocks:
-            assert b != NULL_BLOCK, "null block is never allocated"
-            self._free.append(b)
+            if b not in self._refs:
+                raise ValueError(f"incref of unallocated block {b}")
+            self._refs[b] += 1
+
+    def free(self, blocks: Sequence[int]) -> None:
+        """Drop one reference per block; recycle at refcount zero.
+
+        Raises ValueError on the null block, out-of-range ids, and blocks
+        that are not currently allocated (double-free / never-allocated).
+        """
+        for b in blocks:
+            if b == NULL_BLOCK:
+                raise ValueError("free of the null block (never allocated)")
+            if not (0 < b < self.num_blocks):
+                raise ValueError(f"free of out-of-range block id {b} "
+                                 f"(pool has {self.num_blocks} blocks)")
+            refs = self._refs.get(b)
+            if refs is None:
+                raise ValueError(f"double-free (or never-allocated) block {b}")
+            if refs > 1:
+                self._refs[b] = refs - 1
+            else:
+                del self._refs[b]
+                self._free.append(b)
 
 
 # ---------------------------------------------------------------------------
@@ -152,32 +226,29 @@ def init_paged_caches(cfg: ModelConfig, num_blocks: int, block_size: int, *,
 
 
 # ---------------------------------------------------------------------------
-# Prefill -> pool scatter
+# Pool block ops
 # ---------------------------------------------------------------------------
 
-def write_prompt_blocks(pools, prefill_caches, block_row: jax.Array,
-                        block_size: int):
-    """Scatter a (b=1, bucket)-shaped dense prefill cache into pool blocks.
+def copy_pool_block(pools, src: jax.Array, dst: jax.Array):
+    """Copy one block (every layer's K and V) from pool id `src` to `dst`.
 
-    block_row: (blocks_per_slot,) int32 — the admitted slot's block-table row.
-    Bucket blocks past the reservation map to NULL_BLOCK and land in trash.
-    Each block write is a lax.dynamic_update_slice at a traced block id, so
-    the whole scatter stays inside the per-bucket prefill jit.
+    The copy-on-write step for partial-block prefix reuse: a cached block
+    whose leading tokens match the new prompt is duplicated into a
+    slot-private block before decode starts writing into it, so the shared
+    cached copy is never mutated. `src`/`dst` are traced scalars — one jit
+    trace covers every copy.
     """
-    def one(pool, pre):
-        assert isinstance(pool, PagedKVCache) and isinstance(pre, KVCache)
-        bucket = pre.k.shape[2]
-        assert bucket % block_size == 0, (bucket, block_size)
-        k, v = pool.k, pool.v
-        for j in range(bucket // block_size):
-            sl = slice(j * block_size, (j + 1) * block_size)
-            kb = pre.k[:, 0, sl][:, None].astype(k.dtype)   # (reps,1,bs,kvh,hd)
-            vb = pre.v[:, 0, sl][:, None].astype(v.dtype)
-            start = (0, block_row[j], 0, 0, 0)
-            k = jax.lax.dynamic_update_slice(k, kb, start)
-            v = jax.lax.dynamic_update_slice(v, vb, start)
-        return PagedKVCache(k, v)
+    def one(pool):
+        assert isinstance(pool, PagedKVCache)
 
-    return jax.tree.map(
-        one, pools, prefill_caches,
-        is_leaf=lambda c: isinstance(c, (PagedKVCache, KVCache)))
+        def cp(buf):
+            blk = jax.lax.dynamic_slice(
+                buf, (0, src) + (0,) * (buf.ndim - 2),
+                (buf.shape[0], 1) + buf.shape[2:])
+            return jax.lax.dynamic_update_slice(
+                buf, blk, (0, dst) + (0,) * (buf.ndim - 2))
+
+        return PagedKVCache(cp(pool.k), cp(pool.v))
+
+    return jax.tree.map(one, pools,
+                        is_leaf=lambda c: isinstance(c, PagedKVCache))

@@ -56,6 +56,12 @@ def sample(logits: jax.Array, sp: SamplerBatch, key: jax.Array) -> jax.Array:
     One full-vocab descending sort is shared by the top-k threshold and the
     top-p cumulative cutoff; both reduce to per-slot scalar thresholds applied
     in the original token order, so ties never permute token identity.
+
+    `key` is either one PRNG key for the whole batch or a (slots,)-batch of
+    per-slot keys. The engine derives one key per slot from the request's
+    identity and its decode progress, never from the global tick — sampled
+    streams are then invariant to scheduling (prefix-cache hits and chunked
+    prefill change *when* a slot decodes, and must not change its tokens).
     """
     logits = logits.astype(jnp.float32)
     vocab = logits.shape[-1]
@@ -80,5 +86,11 @@ def sample(logits: jax.Array, sp: SamplerBatch, key: jax.Array) -> jax.Array:
     keep_p = scaled >= cutoff[:, None]
 
     masked = jnp.where(keep_k & keep_p, scaled, NEG_INF)
-    sampled = jax.random.categorical(key, masked, axis=-1).astype(jnp.int32)
+    typed = jnp.issubdtype(key.dtype, jax.dtypes.prng_key)
+    if key.ndim >= 2 or (typed and key.ndim >= 1):
+        sampled = jax.vmap(jax.random.categorical)(key, masked)
+        sampled = sampled.astype(jnp.int32)
+    else:
+        sampled = jax.random.categorical(key, masked, axis=-1)
+        sampled = sampled.astype(jnp.int32)
     return jnp.where(sp.greedy, greedy_tok, sampled)

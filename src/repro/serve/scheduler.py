@@ -47,6 +47,24 @@ class RequestState:
     slot: int = -1
     blocks: List[int] = dataclasses.field(default_factory=list)
     finish_reason: str = ""        # "eos" | "max_tokens"
+    # chunked-prefill state machine (paged engines): next grid position to
+    # compute and the context target; prefill_pos >= prefill_ctx <=> the slot
+    # is decoding. Prefix-cache accounting rides along per request.
+    prefill_pos: int = 0
+    prefill_ctx: int = 0
+    cached_prefix_tokens: int = 0
+    computed_prefill_tokens: int = 0
+    cached_blocks: List[int] = dataclasses.field(default_factory=list)
+    radix_nodes: List = dataclasses.field(default_factory=list)
+    table_row: Optional[np.ndarray] = None
+    # incremental radix publish cursor: full blocks already in the trie and
+    # the deepest published node (pinned, so eviction cannot detach it)
+    published_blocks: int = 0
+    radix_tail: Optional[object] = None
+    # chunk-grid work queue (kv_cache.chunk_starts) + memoized prefix match
+    # keyed on the radix mutation clock
+    pending_chunks: List[int] = dataclasses.field(default_factory=list)
+    match_memo: Optional[tuple] = None
 
     @property
     def prompt_len(self) -> int:
@@ -66,13 +84,18 @@ class RequestState:
 class Scheduler:
     def __init__(self, policy: str = "fcfs",
                  max_prefills_per_tick: Optional[int] = None,
-                 keep_finished: int = 100_000):
+                 keep_finished: int = 100_000,
+                 prefill_token_budget: Optional[int] = None):
         if policy not in POLICIES:
             raise ValueError(f"policy {policy!r} not in {POLICIES}")
         self.policy = policy
         if max_prefills_per_tick is None:
             max_prefills_per_tick = 1 if policy == "fcfs" else 1 << 30
         self.max_prefills_per_tick = max_prefills_per_tick
+        # chunked-prefill pacing: at most this many prefill tokens (chunk
+        # grid work) run per decode tick, so one long prompt can never stall
+        # every live decode — the engine consumes this each tick
+        self.prefill_token_budget = prefill_token_budget
         self.waiting: Deque[RequestState] = deque()
         # bounded lifecycle record: a long-lived engine must not retain every
         # retired request's prompt/tokens forever. TTFT aggregates below are
@@ -86,6 +109,8 @@ class Scheduler:
         self._queue_tick_sum = 0
         self._ttft_sum = 0.0
         self._ttft_n = 0
+        self._computed_prefill_sum = 0
+        self._cached_prefix_sum = 0
 
     # --- queue ----------------------------------------------------------
     def submit(self, rs: RequestState, tick: int, now: float) -> None:
@@ -112,6 +137,20 @@ class Scheduler:
             chosen.append(rs)
         return chosen
 
+    def requeue_front(self, rs: RequestState) -> None:
+        """Return a picked-but-unadmittable request to the queue head.
+
+        A multi-admission tick evaluates `can_admit` for every pick against
+        the same free/evictable block pool; the engine calls this when a
+        later pick's reservation no longer fits after the earlier ones
+        landed. The admission marks are reverted so queue metrics stay
+        truthful."""
+        if rs.admit_tick >= 0:
+            self._queue_tick_sum -= rs.queue_ticks
+            self.admitted -= 1
+            rs.admit_tick = -1
+        self.waiting.appendleft(rs)
+
     def retire(self, rs: RequestState, tick: int, now: float,
                reason: str) -> None:
         rs.finish_tick = tick
@@ -121,6 +160,8 @@ class Scheduler:
         if rs.ttft is not None:
             self._ttft_sum += rs.ttft
             self._ttft_n += 1
+        self._computed_prefill_sum += rs.computed_prefill_tokens
+        self._cached_prefix_sum += rs.cached_prefix_tokens
         self.finished.append(rs)
 
     # --- metrics --------------------------------------------------------
@@ -137,6 +178,16 @@ class Scheduler:
                                  if self.admitted else 0.0),
             "mean_ttft_s": (self._ttft_sum / self._ttft_n
                             if self._ttft_n else None),
+            "p50_ttft_s": (float(np.percentile(recent, 50))
+                           if recent else None),
             "p90_ttft_s": (float(np.percentile(recent, 90))
                            if recent else None),
+            "p99_ttft_s": (float(np.percentile(recent, 99))
+                           if recent else None),
+            "prefill_tokens_per_request": (
+                self._computed_prefill_sum / self.retired
+                if self.retired else 0.0),
+            "cached_prefix_tokens_per_request": (
+                self._cached_prefix_sum / self.retired
+                if self.retired else 0.0),
         }

@@ -22,6 +22,14 @@ The serving scheme differs from training's FSDP x TP (launch/steps.py):
     shard_map over the kv-head axis is the follow-up). Both impls are
     O(live blocks) per step: the mesh path gathers through the
     bucket-sliced block table (docs/perf.md).
+  * chunked prefill — the per-chunk forward (engine._chunk_fn) traces under
+    the same shard_ctx as decode: the chunk's (1, C) activations follow the
+    usual batch/seq rules, its K/V scatter lands in the head-sharded pools,
+    and the multi-query attention gathers through the chunk-table bucket
+    with paged_view's layout pins. Radix prefix reuse is pure host-side
+    table bookkeeping, so it composes with any placement — shared blocks
+    are shards of the same pool every replica already holds (tested across
+    the mesh matrix in tests/test_prefix_cache.py).
 
 Everything resolves through the same logical-axis rules as training
 (nn/common.DEFAULT_RULES, nn/shard_ctx._ACT_RULES) so a future mesh axis

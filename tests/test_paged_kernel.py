@@ -9,8 +9,9 @@ import pytest
 from repro.configs.archs import get_config
 from repro.core.build import build_grau
 from repro.core.folding import fold
-from repro.kernels.paged_attention import decode_grid, paged_attention
-from repro.kernels.ref import paged_attention_ref
+from repro.kernels.paged_attention import (decode_grid, paged_attention,
+                                           paged_prefill_attention)
+from repro.kernels.ref import paged_attention_ref, paged_prefill_ref
 from repro.models import lm
 from repro.nn import attention as attn_lib
 from repro.nn.common import build_lm_grau
@@ -173,6 +174,114 @@ def test_paged_view_max_blocks_is_a_prefix_gather(rng):
     cut_k, _ = attn_lib.paged_view(cache, st, max_blocks=2)
     np.testing.assert_array_equal(np.asarray(cut_k),
                                   np.asarray(full_k)[:, :2 * BS])
+
+
+# ---------------------------------------------------------------------------
+# Multi-query (chunked-prefill) kernel mode
+# ---------------------------------------------------------------------------
+
+def mq_case(rng, *, b, chunk, h, kvh, d, nblocks, num_blocks, starts):
+    q = jnp.asarray(rng.normal(size=(b, chunk, h, d)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(num_blocks, BS, kvh, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(num_blocks, BS, kvh, d)), jnp.float32)
+    bt = jnp.asarray(rng.integers(1, num_blocks,
+                                  size=(b, nblocks)).astype(np.int32))
+    return q, kp, vp, bt, jnp.asarray(np.asarray(starts, np.int32))
+
+
+@pytest.mark.parametrize("h,kvh", [(4, 4), (8, 2), (6, 3)])
+def test_mq_kernel_matches_oracle(h, kvh, rng):
+    """Chunked-prefill mode: per-row causal masking over prefix + chunk must
+    match the dense-gather oracle at every (head, group) layout."""
+    q, kp, vp, bt, st = mq_case(rng, b=3, chunk=16, h=h, kvh=kvh, d=32,
+                                nblocks=6, num_blocks=40,
+                                starts=[0, 8, 24])      # block-aligned p0
+    got = paged_prefill_attention(q, kp, vp, bt, st)
+    want = paged_prefill_ref(q, kp, vp, bt, st)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_mq_kernel_first_chunk_and_deep_prefix(rng):
+    """start=0 (no prefix: pure causal chunk) and a start deep enough that
+    dead grid steps follow the live blocks — both must match the oracle."""
+    q, kp, vp, bt, st = mq_case(rng, b=2, chunk=8, h=4, kvh=2, d=16,
+                                nblocks=8, num_blocks=32, starts=[0, 48])
+    got = paged_prefill_attention(q, kp, vp, bt, st)
+    want = paged_prefill_ref(q, kp, vp, bt, st)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_mq_kernel_grau_epilogue_bit_exact(rng):
+    """The fused GRAU epilogue in prefill mode equals the oracle bit for
+    bit — the chunk path must quantize exactly like the decode path."""
+    folded = fold("silu", s_in=2**-10, s_out=2**-4, out_bits=8)
+    spec = build_grau(folded, mac_range=(-30000, 30000), segments=6,
+                      num_exponents=8, mode="apot", bias_mode="lsq").spec
+    q, kp, vp, bt, st = mq_case(rng, b=2, chunk=16, h=4, kvh=2, d=32,
+                                nblocks=5, num_blocks=24, starts=[8, 16])
+    got = paged_prefill_attention(q, kp, vp, bt, st, spec=spec, s_in=2**-10)
+    want = paged_prefill_ref(q, kp, vp, bt, st, spec=spec, s_in=2**-10)
+    assert got.dtype == want.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_mq_kernel_grau_unsigned_bus(rng):
+    folded = fold("relu", s_in=2**-10, s_out=2**-5, out_bits=8,
+                  out_signed=False)
+    spec = build_grau(folded, mac_range=(-30000, 30000), segments=6,
+                      num_exponents=8, mode="apot", bias_mode="lsq").spec
+    q, kp, vp, bt, st = mq_case(rng, b=1, chunk=8, h=4, kvh=2, d=16,
+                                nblocks=3, num_blocks=12, starts=[8])
+    got = paged_prefill_attention(q, kp, vp, bt, st, spec=spec, s_in=2**-10)
+    want = paged_prefill_ref(q, kp, vp, bt, st, spec=spec, s_in=2**-10)
+    assert got.dtype == want.dtype == jnp.uint8
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_paged_prefill_wrapper_kernel_vs_gather(rng):
+    """The model-facing dispatch (nn/attention.paged_prefill_attention) must
+    agree across impls and reject unknown ones."""
+    q, kp, vp, bt, st = mq_case(rng, b=2, chunk=16, h=4, kvh=2, d=16,
+                                nblocks=6, num_blocks=32, starts=[0, 16])
+    cache = attn_lib.PagedKVCache(k=kp, v=vp)
+    pst = attn_lib.PagedState(bt, st)
+    got = attn_lib.paged_prefill_attention(q, cache, pst, impl="kernel")
+    want = attn_lib.paged_prefill_attention(q, cache, pst, impl="gather")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+    with pytest.raises(ValueError):
+        attn_lib.paged_prefill_attention(q, cache, pst, impl="nope")
+
+
+def test_engine_kernel_impl_prefix_cache_on_off_bit_identical(tiny_lm):
+    """Chunked prefill through the Pallas mq kernel end to end: within the
+    kernel impl, turning the radix cache on must not change a single token
+    (the bit-exactness invariant holds per impl — cross-impl token equality
+    is a tie-breaking question, not a caching one), and the warm trace set
+    must cover hits, misses, and suffix chunks."""
+    cfg, params = tiny_lm
+    rng = np.random.default_rng(9)
+    prefix = rng.integers(2, cfg.vocab_size, size=40)
+    reqs_proto = [(np.concatenate([prefix,
+                                   rng.integers(2, cfg.vocab_size,
+                                                size=3 + i)]), 4)
+                  for i in range(5)]
+    out = {}
+    for on in (False, True):
+        engine = ServeEngine(cfg, params,
+                             EngineConfig(slots=2, max_seq=64, page_size=8,
+                                          prefill_chunk=16, prefix_cache=on,
+                                          paged_impl="kernel"))
+        warm = engine.warmup()
+        reqs = [Request(rid=i, prompt=p, max_new_tokens=m)
+                for i, (p, m) in enumerate(reqs_proto)]
+        engine.run(reqs)
+        assert engine.compile_count() == warm
+        out[on] = {r.rid: r.out_tokens for r in reqs}
+    assert engine.metrics()["cached_prefix_tokens"] > 0
+    assert out[True] == out[False]
 
 
 # ---------------------------------------------------------------------------

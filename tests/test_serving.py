@@ -376,6 +376,11 @@ def test_block_allocator_recycles():
     assert alloc.alloc(4) is None
     alloc.free(a)
     assert alloc.can_alloc(7)
+    # regression: double-frees and never-allocated ids used to be appended
+    # to the free list silently, corrupting it (tests/test_prefix_cache.py
+    # covers the full guard + refcount matrix)
+    with pytest.raises(ValueError):
+        alloc.free(a)
 
 
 def test_bucket_ladder():
