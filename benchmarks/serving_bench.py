@@ -20,6 +20,12 @@ serves the same trace through
 and reports tokens/sec for both plus per-step gathered bytes from the
 trip-count-aware HLO cost analysis (engine.decode_cost).
 
+The `kv_quant` section is the quantized-KV acceptance measurement: the same
+trace through 16/8/4-bit paged pools (one PrecisionPolicy end to end) with
+tokens/sec, per-step gathered bytes, and a teacher-forced logit-error probe
+vs the 16-bit pools — the gather_bytes ratios and logit-error ceilings are
+the CI gates.
+
     PYTHONPATH=src python benchmarks/serving_bench.py          # BENCH_serving.json
     PYTHONPATH=src python benchmarks/serving_bench.py --mesh 1x4
       (adds a sharded section: tokens/sec on a 1-device engine vs the same
@@ -255,6 +261,106 @@ def bench_prefix_caching(cfg, params, args):
     return out
 
 
+def kv_logit_probe(cfg, params, kv_bits: int, *, total: int = 64,
+                   prefill: int = 48, page: int = 16, seed: int = 0):
+    """Teacher-forced logits through the paged pipeline at one KV precision.
+
+    One fixed token sequence runs the exact serving datapath — chunked
+    prefill through a block table, then per-token decode writes + reads —
+    and the logits at every decode position come back.  Every precision sees
+    *identical* token inputs (teacher forcing), so the difference between a
+    quantized run and the 16-bit run is purely KV storage error: the
+    kv_quant section's logit-error-vs-bf16 column and its regression ceiling.
+    """
+    import jax.numpy as jnp
+
+    from repro.nn.attention import PagedState
+    from repro.quant.policy import kv_policy
+    from repro.serve import kv_cache as kvc
+
+    rng = np.random.default_rng(seed)
+    tokens = rng.integers(2, cfg.vocab_size, size=total).astype(np.int32)
+    nblocks = -(-total // page)
+    caches = kvc.init_paged_caches(
+        cfg, nblocks + 1, page, dtype=jnp.float32,
+        policy=kv_policy(kv_bits) if kv_bits != 16 else None)
+    row = np.arange(1, nblocks + 1, dtype=np.int32)[None]
+    logits_out = []
+    for p0 in range(0, prefill, page):
+        chunk = tokens[None, p0:p0 + page]
+        st = PagedState(jnp.asarray(row), jnp.asarray([p0], np.int32))
+        last, caches = lm.prefill_step(params, cfg, jnp.asarray(chunk),
+                                       caches, paged=st, paged_impl="gather")
+    logits_out.append(np.asarray(last, np.float32))
+    for pos in range(prefill, total):
+        # engine semantics: token at absolute position `pos` is fed with
+        # length=pos — its K/V lands at position pos, attention spans pos+1
+        st = PagedState(jnp.asarray(row), jnp.asarray([pos], np.int32))
+        lg, caches = lm.decode_step(params, cfg,
+                                    jnp.asarray(tokens[None, pos:pos + 1]),
+                                    caches, paged=st, paged_impl="gather")
+        logits_out.append(np.asarray(lg[:, -1], np.float32))
+    return np.concatenate(logits_out, axis=0)     # (1 + decode_steps, vocab)
+
+
+def bench_kv_quant(cfg, params, args):
+    """Quantized-KV serving: 16/8/4-bit pools on one identical trace.
+
+    Reports, per kv_bits: tokens/sec on the Poisson trace (same schedule at
+    every precision — quantization changes values, never shapes or
+    programs), per-decode-step gathered bytes from the compiled HLO
+    (engine.decode_cost — the packed pools must shrink this), recompiles
+    after warmup, and teacher-forced max-logit error vs the 16-bit pools.
+    The gather-bytes ratios and logit-error ceilings are the CI gates: on
+    the host-CPU runner the 16-bit reference gathers at f32 width (XLA CPU
+    widens half-precision pools before gathering), which is also what bf16
+    pools lower to there.
+    """
+    trace = synth_trace(args.kv_requests, args.interarrival, cfg.vocab_size,
+                        max(args.max_new, 8), args.seed)
+    base = dict(slots=max(args.slots, 4), max_seq=128, page_size=16,
+                seed=args.seed)
+    out = {"requests": args.kv_requests, "slots": base["slots"],
+           "max_seq": base["max_seq"]}
+    logits = {}
+    for name, bits in (("kv16", 16), ("kv8", 8), ("kv4", 4)):
+        reps = []
+        for _ in range(args.kv_reps):
+            engine = ServeEngine(
+                cfg, params,
+                EngineConfig(kv_bits=bits if bits != 16 else None, **base))
+            warm = engine.warmup()
+            stats = run_trace(engine, trace, SamplingParams())
+            stats["recompiles_after_warmup"] = (engine.compile_count()
+                                                - warm)
+            reps.append(stats)
+        stats = sorted(reps, key=lambda s: s["tokens_per_s"])[len(reps) // 2]
+        stats["tokens_per_s_reps"] = [r["tokens_per_s"] for r in reps]
+        cost = engine.decode_cost(engine.decode_buckets[-1])
+        stats["gather_bytes_per_step"] = cost["gather_bytes"]
+        stats["kv_bits"] = bits
+        logits[name] = kv_logit_probe(cfg, params, bits, seed=args.seed)
+        stats["max_logit_error_vs_16"] = float(
+            np.max(np.abs(logits[name] - logits["kv16"])))
+        stats["top1_agreement_vs_16"] = float(np.mean(
+            logits[name].argmax(-1) == logits["kv16"].argmax(-1)))
+        out[name] = stats
+        print(f"kv_quant/{name}: {stats['tokens_per_s']:.1f} tok/s, "
+              f"gathered {stats['gather_bytes_per_step']:.0f} B/step, "
+              f"max logit err {stats['max_logit_error_vs_16']:.4f}, "
+              f"top-1 agree {stats['top1_agreement_vs_16']:.2f} "
+              f"[{stats['recompiles_after_warmup']} recompiles]",
+              flush=True)
+    out["gather_bytes_ratio_int8"] = (out["kv16"]["gather_bytes_per_step"]
+                                      / out["kv8"]["gather_bytes_per_step"])
+    out["gather_bytes_ratio_int4"] = (out["kv16"]["gather_bytes_per_step"]
+                                      / out["kv4"]["gather_bytes_per_step"])
+    print(f"kv_quant: {out['gather_bytes_ratio_int8']:.2f}x fewer gathered "
+          f"B/step at int8, {out['gather_bytes_ratio_int4']:.2f}x at int4",
+          flush=True)
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-3b")
@@ -276,9 +382,13 @@ def main() -> None:
                     help="shared system-prompt length for prefix_caching")
     ap.add_argument("--prefix-reps", type=int, default=3,
                     help="repetitions per prefix_caching variant (median)")
+    ap.add_argument("--kv-requests", type=int, default=16,
+                    help="requests in the quantized-KV (kv_quant) section")
+    ap.add_argument("--kv-reps", type=int, default=3,
+                    help="repetitions per kv_quant variant (median)")
     ap.add_argument("--sections", default="all",
                     help="comma list of sections to run: "
-                         "runs,decode_scaling,prefix (default all)")
+                         "runs,decode_scaling,prefix,kv_quant (default all)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke sizes: fewer requests, smaller capacity")
@@ -295,11 +405,13 @@ def main() -> None:
         # blocks_per_slot
         args.requests = 6
         args.scaling_requests = 32
+        args.kv_requests = 12
+        args.kv_reps = 2
     for name in ("requests", "scaling_requests", "scaling_reps",
-                 "prefix_requests", "prefix_reps"):
+                 "prefix_requests", "prefix_reps", "kv_requests", "kv_reps"):
         if getattr(args, name) < 1:
             ap.error(f"--{name.replace('_', '-')} must be >= 1")
-    sections = (("runs", "decode_scaling", "prefix")
+    sections = (("runs", "decode_scaling", "prefix", "kv_quant")
                 if args.sections == "all"
                 else tuple(s.strip() for s in args.sections.split(",") if s))
 
@@ -354,6 +466,8 @@ def main() -> None:
     if "prefix" in sections:
         report["prefix_caching"] = bench_prefix_caching(base_cfg, params,
                                                         args)
+    if "kv_quant" in sections:
+        report["kv_quant"] = bench_kv_quant(base_cfg, params, args)
 
     if mesh_shape:
         # sharded vs single-device: same float/greedy trace, so the delta is

@@ -97,6 +97,63 @@ def grau_cost(
                     freq, depth, cycles)
 
 
+# ---------------------------------------------------------------------------
+# KV-cache memory / bandwidth accounting (serving-side mixed precision)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class KVCostReport:
+    """Per-precision KV storage and decode-bandwidth terms, all in bytes.
+
+    ``payload_bytes_per_token_layer`` is K+V storage for one position of one
+    layer at ``kv_bits``; ``scale_bytes_per_token_layer`` amortizes the
+    per-(block, head) power-of-two exponent planes (1 byte each for K and V)
+    over the block's positions.  ``gather_bytes_per_step`` is the paged
+    decode read traffic for one tick at context ``ctx`` — the quantity
+    BENCH_serving.json's kv_quant section measures from the compiled HLO.
+    """
+    kv_bits: int
+    payload_bytes_per_token_layer: float
+    scale_bytes_per_token_layer: float
+    bytes_per_slot: float          # full max_seq reservation, all layers
+    pool_bytes: float              # whole pool (num_blocks incl. null)
+    gather_bytes_per_step: float   # one decode tick at `ctx`, all layers
+
+
+def kv_cache_cost(*, num_layers: int, kv_heads: int, head_dim: int,
+                  block_size: int, kv_bits: int, slots: int, max_seq: int,
+                  ctx: int | None = None,
+                  num_blocks: int | None = None) -> KVCostReport:
+    """Analytical KV memory/bandwidth model as f(kv_bits).
+
+    One place computes both the paper-style storage table (LUT-cost's memory
+    sibling) and the serving numbers launch/serve.py logs at startup: bytes
+    per slot, whole-pool bytes, and per-decode-step gathered bytes. 16-bit
+    pools store 2-byte floats and no scale plane; 8/4-bit pools store packed
+    integer payloads plus one exponent byte per (block, head) per tensor.
+    """
+    if kv_bits not in (16, 8, 4):
+        raise ValueError(f"kv_bits must be 16, 8 or 4, got {kv_bits}")
+    payload = 2 * kv_heads * head_dim * kv_bits / 8          # K+V, one token
+    scale = 0.0 if kv_bits == 16 else 2 * kv_heads / block_size
+    per_token_layer = payload + scale
+    blocks_per_slot = -(-max_seq // block_size)
+    tokens_per_slot = blocks_per_slot * block_size
+    if num_blocks is None:
+        num_blocks = slots * blocks_per_slot + 1             # + null block
+    ctx = max_seq if ctx is None else ctx
+    live_blocks = max(1, -(-ctx // block_size))
+    return KVCostReport(
+        kv_bits=kv_bits,
+        payload_bytes_per_token_layer=payload,
+        scale_bytes_per_token_layer=scale,
+        bytes_per_slot=tokens_per_slot * per_token_layer * num_layers,
+        pool_bytes=num_blocks * block_size * per_token_layer * num_layers,
+        gather_bytes_per_step=(slots * live_blocks * block_size
+                               * per_token_layer * num_layers),
+    )
+
+
 def adp(report: HWReport, delay_ns: float) -> float:
     return report.lut * delay_ns
 

@@ -27,6 +27,16 @@ MAC domain and pushed through the same `grau_datapath` as the GEMM kernels,
 writing int8/uint8 straight to HBM.  The register file rides in as scalar
 prefetch, so reconfiguring the activation/precision never recompiles.
 
+Quantized KV pools (`kv_bits` = 8 or 4, assigned per layer by
+quant/policy.PrecisionPolicy): the pools hold packed int8 payloads
+(half-width head_dim at 4-bit) plus per-(block, kv_head) power-of-two
+scale-exponent planes.  The exponent rides in as a (1, 1) tensor tile
+indexed through the same table-resolved map as the K/V tiles, and each
+DMA'd tile is dequantized *in VMEM* (`_dequant_tile`: unpack + exponent
+add, via the exact quant/kv helpers the gather fallback uses) right before
+the flash recurrence — so HBM traffic per step follows kv_bits while the
+recurrence stays f32 and bit-consistent with the dense-view oracle.
+
 Multi-query prefill mode (`paged_prefill_attention`): the chunked-prefill
 state machine (serve/engine) feeds C query positions at once, each row r
 attending positions 0..start+r — the pinned cached-prefix blocks *and* the
@@ -53,8 +63,25 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.grau import grau_datapath
 from repro.pwlf.spec import GRAUSpec
+from repro.quant import kv as kvq
 
 NEG_INF = -1e30
+
+
+def _dequant_tile(ref_block, exp_block, kv_bits: int):
+    """In-VMEM dequant of one (block_size, packed_hd) K or V tile.
+
+    At kv_bits < 16 the DMA'd tile is packed int8 (two nibbles per byte at
+    4-bit, quant/kv.py's split-halves layout) and ``exp_block`` holds the
+    tile's (block, head) power-of-two scale exponent; dequantization is
+    unpack + exponent-add, using the same quant/kv helpers as the gather
+    fallback so both readers see bit-identical f32 values.  At 16 bits this
+    is the plain f32 upcast.
+    """
+    if kv_bits == 16:
+        return ref_block.astype(jnp.float32)
+    q = kvq.unpack_int4(ref_block) if kv_bits == 4 else ref_block
+    return kvq.dequantize_pot(q, exp_block)
 
 
 def decode_grid(slots: int, kv_heads: int, nblocks: int) -> Tuple[int, int, int]:
@@ -72,15 +99,18 @@ def _live_blocks(length, block_size: int):
     return jnp.maximum(pl.cdiv(length, block_size), 1)
 
 
-def _attend_block(s, j, len_ref, q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref,
-                  *, block_size: int, scale: float):
+def _attend_block(s, j, len_ref, q_ref, k_ref, v_ref, kexp_ref, vexp_ref,
+                  m_ref, l_ref, acc_ref, *, block_size: int, scale: float,
+                  kv_bits: int):
     """One (slot, kv_head, block) tile of the online-softmax recurrence.
 
     `s`/`j` are passed in (not re-read via pl.program_id) because this runs
     inside a pl.when body, where interpret mode cannot substitute program_id.
     """
     q = q_ref[0, 0].astype(jnp.float32)              # (g, d)
-    k = k_ref[0, :, 0, :].astype(jnp.float32)        # (bs, d)
+    k = _dequant_tile(k_ref[0, :, 0, :],             # (bs, d)
+                      kexp_ref[0, 0] if kexp_ref is not None else None,
+                      kv_bits)
     lg = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
     pos = j * block_size + jax.lax.broadcasted_iota(jnp.int32, lg.shape, 1)
     lg = jnp.where(pos < len_ref[s], lg, NEG_INF)
@@ -89,24 +119,34 @@ def _attend_block(s, j, len_ref, q_ref, k_ref, v_ref, m_ref, l_ref, acc_ref,
     p = jnp.exp(lg - m_new)
     alpha = jnp.exp(m_prev - m_new)
     l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
-    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    v = _dequant_tile(v_ref[0, :, 0, :],
+                      vexp_ref[0, 0] if vexp_ref is not None else None,
+                      kv_bits)
     acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
         p, v, preferred_element_type=jnp.float32)
     m_ref[...] = m_new
 
 
 def _make_paged_kernel(*, block_size: int, nblocks: int, scale: float,
+                       kv_bits: int = 16,
                        quant: Optional[Tuple[int, int, int]] = None):
-    """One kernel body for both epilogues; `quant` (num_exponents, qmin,
-    qmax) switches the finish step to the fused GRAU datapath (whose
-    register-file refs then precede the tensor refs as scalar prefetch)."""
+    """One kernel body for every epilogue/storage combination; `quant`
+    (num_exponents, qmin, qmax) switches the finish step to the fused GRAU
+    datapath (whose register-file refs then precede the tensor refs as
+    scalar prefetch), and `kv_bits` < 16 adds the two scale-exponent-plane
+    refs after v_ref and dequantizes each DMA'd tile in VMEM."""
 
     def kernel(bt_ref, len_ref, *refs):
-        if quant is None:
-            q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
+        sbits_ref = None
+        if quant is not None:
+            (bp_ref, encp_ref, sign_ref, bias_ref, pre_ref,
+             sbits_ref), refs = refs[:6], refs[6:]
+        kexp_ref = vexp_ref = None
+        if kv_bits < 16:
+            (q_ref, k_ref, v_ref, kexp_ref, vexp_ref, o_ref,
+             m_ref, l_ref, acc_ref) = refs
         else:
-            (bp_ref, encp_ref, sign_ref, bias_ref, pre_ref, sbits_ref,
-             q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref) = refs
+            q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
         s = pl.program_id(0)
         j = pl.program_id(2)
 
@@ -118,8 +158,10 @@ def _make_paged_kernel(*, block_size: int, nblocks: int, scale: float,
 
         @pl.when(j < _live_blocks(len_ref[s], block_size))
         def _blk():
-            _attend_block(s, j, len_ref, q_ref, k_ref, v_ref, m_ref, l_ref,
-                          acc_ref, block_size=block_size, scale=scale)
+            _attend_block(s, j, len_ref, q_ref, k_ref, v_ref, kexp_ref,
+                          vexp_ref, m_ref, l_ref, acc_ref,
+                          block_size=block_size, scale=scale,
+                          kv_bits=kv_bits)
 
         @pl.when(j == nblocks - 1)
         def _finish():
@@ -142,21 +184,26 @@ def _make_paged_kernel(*, block_size: int, nblocks: int, scale: float,
     return kernel
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "s_in", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "s_in", "kv_bits", "interpret"))
 def _paged_attention_jit(
     q: jax.Array,             # (slots, h, d)
-    k_pool: jax.Array,        # (num_blocks, block_size, kvh, d)
+    k_pool: jax.Array,        # (num_blocks, block_size, kvh, d_packed)
     v_pool: jax.Array,
     block_table: jax.Array,   # (slots, nblocks) int32; 0 = null block
     lengths: jax.Array,       # (slots,) int32 — positions to attend per slot
     spec: Optional[GRAUSpec],
+    k_exp: Optional[jax.Array],   # (num_blocks, kvh) int8 scale exponents
+    v_exp: Optional[jax.Array],
     *,
     scale: Optional[float],
     s_in: Optional[float],
+    kv_bits: int,
     interpret: bool,
 ) -> jax.Array:
     slots, h, d = q.shape
     nb, block_size, kvh = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    dp = k_pool.shape[3]      # packed head_dim: d at >= 8 bits, d//2 at 4
     assert h % kvh == 0, (h, kvh)
     g = h // kvh
     nblocks = block_table.shape[1]
@@ -172,10 +219,14 @@ def _paged_attention_jit(
         jj = jnp.minimum(j, _live_blocks(len_ref[s], block_size) - 1)
         return (bt_ref[s, jj], 0, hh, 0)
 
+    def exp_index(s, hh, j, bt_ref, len_ref, *_rest):
+        jj = jnp.minimum(j, _live_blocks(len_ref[s], block_size) - 1)
+        return (bt_ref[s, jj], hh)
+
     scalars = [block_table.astype(jnp.int32), lengths.astype(jnp.int32)]
     if spec is None:
         kernel = _make_paged_kernel(block_size=block_size, nblocks=nblocks,
-                                    scale=scale)
+                                    scale=scale, kv_bits=kv_bits)
         out_dtype = q.dtype
     else:
         assert s_in is not None, "GRAU epilogue needs the MAC-domain scale"
@@ -187,17 +238,25 @@ def _paged_attention_jit(
                     pre.reshape(1, 1), sbits.reshape(1, 1)]
         kernel = _make_paged_kernel(
             block_size=block_size, nblocks=nblocks, scale=scale,
-            quant=(spec.num_exponents, spec.qmin, spec.qmax))
+            kv_bits=kv_bits, quant=(spec.num_exponents, spec.qmin, spec.qmax))
         out_dtype = jnp.int8 if spec.qmin < 0 else jnp.uint8
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d), q_index),
+        pl.BlockSpec((1, block_size, 1, dp), kv_index),
+        pl.BlockSpec((1, block_size, 1, dp), kv_index),
+    ]
+    operands = [qg, k_pool, v_pool]
+    if kv_bits < 16:
+        assert k_exp is not None and v_exp is not None
+        in_specs += [pl.BlockSpec((1, 1), exp_index),
+                     pl.BlockSpec((1, 1), exp_index)]
+        operands += [k_exp, v_exp]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=len(scalars),
         grid=decode_grid(slots, kvh, nblocks),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, d), q_index),
-            pl.BlockSpec((1, block_size, 1, d), kv_index),
-            pl.BlockSpec((1, block_size, 1, d), kv_index),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, g, d), q_index),
         scratch_shapes=[
             pltpu.VMEM((g, 1), jnp.float32),
@@ -210,13 +269,13 @@ def _paged_attention_jit(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((slots, kvh, g, d), out_dtype),
         interpret=interpret,
-    )(*scalars, qg, k_pool, v_pool)
+    )(*scalars, *operands)
     return out.reshape(slots, h, d)
 
 
 def paged_attention(
     q: jax.Array,             # (slots, h, d)
-    k_pool: jax.Array,        # (num_blocks, block_size, kvh, d)
+    k_pool: jax.Array,        # (num_blocks, block_size, kvh, d_packed)
     v_pool: jax.Array,
     block_table: jax.Array,   # (slots, nblocks) int32; 0 = null block
     lengths: jax.Array,       # (slots,) int32 — positions to attend per slot
@@ -224,6 +283,9 @@ def paged_attention(
     scale: Optional[float] = None,
     spec: Optional[GRAUSpec] = None,
     s_in: Optional[float] = None,
+    k_exp: Optional[jax.Array] = None,
+    v_exp: Optional[jax.Array] = None,
+    kv_bits: int = 16,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Flash decode over the mapped blocks of each slot.
@@ -234,6 +296,12 @@ def paged_attention(
     `spec` (+ `s_in`, the f32->MAC-domain scale), the GRAU epilogue quantizes
     the output to the spec's 8-bit bus; otherwise output dtype follows q.
 
+    With `kv_bits` < 16 the pools are packed int8 payloads (quant/kv.py) and
+    `k_exp`/`v_exp` are the per-(block, head) power-of-two scale-exponent
+    planes: each DMA'd KV tile moves at its packed width and is dequantized
+    in VMEM (unpack + exponent add) right before the flash recurrence — HBM
+    traffic per step follows kv_bits, not the compute dtype.
+
     Jitted (interpret-mode pallas_call needs a jit context); the GRAUSpec
     register file is a pytree argument, so reconfiguring the epilogue's
     activation or precision never retraces.
@@ -241,22 +309,26 @@ def paged_attention(
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     return _paged_attention_jit(q, k_pool, v_pool, block_table, lengths, spec,
-                                scale=scale, s_in=s_in, interpret=interpret)
+                                k_exp, v_exp, scale=scale, s_in=s_in,
+                                kv_bits=kv_bits, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
 # Multi-query (chunked-prefill) mode
 # ---------------------------------------------------------------------------
 
-def _attend_block_mq(s, j, start_ref, q_ref, k_ref, v_ref, m_ref, l_ref,
-                     acc_ref, *, block_size: int, scale: float, groups: int):
+def _attend_block_mq(s, j, start_ref, q_ref, k_ref, v_ref, kexp_ref, vexp_ref,
+                     m_ref, l_ref, acc_ref, *, block_size: int, scale: float,
+                     groups: int, kv_bits: int):
     """One (slot, kv_head, block) tile with C query rows.
 
     q rows are (chunk_row, group)-flattened; row r of the chunk attends pool
     positions <= start[s] + r — causal over the chunk, unrestricted over the
     already-written prefix."""
     q = q_ref[0, 0].astype(jnp.float32)              # (C*g, d)
-    k = k_ref[0, :, 0, :].astype(jnp.float32)        # (bs, d)
+    k = _dequant_tile(k_ref[0, :, 0, :],             # (bs, d)
+                      kexp_ref[0, 0] if kexp_ref is not None else None,
+                      kv_bits)
     lg = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
     pos = j * block_size + jax.lax.broadcasted_iota(jnp.int32, lg.shape, 1)
     row = jax.lax.broadcasted_iota(jnp.int32, lg.shape, 0) // groups
@@ -266,21 +338,28 @@ def _attend_block_mq(s, j, start_ref, q_ref, k_ref, v_ref, m_ref, l_ref,
     p = jnp.exp(lg - m_new)
     alpha = jnp.exp(m_prev - m_new)
     l_ref[...] = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
-    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    v = _dequant_tile(v_ref[0, :, 0, :],
+                      vexp_ref[0, 0] if vexp_ref is not None else None,
+                      kv_bits)
     acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
         p, v, preferred_element_type=jnp.float32)
     m_ref[...] = m_new
 
 
 def _make_paged_prefill_kernel(*, block_size: int, nblocks: int, chunk: int,
-                               scale: float, groups: int,
+                               scale: float, groups: int, kv_bits: int = 16,
                                quant: Optional[Tuple[int, int, int]] = None):
     def kernel(bt_ref, start_ref, *refs):
-        if quant is None:
-            q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
+        sbits_ref = None
+        if quant is not None:
+            (bp_ref, encp_ref, sign_ref, bias_ref, pre_ref,
+             sbits_ref), refs = refs[:6], refs[6:]
+        kexp_ref = vexp_ref = None
+        if kv_bits < 16:
+            (q_ref, k_ref, v_ref, kexp_ref, vexp_ref, o_ref,
+             m_ref, l_ref, acc_ref) = refs
         else:
-            (bp_ref, encp_ref, sign_ref, bias_ref, pre_ref, sbits_ref,
-             q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref) = refs
+            q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
         s = pl.program_id(0)
         j = pl.program_id(2)
 
@@ -294,9 +373,10 @@ def _make_paged_prefill_kernel(*, block_size: int, nblocks: int, chunk: int,
         # past that is dead (skipped compute, index map clamps the DMA)
         @pl.when(j < _live_blocks(start_ref[s] + chunk, block_size))
         def _blk():
-            _attend_block_mq(s, j, start_ref, q_ref, k_ref, v_ref, m_ref,
-                             l_ref, acc_ref, block_size=block_size,
-                             scale=scale, groups=groups)
+            _attend_block_mq(s, j, start_ref, q_ref, k_ref, v_ref, kexp_ref,
+                             vexp_ref, m_ref, l_ref, acc_ref,
+                             block_size=block_size, scale=scale,
+                             groups=groups, kv_bits=kv_bits)
 
         @pl.when(j == nblocks - 1)
         def _finish():
@@ -316,21 +396,26 @@ def _make_paged_prefill_kernel(*, block_size: int, nblocks: int, chunk: int,
     return kernel
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "s_in", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "s_in", "kv_bits", "interpret"))
 def _paged_prefill_jit(
     q: jax.Array,             # (b, C, h, d) — one chunk of C query positions
-    k_pool: jax.Array,        # (num_blocks, block_size, kvh, d)
+    k_pool: jax.Array,        # (num_blocks, block_size, kvh, d_packed)
     v_pool: jax.Array,
     block_table: jax.Array,   # (b, nblocks) int32; 0 = null block
     start: jax.Array,         # (b,) int32 — chunk start position per row 0
     spec: Optional[GRAUSpec],
+    k_exp: Optional[jax.Array],   # (num_blocks, kvh) int8 scale exponents
+    v_exp: Optional[jax.Array],
     *,
     scale: Optional[float],
     s_in: Optional[float],
+    kv_bits: int,
     interpret: bool,
 ) -> jax.Array:
     b, chunk, h, d = q.shape
     block_size, kvh = k_pool.shape[1], k_pool.shape[2]
+    dp = k_pool.shape[3]      # packed head_dim: d at >= 8 bits, d//2 at 4
     assert h % kvh == 0, (h, kvh)
     g = h // kvh
     nblocks = block_table.shape[1]
@@ -347,11 +432,16 @@ def _paged_prefill_jit(
             j, _live_blocks(start_ref[s] + chunk, block_size) - 1)
         return (bt_ref[s, jj], 0, hh, 0)
 
+    def exp_index(s, hh, j, bt_ref, start_ref, *_rest):
+        jj = jnp.minimum(
+            j, _live_blocks(start_ref[s] + chunk, block_size) - 1)
+        return (bt_ref[s, jj], hh)
+
     scalars = [block_table.astype(jnp.int32), start.astype(jnp.int32)]
     if spec is None:
         kernel = _make_paged_prefill_kernel(
             block_size=block_size, nblocks=nblocks, chunk=chunk, scale=scale,
-            groups=g)
+            groups=g, kv_bits=kv_bits)
         out_dtype = q.dtype
     else:
         assert s_in is not None, "GRAU epilogue needs the MAC-domain scale"
@@ -363,17 +453,26 @@ def _paged_prefill_jit(
                     pre.reshape(1, 1), sbits.reshape(1, 1)]
         kernel = _make_paged_prefill_kernel(
             block_size=block_size, nblocks=nblocks, chunk=chunk, scale=scale,
-            groups=g, quant=(spec.num_exponents, spec.qmin, spec.qmax))
+            groups=g, kv_bits=kv_bits,
+            quant=(spec.num_exponents, spec.qmin, spec.qmax))
         out_dtype = jnp.int8 if spec.qmin < 0 else jnp.uint8
+
+    in_specs = [
+        pl.BlockSpec((1, 1, chunk * g, d), q_index),
+        pl.BlockSpec((1, block_size, 1, dp), kv_index),
+        pl.BlockSpec((1, block_size, 1, dp), kv_index),
+    ]
+    operands = [qg, k_pool, v_pool]
+    if kv_bits < 16:
+        assert k_exp is not None and v_exp is not None
+        in_specs += [pl.BlockSpec((1, 1), exp_index),
+                     pl.BlockSpec((1, 1), exp_index)]
+        operands += [k_exp, v_exp]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=len(scalars),
         grid=decode_grid(b, kvh, nblocks),
-        in_specs=[
-            pl.BlockSpec((1, 1, chunk * g, d), q_index),
-            pl.BlockSpec((1, block_size, 1, d), kv_index),
-            pl.BlockSpec((1, block_size, 1, d), kv_index),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, chunk * g, d), q_index),
         scratch_shapes=[
             pltpu.VMEM((chunk * g, 1), jnp.float32),
@@ -386,14 +485,14 @@ def _paged_prefill_jit(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, kvh, chunk * g, d), out_dtype),
         interpret=interpret,
-    )(*scalars, qg, k_pool, v_pool)
+    )(*scalars, *operands)
     return (out.reshape(b, kvh, chunk, g, d).transpose(0, 2, 1, 3, 4)
             .reshape(b, chunk, h, d))
 
 
 def paged_prefill_attention(
     q: jax.Array,             # (b, C, h, d) — one chunk of query positions
-    k_pool: jax.Array,        # (num_blocks, block_size, kvh, d)
+    k_pool: jax.Array,        # (num_blocks, block_size, kvh, d_packed)
     v_pool: jax.Array,
     block_table: jax.Array,   # (b, nblocks) int32; 0 = null block
     start: jax.Array,         # (b,) int32 — absolute position of chunk row 0
@@ -401,6 +500,9 @@ def paged_prefill_attention(
     scale: Optional[float] = None,
     spec: Optional[GRAUSpec] = None,
     s_in: Optional[float] = None,
+    k_exp: Optional[jax.Array] = None,
+    v_exp: Optional[jax.Array] = None,
+    kv_bits: int = 16,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Flash attention for one prefill chunk over a slot's mapped blocks.
@@ -410,9 +512,12 @@ def paged_prefill_attention(
     through the table, exactly like decode's write-then-attend). `nblocks`
     is the chunk-position bucket the caller chose; with `spec` (+ `s_in`)
     the fused GRAU epilogue quantizes the output to the 8-bit bus, matching
-    the decode kernel's epilogue bit for bit.
+    the decode kernel's epilogue bit for bit.  With `kv_bits` < 16 the pools
+    are packed int8 + scale-exponent planes and each tile dequantizes in
+    VMEM, exactly like the decode kernel.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     return _paged_prefill_jit(q, k_pool, v_pool, block_table, start, spec,
-                              scale=scale, s_in=s_in, interpret=interpret)
+                              k_exp, v_exp, scale=scale, s_in=s_in,
+                              kv_bits=kv_bits, interpret=interpret)

@@ -8,8 +8,30 @@ import jax.numpy as jnp
 
 from repro.core.grau import grau_apply_int
 from repro.pwlf.spec import GRAUSpec
+from repro.quant import kv as kvq
 
 NEG_INF = -1e30
+
+
+def _dense_kv_views(k_pool, v_pool, block_table, *, k_exp=None, v_exp=None,
+                    kv_bits: int = 16):
+    """Gather + (optionally) dequantize the per-slot dense K/V views.
+
+    Quantized pools (kv_bits < 16) dequantize via quant/kv.load_block — the
+    same helper nn/attention.paged_view uses, so the oracle, the gather
+    fallback, and the kernel's in-VMEM dequant all read identical f32 values.
+    """
+    rows, nblocks = block_table.shape
+    block_size, kvh = k_pool.shape[1], k_pool.shape[2]
+    seq = nblocks * block_size
+    if kv_bits < 16:
+        hd = k_pool.shape[3] * (2 if kv_bits == 4 else 1)
+        kd = kvq.load_block(k_pool[block_table], k_exp[block_table], kv_bits)
+        vd = kvq.load_block(v_pool[block_table], v_exp[block_table], kv_bits)
+    else:
+        hd = k_pool.shape[3]
+        kd, vd = k_pool[block_table], v_pool[block_table]
+    return (kd.reshape(rows, seq, kvh, hd), vd.reshape(rows, seq, kvh, hd))
 
 
 def _out_dtype(spec: GRAUSpec):
@@ -51,18 +73,22 @@ def paged_attention_ref(
     scale: Optional[float] = None,
     spec: Optional[GRAUSpec] = None,
     s_in: Optional[float] = None,
+    k_exp: Optional[jax.Array] = None,
+    v_exp: Optional[jax.Array] = None,
+    kv_bits: int = 16,
 ) -> jax.Array:
     """Oracle for kernels/paged_attention.py: gather the dense per-slot view
-    through the block table (exactly nn/attention.paged_view's layout), run
-    masked softmax attention, optionally apply the GRAU output epilogue."""
+    through the block table (exactly nn/attention.paged_view's layout —
+    packed quantized pools dequantize through the same quant/kv helpers),
+    run masked softmax attention, optionally apply the GRAU output epilogue."""
     slots, h, d = q.shape
     block_size, kvh = k_pool.shape[1], k_pool.shape[2]
     nblocks = block_table.shape[1]
     g = h // kvh
     scale = scale if scale is not None else d ** -0.5
     seq = nblocks * block_size
-    kd = k_pool[block_table].reshape(slots, seq, kvh, d)
-    vd = v_pool[block_table].reshape(slots, seq, kvh, d)
+    kd, vd = _dense_kv_views(k_pool, v_pool, block_table, k_exp=k_exp,
+                             v_exp=v_exp, kv_bits=kv_bits)
     qg = q.reshape(slots, kvh, g, d)
     logits = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
                         kd.astype(jnp.float32)) * scale
@@ -87,18 +113,22 @@ def paged_prefill_ref(
     scale: Optional[float] = None,
     spec: Optional[GRAUSpec] = None,
     s_in: Optional[float] = None,
+    k_exp: Optional[jax.Array] = None,
+    v_exp: Optional[jax.Array] = None,
+    kv_bits: int = 16,
 ) -> jax.Array:
     """Oracle for the multi-query (chunked-prefill) paged-attention mode:
-    gather the dense per-slot view through the block table, then run masked
-    softmax attention where chunk row r attends positions 0..start+r."""
+    gather the dense per-slot view through the block table (dequantizing
+    packed pools via quant/kv), then run masked softmax attention where
+    chunk row r attends positions 0..start+r."""
     b, chunk, h, d = q.shape
     block_size, kvh = k_pool.shape[1], k_pool.shape[2]
     nblocks = block_table.shape[1]
     g = h // kvh
     scale = scale if scale is not None else d ** -0.5
     seq = nblocks * block_size
-    kd = k_pool[block_table].reshape(b, seq, kvh, d)
-    vd = v_pool[block_table].reshape(b, seq, kvh, d)
+    kd, vd = _dense_kv_views(k_pool, v_pool, block_table, k_exp=k_exp,
+                             v_exp=v_exp, kv_bits=kv_bits)
     qg = q.reshape(b, chunk, kvh, g, d)
     logits = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
                         kd.astype(jnp.float32)) * scale

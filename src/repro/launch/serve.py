@@ -34,6 +34,10 @@ def main() -> None:
     ap.add_argument("--backend", choices=["auto", "paged", "dense"],
                     default="auto")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--kv-bits", type=int, choices=[16, 8, 4], default=16,
+                    help="KV-cache precision: 16 = float pools, 8/4 = packed "
+                         "int pools with per-block power-of-two scale "
+                         "exponents (paged backend only)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="radix-tree shared-prefix KV reuse (paged only)")
     ap.add_argument("--prefill-chunk", type=int, default=None,
@@ -73,11 +77,34 @@ def main() -> None:
         cfg, params,
         EngineConfig(slots=args.slots, max_seq=args.max_seq, paged=paged,
                      page_size=args.page_size, policy=args.policy,
+                     kv_bits=args.kv_bits if args.kv_bits != 16 else None,
                      prefix_cache=args.prefix_cache,
                      prefill_chunk=args.prefill_chunk,
                      prefill_token_budget=args.prefill_budget,
                      seed=args.seed),
         mesh=mesh)
+
+    if engine.paged:
+        # startup memory table: the paper's LUT-cost table's memory sibling —
+        # KV bytes/slot and decode gather bytes/step from one cost model
+        # (core/hwcost.kv_cache_cost), at the serving precision and its
+        # neighbors so the --kv-bits tradeoff is visible before traffic hits
+        from repro.core.hwcost import kv_cache_cost
+        num_layers = sum(len(period) * repeats
+                         for period, repeats in cfg.groups)
+        print(f"kv cache @ page_size={args.page_size}, "
+              f"max_seq={args.max_seq}, slots={args.slots}:")
+        for bits in (16, 8, 4):
+            r = kv_cache_cost(num_layers=num_layers,
+                              kv_heads=cfg.kv_heads_phys,
+                              head_dim=cfg.head_dim,
+                              block_size=args.page_size, kv_bits=bits,
+                              slots=args.slots, max_seq=args.max_seq)
+            mark = " <- serving" if bits == args.kv_bits else ""
+            print(f"  kv_bits={bits:2d}: {r.bytes_per_slot / 1e6:8.3f} MB/slot, "
+                  f"pool {r.pool_bytes / 1e6:8.3f} MB, "
+                  f"gather {r.gather_bytes_per_step / 1e3:8.1f} KB/step"
+                  f"{mark}")
 
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, top_p=args.top_p)

@@ -109,9 +109,22 @@ def _layer_cache(spec: LayerSpec, cfg: ModelConfig, batch: int, max_seq: int,
 
 
 def init_caches(cfg: ModelConfig, batch: int, max_seq: int, *,
-                length: int = 0, dtype=jnp.bfloat16):
+                length: int = 0, dtype=jnp.bfloat16, policy=None):
     """Cache pytree: tuple per group, each stacked over repeats.
-    Cross-attention layers carry (self_cache, CrossKV) pairs."""
+    Cross-attention layers carry (self_cache, CrossKV) pairs.
+
+    `policy` (quant.policy.PrecisionPolicy) is the end-to-end precision
+    object: dense caches only exist at kv_bits=16 (SSM state is recurrent
+    and MLA latents are already compressed — neither pages, so neither
+    quantizes), so a policy that quantizes any layer's KV is rejected here
+    with a pointer at the paged backend (serve/kv_cache.init_paged_caches),
+    which consumes the same policy and builds packed pools from it.
+    """
+    if policy is not None and policy.kv_quantized:
+        raise ValueError(
+            f"{cfg.name}: dense caches cannot hold quantized KV "
+            "(kv_bits < 16); use the paged backend "
+            "(serve/kv_cache.init_paged_caches) with this policy")
     caches = []
     for period, repeats in cfg.groups:
         per_layer = []

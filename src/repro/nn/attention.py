@@ -13,13 +13,15 @@ lowers to a psum — flash-decoding-style partial reduction, for free via GSPMD.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.nn import shard_ctx
+from repro.quant import kv as kvq
 
 NEG_INF = -1e30
 
@@ -193,15 +195,97 @@ class PagedKVCache(NamedTuple):
     v: jax.Array
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class QuantPagedKVCache:
+    """Quantized block-pool KV storage: packed ints + a scale-exponent plane.
+
+    The quantized sibling of :class:`PagedKVCache` under one PrecisionPolicy
+    (quant/policy.py): K/V live as int8 words — one value per byte at
+    ``bits=8``, two packed nibbles at ``bits=4`` (quant/kv.py's split-halves
+    layout) — and each (block, kv_head) carries one signed-byte power-of-two
+    scale exponent per tensor, so dequantization is an exponent add (shift),
+    never a float multiply by an arbitrary scale.  ``bits`` is pytree aux
+    data: it is static under jit, rides through lax.scan / donation / device
+    placement unchanged, and never retraces when values change.
+
+    Write-path ownership of scales (the serving bit-exactness contract):
+    exponents are set by whole-block prefill writes and monotonically bumped
+    (with a rounding requantization shift of the resident payload) by decode
+    writes — both in the shared jnp update paths below, never by a reader.
+    """
+    k: jax.Array        # (num_blocks, block_size, kvh, packed_hd) int8
+    v: jax.Array
+    k_exp: jax.Array    # (num_blocks, kvh) int8 power-of-two scale exponents
+    v_exp: jax.Array
+    bits: int = 8       # static: 8 or 4
+
+    def tree_flatten(self):
+        return (self.k, self.v, self.k_exp, self.v_exp), self.bits
+
+    @classmethod
+    def tree_unflatten(cls, bits, children):
+        return cls(*children, bits=bits)
+
+
+AnyPagedKVCache = Union[PagedKVCache, QuantPagedKVCache]
+
+
 class PagedState(NamedTuple):
     """Per-step slot metadata shared by every layer (not part of the pools)."""
     block_table: jax.Array   # (slots, blocks_per_slot) int32; 0 = unmapped
     length: jax.Array        # (slots,) int32 — valid prefix length per slot
+    ctx: Optional[jax.Array] = None   # (slots,) int32, chunked prefill only:
+    # real context length per row. Quantized pools mask positions >= ctx out
+    # of the block-exponent amax so chunk *padding* (garbage K/V past the
+    # prompt) can never coarsen the scale real tokens are stored at; decode
+    # and the attention masks ignore it (padding is handled by `length`)
 
 
-def paged_update(cache: PagedKVCache, k_new: jax.Array, v_new: jax.Array,
-                 st: PagedState) -> PagedKVCache:
+def _quant_paged_update(cache: QuantPagedKVCache, k_new, v_new,
+                        st: PagedState) -> QuantPagedKVCache:
+    """Decode write into a quantized pool: one position per slot.
+
+    The block's scale exponent can only rise: new_e = max(resident_e,
+    token_e).  When it rises, the resident payload is requantized by a
+    rounding right shift (exact power-of-two regridding) before the new
+    position lands — so a block's stored values are always on one grid.
+    Scale metadata and payload move together, and identically for every
+    schedule that issues the same writes (the cache-on/off invariant).
+    """
+    bits = cache.bits
+    block_size = cache.k.shape[1]
+    blk = jnp.take_along_axis(
+        st.block_table, (st.length // block_size)[:, None], axis=1)[:, 0]
+    off = st.length % block_size
+
+    def upd(buf, exp, new):                       # new: (slots, kvh, hd) f32
+        amax = jnp.max(jnp.abs(new.astype(jnp.float32)), axis=-1)
+        e_tok = kvq.pot_exponent(amax, bits)      # (slots, kvh)
+        e_old = exp[blk]
+        e_new = jnp.maximum(e_old, e_tok)
+        delta = e_new.astype(jnp.int32) - e_old.astype(jnp.int32)
+        resident = buf[blk]                       # (slots, bs, kvh, hdp)
+        q = kvq.unpack_int4(resident) if bits == 4 else resident
+        q = kvq.requant_shift(q, delta[:, None, :, None], bits)
+        qtok = kvq.quantize_pot(new, e_new[..., None], bits)
+        q = jax.vmap(
+            lambda qb, qt, o: jax.lax.dynamic_update_slice(qb, qt[None],
+                                                           (o, 0, 0))
+        )(q, qtok, off)
+        payload = kvq.pack_int4(q) if bits == 4 else q
+        return buf.at[blk].set(payload), exp.at[blk].set(e_new)
+
+    k, k_exp = upd(cache.k, cache.k_exp, k_new[:, 0])
+    v, v_exp = upd(cache.v, cache.v_exp, v_new[:, 0])
+    return QuantPagedKVCache(k, v, k_exp, v_exp, bits=bits)
+
+
+def paged_update(cache: AnyPagedKVCache, k_new: jax.Array, v_new: jax.Array,
+                 st: PagedState) -> AnyPagedKVCache:
     """Write one position per slot at logical index `length` via the table."""
+    if isinstance(cache, QuantPagedKVCache):
+        return _quant_paged_update(cache, k_new, v_new, st)
     block_size = cache.k.shape[1]
     blk = jnp.take_along_axis(
         st.block_table, (st.length // block_size)[:, None], axis=1)[:, 0]
@@ -212,7 +296,7 @@ def paged_update(cache: PagedKVCache, k_new: jax.Array, v_new: jax.Array,
     )
 
 
-def paged_view(cache: PagedKVCache, st: PagedState,
+def paged_view(cache: AnyPagedKVCache, st: PagedState,
                max_blocks: Optional[int] = None) -> Tuple[jax.Array, jax.Array]:
     """Gather each slot's blocks into a dense (slots, logical_seq, ...) view.
 
@@ -225,6 +309,13 @@ def paged_view(cache: PagedKVCache, st: PagedState,
     Under a sharding context the gathered view is pinned to the pool's layout
     (kv heads / head_dim on `model`, slots on the data axes) so GSPMD doesn't
     rematerialize the view when the reshape changes the dim structure.
+
+    Quantized pools gather the *packed* payload (int8 words, half-width at
+    4-bit) plus the per-(block, head) exponent plane, and only then
+    dequantize to an f32 view: the pool-side reads — the HBM traffic that
+    scales with context — move at kv_bits width, and roofline/hlo's gather
+    accounting sizes them by the gather's own (packed) output, even when
+    XLA fuses the dequant into the gather.
     """
     table = (st.block_table if max_blocks is None
              else st.block_table[:, :max_blocks])
@@ -232,6 +323,22 @@ def paged_view(cache: PagedKVCache, st: PagedState,
     block_size = cache.k.shape[1]
     kvh, hd = cache.k.shape[2], cache.k.shape[3]
     seq = blocks_per_slot * block_size
+
+    if isinstance(cache, QuantPagedKVCache):
+        bits = cache.bits
+        hd = hd * 2 if bits == 4 else hd
+
+        def qview(pool, exp):
+            packed = pool[table]                  # (slots, nbl, bs, kvh, hdp)
+            e = exp[table]                        # (slots, nbl, kvh)
+            packed = shard_ctx.constrain(packed, "batch", None, None,
+                                         "kv_heads", "head_dim")
+            dense = kvq.load_block(packed, e, bits)
+            dense = dense.reshape(slots, seq, kvh, hd)
+            return shard_ctx.constrain(dense, "batch", None,
+                                       "kv_heads", "head_dim")
+
+        return qview(cache.k, cache.k_exp), qview(cache.v, cache.v_exp)
 
     def view(pool):
         dense = pool[table]
@@ -258,7 +365,7 @@ class AttnQuant(NamedTuple):
 
 def paged_decode_attention(
     q: jax.Array,                     # (b, 1, h, d)
-    cache: PagedKVCache,
+    cache: AnyPagedKVCache,
     st: PagedState,                   # table possibly bucket-sliced; length =
                                       # positions already written - 1
     *,
@@ -278,8 +385,12 @@ def paged_decode_attention(
     lengths = st.length + 1
     if impl == "kernel":
         from repro.kernels import paged_attention as paged_kernel
+        quantized = isinstance(cache, QuantPagedKVCache)
         o = paged_kernel.paged_attention(
             q[:, 0], cache.k, cache.v, st.block_table, lengths, scale=scale,
+            k_exp=cache.k_exp if quantized else None,
+            v_exp=cache.v_exp if quantized else None,
+            kv_bits=cache.bits if quantized else 16,
             spec=quant.spec if quant is not None else None,
             s_in=quant.s_in if quant is not None else None)
         if quant is not None:
@@ -296,34 +407,64 @@ def paged_decode_attention(
     return o
 
 
-def paged_prefill_update(cache: PagedKVCache, k_new: jax.Array,
-                         v_new: jax.Array, st: PagedState) -> PagedKVCache:
+def paged_prefill_update(cache: AnyPagedKVCache, k_new: jax.Array,
+                         v_new: jax.Array, st: PagedState) -> AnyPagedKVCache:
     """Scatter one prefill chunk's K/V into the pool through the table.
 
     k_new/v_new: (b, C, kvh, hd) with C a block multiple; st.length holds
     each row's block-aligned chunk start, so the chunk occupies table columns
     start//bs .. start//bs + C//bs - 1. Columns past a slot's reservation are
     NULL_BLOCK and land in trash, like every other unmapped write.
+
+    Quantized pools *set* (never bump) each written block's scale exponent:
+    a chunk on the absolute grid always covers whole blocks, so the block's
+    entire payload and its exponent are one atomic function of the chunk's
+    f32 K/V — identical for every schedule that runs the chunk (the prefix
+    cache's bit-exactness relies on this).
     """
     block_size = cache.k.shape[1]
     b, chunk = k_new.shape[0], k_new.shape[1]
     assert chunk % block_size == 0, (chunk, block_size)
+    quantized = isinstance(cache, QuantPagedKVCache)
     k, v = cache.k, cache.v
+    k_exp = cache.k_exp if quantized else None
+    v_exp = cache.v_exp if quantized else None
     for i in range(b):
         base = st.length[i] // block_size
         for j in range(chunk // block_size):
             blk = st.block_table[i, base + j]
             sl = slice(j * block_size, (j + 1) * block_size)
+            if quantized:
+                valid = None
+                if st.ctx is not None:
+                    # scale exponents follow *real* tokens only: rows past
+                    # the prompt are chunk padding and must not coarsen the
+                    # block's grid (published full blocks are all-real, so
+                    # prefix sharing sees identical exponents either way)
+                    pos = (st.length[i] + j * block_size
+                           + jnp.arange(block_size))
+                    valid = pos < st.ctx[i]
+                kb, ke = kvq.store_block(k_new[i, sl], cache.bits,
+                                         valid=valid)
+                vb, ve = kvq.store_block(v_new[i, sl], cache.bits,
+                                         valid=valid)
+                k = jax.lax.dynamic_update_slice(k, kb[None], (blk, 0, 0, 0))
+                v = jax.lax.dynamic_update_slice(v, vb[None], (blk, 0, 0, 0))
+                k_exp = jax.lax.dynamic_update_slice(k_exp, ke[None], (blk, 0))
+                v_exp = jax.lax.dynamic_update_slice(v_exp, ve[None], (blk, 0))
+                continue
             kb = k_new[i, sl][None].astype(k.dtype)    # (1, bs, kvh, hd)
             vb = v_new[i, sl][None].astype(v.dtype)
             k = jax.lax.dynamic_update_slice(k, kb, (blk, 0, 0, 0))
             v = jax.lax.dynamic_update_slice(v, vb, (blk, 0, 0, 0))
+    if quantized:
+        return QuantPagedKVCache(k, v, k_exp, v_exp, bits=cache.bits)
     return PagedKVCache(k, v)
 
 
 def paged_prefill_attention(
     q: jax.Array,                     # (b, C, h, d) — one prefill chunk
-    cache: PagedKVCache,
+    cache: AnyPagedKVCache,
     st: PagedState,                   # table sliced to the chunk-position
                                       # bucket; length = chunk start position
     *,
@@ -343,8 +484,12 @@ def paged_prefill_attention(
     b, chunk, h, d = q.shape
     if impl == "kernel":
         from repro.kernels import paged_attention as paged_kernel
+        quantized = isinstance(cache, QuantPagedKVCache)
         o = paged_kernel.paged_prefill_attention(
             q, cache.k, cache.v, st.block_table, st.length, scale=scale,
+            k_exp=cache.k_exp if quantized else None,
+            v_exp=cache.v_exp if quantized else None,
+            kv_bits=cache.bits if quantized else 16,
             spec=quant.spec if quant is not None else None,
             s_in=quant.s_in if quant is not None else None)
         if quant is not None:

@@ -130,11 +130,14 @@ def decode_attention_block(
 ) -> Tuple[jax.Array, Any]:
     """One-token decode. x: (b, 1, d).
 
-    With `paged`, `cache` is a PagedKVCache pool: the new position is written
-    through the block table and attention runs over the mapped blocks — via
-    the Pallas flash-decode kernel (paged_impl="kernel") or the gathered
-    dense-view fallback ("gather"); `attn_quant` fuses the GRAU output
-    epilogue on either path."""
+    With `paged`, `cache` is a PagedKVCache (or, under a quantized
+    PrecisionPolicy, QuantPagedKVCache) pool: the new position is written
+    through the block table — packed + scale-exponent-bumped when quantized
+    — and attention runs over the mapped blocks via the Pallas flash-decode
+    kernel (paged_impl="kernel") or the gathered dense-view fallback
+    ("gather"); `attn_quant` fuses the GRAU output epilogue on either path.
+    Storage precision is carried by the cache leaf itself, so this layer is
+    policy-agnostic."""
     q, k, v = _qkv(params, x, cfg)
     if paged is not None:
         pos = paged.length[:, None]                              # (b,1)

@@ -1,0 +1,173 @@
+"""Packed KV-cache quantization with power-of-two (GRAU-style) scales.
+
+The paged KV pools (nn/attention.QuantPagedKVCache) store K/V as int8 words —
+one value per byte at kv_bits=8, two packed nibbles per byte at kv_bits=4 —
+plus a *scale-exponent plane*: one signed-byte exponent ``e`` per
+(block, kv_head) per tensor.  A stored value ``q`` represents ``q * 2**e``;
+dequantization is an exponent-add (a shift in fixed-point hardware), never a
+float multiply by an arbitrary calibrated scale.  This mirrors the paper's
+PoT datapath: the GRAU unit's segment slopes are power-of-two for exactly the
+same reason, and carrying the convention into the KV cache keeps the whole
+serving datapath shift-only.
+
+Determinism contract (load-bearing for serving bit-exactness):
+
+* Exponents are computed *at write time* by the shared jnp write paths
+  (nn/attention.paged_update / paged_prefill_update), which both the Pallas
+  kernel and the gather fallback read from — readers never re-derive scales.
+* ``pot_exponent`` is frexp-based integer arithmetic (no log2 rounding
+  hazard), so the same values always produce the same exponent.
+* Re-scaling an already-written block when a later write raises its exponent
+  is a rounding right-shift of the stored integers (``requant_shift``) — the
+  power-of-two grid makes requantization exact integer arithmetic.
+
+int4 packing: the head dim is split in halves — byte ``i`` holds element
+``i`` in its low nibble and element ``i + head_dim//2`` in its high nibble —
+so unpacking is a concat, not an interleave (lane-friendly inside kernels).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+KV_BITS = (16, 8, 4)
+
+# exponent plane init: far below any write-time exponent, so the first write
+# into a block always sets (never inherits) the scale; 2.0**EXP_EMPTY is
+# still a normal f32, so dequantizing a never-written block stays finite
+EXP_EMPTY = -126
+
+
+def kv_qmax(bits: int) -> int:
+    """Symmetric integer range: +/- (2^(bits-1) - 1); -2^(bits-1) is unused
+    (the GRAU MAC convention — keeps negation closed under the bit width)."""
+    return (1 << (bits - 1)) - 1
+
+
+def exp2i(e: jax.Array) -> jax.Array:
+    """Exact 2^e for integer e in [-126, 126], built from the f32 exponent
+    field by bitcast.  jnp.exp2 lowers to a polynomial approximation on some
+    backends (XLA CPU returns 8192.0039 for exp2(13.0)) — an *approximate*
+    power of two would silently break the shift-only dequant contract, so
+    scales are constructed, not computed.  Works inside Pallas kernel bodies
+    (integer shift + bitcast only)."""
+    bits = (e.astype(jnp.int32) + 127) << 23
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def validate_kv_bits(bits: int) -> None:
+    if bits not in KV_BITS:
+        raise ValueError(f"kv_bits must be one of {KV_BITS}, got {bits}")
+
+
+def packed_head_dim(head_dim: int, bits: int) -> int:
+    """Storage width of the head_dim axis (two nibbles per byte at 4-bit)."""
+    validate_kv_bits(bits)
+    if bits == 4:
+        if head_dim % 2:
+            raise ValueError(
+                f"kv_bits=4 packs two values per byte along head_dim; "
+                f"head_dim={head_dim} is odd — pad the model's head_dim to "
+                "an even value or use kv_bits >= 8")
+        return head_dim // 2
+    return head_dim
+
+
+def pot_exponent(amax: jax.Array, bits: int) -> jax.Array:
+    """Smallest power-of-two exponent e with amax representable as q * 2^e.
+
+    frexp gives amax = m * 2^f with m in [0.5, 1), i.e. amax <= 2^f; storing
+    at e = f - (bits - 1) puts the quantization grid's top step at
+    (2^(b-1) - 1) * 2^e — within one LSB of amax (the edge case clips by one
+    step in ``quantize_pot``).  Pure integer arithmetic on the float's
+    exponent field: no log2/ceil rounding hazards, bit-deterministic.
+    """
+    _, f = jnp.frexp(amax.astype(jnp.float32))
+    e = f.astype(jnp.int32) - (bits - 1)
+    return jnp.clip(e, EXP_EMPTY, 126).astype(jnp.int8)
+
+
+def quantize_pot(x: jax.Array, e: jax.Array, bits: int) -> jax.Array:
+    """Symmetric round-to-nearest onto the 2^e grid -> int8 (unpacked)."""
+    qmax = kv_qmax(bits)
+    s = exp2i(-e.astype(jnp.int32))
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) * s), -qmax, qmax)
+    return q.astype(jnp.int8)
+
+
+def dequantize_pot(q: jax.Array, e: jax.Array) -> jax.Array:
+    """q * 2^e in f32 — multiplying by an exact power of two is an exponent
+    add, the shift-only dequant the paper's datapath assumes."""
+    return q.astype(jnp.float32) * exp2i(e)
+
+
+def requant_shift(q: jax.Array, delta: jax.Array, bits: int) -> jax.Array:
+    """Re-express stored integers at an exponent raised by ``delta`` >= 0.
+
+    q * 2^e == (q >> delta) * 2^(e + delta): a rounding (round-half-up)
+    arithmetic right shift in int32, clipped back to the symmetric range.
+    Shift counts are clamped to 31 (int32 shift semantics); any delta that
+    large zeroes an int8 payload anyway.
+    """
+    qmax = kv_qmax(bits)
+    d = jnp.minimum(delta.astype(jnp.int32), 31)
+    shifted = jnp.where(
+        d > 0,
+        (q.astype(jnp.int32) + (1 << jnp.maximum(d - 1, 0))) >> d,
+        q.astype(jnp.int32))
+    return jnp.clip(shifted, -qmax, qmax).astype(jnp.int8)
+
+
+def pack_int4(q: jax.Array) -> jax.Array:
+    """(..., head_dim) int8 nibbles -> (..., head_dim//2) packed bytes.
+
+    Byte i = low nibble element i | high nibble element i + head_dim//2
+    (split-halves layout: unpack is a concat, not an interleave).
+    """
+    hd = q.shape[-1]
+    lo = q[..., : hd // 2].astype(jnp.uint8) & 0xF
+    hi = q[..., hd // 2:].astype(jnp.uint8) & 0xF
+    return (lo | (hi << 4)).astype(jnp.int8)
+
+
+def unpack_int4(p: jax.Array) -> jax.Array:
+    """(..., head_dim//2) packed bytes -> (..., head_dim) sign-extended int8.
+
+    ``(p << 4) >> 4`` sign-extends the low nibble; the arithmetic ``>> 4``
+    sign-extends the high one.  Concat restores the split-halves layout.
+    jnp-only, so the same helper runs inside Pallas kernel bodies.
+    """
+    p8 = p.astype(jnp.int8)
+    lo = (p8 << 4) >> 4
+    hi = p8 >> 4
+    return jnp.concatenate([lo, hi], axis=-1)
+
+
+def store_block(x: jax.Array, bits: int, valid=None):
+    """Quantize one full pool block (positions, kv_heads, head_dim) -> packed
+    payload + per-head exponent.  The whole-block write path (prefill chunks,
+    which always cover complete blocks on the absolute chunk grid).
+
+    `valid` ((positions,) bool, optional) restricts the exponent's amax to
+    real rows: chunk *padding* past the prompt writes deterministic garbage
+    K/V into the block, and letting its magnitude pick the scale would
+    coarsen the grid every real token in the block is stored at.  Invalid
+    rows still get quantized (clipped) payloads — they are overwritten by
+    decode or masked by `length` before any reader attends them.
+    """
+    ax = jnp.abs(x.astype(jnp.float32))
+    if valid is not None:
+        ax = jnp.where(valid[..., None, None], ax, 0.0)
+    amax = jnp.max(ax, axis=(-3, -1))                              # (... kvh)
+    e = pot_exponent(amax, bits)
+    q = quantize_pot(x, e[..., None, :, None], bits)
+    return pack_int4(q) if bits == 4 else q, e
+
+
+def load_block(payload: jax.Array, e: jax.Array, bits: int) -> jax.Array:
+    """Inverse of store_block: packed payload + exponent -> f32 block.
+    Shared verbatim by the gather fallback, the jnp oracle, and (via
+    unpack_int4/dequantize_pot on refs) the Pallas kernel, so every reader
+    dequantizes bit-identically."""
+    q = unpack_int4(payload) if bits == 4 else payload
+    return dequantize_pot(q, e[..., None, :, None])

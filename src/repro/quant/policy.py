@@ -1,9 +1,20 @@
-"""Mixed-precision policies — per-stage bit-width assignment (paper Table I).
+"""Mixed-precision policies — the one object that assigns bits end-to-end.
 
-The paper's mixed-precision protocol assigns one precision per *stage* of the
-network (VGG16/ResNet18: 8/4/2/4/8 over the stages + FC). We model a policy as
-an ordered list of (pattern, bits) rules matched against layer names, with a
-default. `stage_policy` builds the paper's scheme.
+A :class:`PrecisionPolicy` carries two rule sets:
+
+* ``rules`` — weight/activation bit-widths per *stage* of the network (the
+  paper's Table I mixed-precision protocol: VGG16/ResNet18 at 8/4/2/4/8 over
+  the stages + FC).  ``stage_policy`` builds the paper's scheme.
+* ``kv_rules`` — KV-cache bit-widths per transformer layer (16 = raw float
+  pools, 8/4 = packed int pools with per-block power-of-two scale exponents,
+  see quant/kv.py).  The serving engine (serve/engine.py), the pool builder
+  (serve/kv_cache.init_paged_caches) and both attention read paths consume
+  *this* object — there is no per-module dtype knob anywhere downstream.
+
+Both rule sets are ordered (pattern, bits) lists matched against layer names
+(first match wins) with a default.  Serving layer names follow the cache tree
+structure: ``group{gi}.l{li}`` — e.g. ``("group0", 8)`` pins group 0's KV to
+int8 while everything else follows ``kv_default_bits``.
 """
 from __future__ import annotations
 
@@ -11,13 +22,23 @@ import dataclasses
 import re
 from typing import Sequence, Tuple
 
+from repro.quant.kv import KV_BITS
 from repro.quant.quantizers import QConfig
 
 
 @dataclasses.dataclass(frozen=True)
 class PrecisionPolicy:
-    rules: Tuple[Tuple[str, int], ...]   # (regex, bits), first match wins
+    rules: Tuple[Tuple[str, int], ...] = ()      # (regex, bits), first match wins
     default_bits: int = 8
+    kv_rules: Tuple[Tuple[str, int], ...] = ()   # (regex, kv_bits) per layer
+    kv_default_bits: int = 16                    # 16 = unquantized KV pools
+
+    def __post_init__(self):
+        for pattern, bits in self.kv_rules + (("<default>", self.kv_default_bits),):
+            if bits not in KV_BITS:
+                raise ValueError(
+                    f"kv rule {pattern!r}: kv_bits must be one of {KV_BITS}, "
+                    f"got {bits}")
 
     def bits_for(self, layer_name: str) -> int:
         for pattern, bits in self.rules:
@@ -28,9 +49,31 @@ class PrecisionPolicy:
     def qconfig_for(self, layer_name: str, **kw) -> QConfig:
         return QConfig(bits=self.bits_for(layer_name), **kw)
 
+    def kv_bits_for(self, layer_name: str) -> int:
+        """KV-cache bits for one attention layer (names: ``group{gi}.l{li}``)."""
+        for pattern, bits in self.kv_rules:
+            if re.search(pattern, layer_name):
+                return bits
+        return self.kv_default_bits
+
+    @property
+    def kv_quantized(self) -> bool:
+        """True if any layer's KV cache stores packed integers (< 16 bits)."""
+        return (self.kv_default_bits < 16
+                or any(b < 16 for _, b in self.kv_rules))
+
+    def with_kv(self, bits: int, rules: Tuple[Tuple[str, int], ...] = ()
+                ) -> "PrecisionPolicy":
+        return dataclasses.replace(self, kv_default_bits=bits, kv_rules=rules)
+
 
 def unified(bits: int) -> PrecisionPolicy:
     return PrecisionPolicy(rules=(), default_bits=bits)
+
+
+def kv_policy(kv_bits: int) -> PrecisionPolicy:
+    """Uniform KV-cache precision (the --kv-bits serving knob)."""
+    return PrecisionPolicy(kv_default_bits=kv_bits)
 
 
 def stage_policy(stage_bits: Sequence[int], fc_bits: int = 8) -> PrecisionPolicy:

@@ -33,6 +33,8 @@ class QConfig:
     signed: bool = True
     per_channel: bool = False
     channel_axis: int = -1
+    pot_scale: bool = False   # round scales up to a power of two (shift-only
+    # dequant, the GRAU / quant.kv convention); scale is then exactly 2^e
 
     @property
     def qmin(self):
@@ -43,14 +45,36 @@ class QConfig:
         return qrange(self.bits, self.signed)[1]
 
 
+def pot_round_scale(scale: jax.Array) -> jax.Array:
+    """Round a positive scale up to the smallest covering power of two.
+
+    frexp-based: s = m * 2^f with m in [0.5, 1), so the cover is 2^f — or s
+    itself when s is already a power of two (m == 0.5, cover 2^(f-1) == s).
+    Rounding *up* can only widen the representable range, never clip harder
+    than the calibrated scale.  The result is *constructed* from the f32
+    exponent field (quant/kv.exp2i), not computed via exp2 — XLA CPU's exp2
+    is a polynomial approximation and would return a near-power-of-two.
+    """
+    from repro.quant.kv import exp2i
+    e = scale_exponent(scale)
+    return exp2i(jnp.clip(e, -126, 126)).astype(scale.dtype)
+
+
+def scale_exponent(scale: jax.Array) -> jax.Array:
+    """Integer exponent e with scale == 2^e (for power-of-two scales)."""
+    m, f = jnp.frexp(scale.astype(jnp.float32))
+    return jnp.where(m == 0.5, f - 1, f).astype(jnp.int32)
+
+
 def compute_scale(x: jax.Array, cfg: QConfig) -> jax.Array:
-    """Max-abs calibration scale (symmetric)."""
+    """Max-abs calibration scale (symmetric; power-of-two when cfg.pot_scale)."""
     if cfg.per_channel:
         axes = tuple(i for i in range(x.ndim) if i != cfg.channel_axis % x.ndim)
         amax = jnp.max(jnp.abs(x), axis=axes, keepdims=True)
     else:
         amax = jnp.max(jnp.abs(x))
-    return jnp.maximum(amax, 1e-8) / cfg.qmax
+    scale = jnp.maximum(amax, 1e-8) / cfg.qmax
+    return pot_round_scale(scale) if cfg.pot_scale else scale
 
 
 def quantize(x: jax.Array, scale: jax.Array, cfg: QConfig) -> jax.Array:

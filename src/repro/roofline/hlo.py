@@ -219,14 +219,20 @@ class HLOModule:
                 t.bytes_by_op[op] = t.bytes_by_op.get(op, 0.0) + b
                 if op == "fusion":
                     # a gather fused with elementwise ops keeps its traffic
-                    # class: attribute the fusion's bytes to the fused gather
+                    # class, at the *gather's own* output size: a fused
+                    # dequant (packed int8 pool -> f32 view) must not
+                    # re-widen the gathered bytes to the compute dtype, so
+                    # each inner gather contributes its own output-shape
+                    # bytes. For unquantized pools the inner gather and the
+                    # dense view have identical element count and dtype, so
+                    # this matches the old whole-fusion attribution.
                     cm = _CALLS.search(ins.rest)
                     for fins in (self.computations.get(cm.group(1), [])
                                  if cm else []):
                         if fins.op == "gather":
                             t.bytes_by_op["gather"] = (
-                                t.bytes_by_op.get("gather", 0.0) + b)
-                            break
+                                t.bytes_by_op.get("gather", 0.0)
+                                + _shape_bytes(fins.shape))
         self._memo[comp] = t
         return t
 

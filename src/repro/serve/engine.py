@@ -35,6 +35,21 @@ kernel (kernels/paged_attention.py — block-table-driven DMA, the TPU path) or
 the bucketed dense gather (nn/attention.paged_view — the oracle and host-CPU
 path); both touch O(live blocks) of KV, never O(blocks_per_slot).
 
+KV precision is policy-driven, end to end: `EngineConfig.precision` (a
+quant.policy.PrecisionPolicy; `kv_bits` is the uniform shorthand) assigns
+per-layer KV-cache bits. 16-bit layers keep float pools; 8/4-bit layers
+store packed int8 pools with per-(block, head) power-of-two scale exponents
+(quant/kv.py) — written by the shared update paths, dequantized identically
+by the Pallas kernel (in VMEM) and the gather fallback, sharded alongside
+the payloads, COW-copied with their blocks, and accounted at packed width
+by decode_cost's gather bytes. Everything below (buckets, chunk grid,
+warmup, donation) is precision-agnostic: quantization changes array
+contents and dtypes, never shapes, schedules, or trace counts. The one
+behavioral difference: partial-block COW prefix reuse is disabled at
+kv_bits < 16 (a donor block's shared scale exponent depends on its trailing
+positions — see _match_prefix), so reuse rounds down to the chunk grid and
+cache-on/off streams stay bit-identical at any fixed kv_bits.
+
 Static-shape invariants (serving never recompiles after warmup):
   * the decode+sample step sees (slots, 1) tokens, the same cache tree,
     (slots,)-shaped slot state and sampler params, and one block-table shape
@@ -111,6 +126,12 @@ class EngineConfig:
     prefix_cache: bool = False    # radix-tree shared-prefix KV reuse
     # (paged only): admissions pin the longest cached block-aligned prefix
     # and prefill only the suffix
+    precision: Optional[Any] = None   # quant.policy.PrecisionPolicy: per-layer
+    # KV-cache bits (16 = float pools; 8/4 = packed int pools with per-block
+    # power-of-two scale exponents). The one precision object the whole
+    # datapath consumes — pools, kernels, gather fallback, COW all follow it
+    kv_bits: Optional[int] = None     # shorthand: uniform KV precision
+    # (builds kv_policy(kv_bits)); mutually exclusive with `precision`
     policy: str = "fcfs"          # "fcfs" | "prefill" (see serve/scheduler.py)
     max_prefills_per_tick: Optional[int] = None
     max_pending_ticks: int = 32   # force a host drain after this many
@@ -219,6 +240,20 @@ class ServeEngine:
         if ecfg.prefix_cache and not self.paged:
             raise ValueError("prefix_cache requires the paged backend")
 
+        if ecfg.precision is not None and ecfg.kv_bits is not None:
+            raise ValueError("pass either precision (a PrecisionPolicy) or "
+                             "kv_bits (uniform shorthand), not both")
+        if ecfg.kv_bits is not None:
+            from repro.quant.policy import kv_policy
+            self.precision = kv_policy(ecfg.kv_bits)
+        else:
+            self.precision = ecfg.precision
+        self._kv_quant = (self.precision is not None
+                          and self.precision.kv_quantized)
+        if self._kv_quant and not self.paged:
+            raise ValueError("quantized KV (kv_bits < 16) requires the paged "
+                             "backend: dense/SSM/MLA caches stay float")
+
         if self.paged:
             self.blocks_per_slot = kvc.blocks_for(ecfg.max_seq, ecfg.page_size)
             num_blocks = (ecfg.num_blocks if ecfg.num_blocks is not None else
@@ -226,7 +261,8 @@ class ServeEngine:
                                           ecfg.page_size))
             self.allocator = kvc.BlockAllocator(num_blocks)
             self.caches = kvc.init_paged_caches(cfg, num_blocks,
-                                                ecfg.page_size, dtype=dtype)
+                                                ecfg.page_size, dtype=dtype,
+                                                policy=self.precision)
             if ecfg.prefill_chunk is None:
                 # auto: 32 tokens, rounded up to a whole page so any valid
                 # page_size works out of the box
@@ -421,14 +457,16 @@ class ServeEngine:
 
         return jax.tree.map(ins, caches, filled)
 
-    def _chunk_fn(self, params, tokens, caches, table_row, p0):
+    def _chunk_fn(self, params, tokens, caches, table_row, p0, ctx):
         """One chunk of the chunked-prefill state machine: tokens (1, C) at
         absolute positions p0..p0+C-1, written through the slot's (bucket-
         sliced) table row and attending the already-resident prefix blocks —
         cached (pinned from the radix tree) and freshly computed blocks are
         indistinguishable here, which is what keeps cache-on and cache-off
-        admissions bit-identical."""
-        st = PagedState(table_row, p0)
+        admissions bit-identical. `ctx` (the row's real context length) only
+        steers quantized pools' scale exponents away from chunk padding —
+        it is a pure function of the request, so the invariant holds."""
+        st = PagedState(table_row, p0, ctx)
         _, caches = lm.prefill_step(params, self.cfg, tokens, caches,
                                     act=self._act, paged=st,
                                     paged_impl=self.paged_impl,
@@ -531,6 +569,16 @@ class ServeEngine:
         if memo is not None and memo[0] == self.radix.clock:
             return memo[1]
         m = self.radix.match(rs.prompt[:ctx])
+        if self._kv_quant and m.cow_src is not None:
+            # quantized pools share one scale exponent per block, and a
+            # donor block's exponent depends on *its* trailing positions —
+            # copying it for a partial match would make the reused prefix's
+            # dequantized values depend on the donor's suffix, breaking the
+            # cache-on/off bit-exactness contract. Full-block reuse keeps it
+            # (identical writes -> identical payload + exponent), so
+            # partial-block COW is simply not taken at kv_bits < 16.
+            m = dataclasses.replace(m, cow_src=None, cow_node=None,
+                                    cow_tokens=0)
         if m.tokens_matched + m.cow_tokens >= ctx:
             out = (m, m.blocks, m.nodes, ctx, m.cow_src)
         else:
@@ -690,7 +738,8 @@ class ServeEngine:
         toks[0, :n] = rs.prompt[p0:p0 + n]
         self.caches = self._chunk(self.params, toks, self.caches,
                                   rs.table_row[None, :W],
-                                  np.array([p0], np.int32))
+                                  np.array([p0], np.int32),
+                                  np.array([rs.prefill_ctx], np.int32))
         rs.prefill_pos = p0 + C
         rs.computed_prefill_tokens += n
         self.stats["prefill_tokens"] += n
@@ -885,7 +934,7 @@ class ServeEngine:
             for w in self.chunk_widths:
                 row = np.full((1, w), kvc.NULL_BLOCK, np.int32)
                 self.caches = self._chunk(self.params, toks, self.caches,
-                                          row, p0)
+                                          row, p0, np.zeros(1, np.int32))
             self.caches = self._copy(self.caches, np.int32(kvc.NULL_BLOCK),
                                      np.int32(kvc.NULL_BLOCK))
         elif prefill and self.bucketed:
@@ -967,6 +1016,11 @@ class ServeEngine:
         m["evictions"] = self.radix.evictions if self.radix else 0
         if self.paged:
             m["paged_impl"] = self.paged_impl
+            bits_tree = kvc.kv_bits_by_layer(self.cfg, self.precision)
+            bits_flat = sorted({b for grp in bits_tree for b in grp})
+            m["kv_bits"] = (bits_flat[0] if len(bits_flat) == 1
+                            else list(bits_flat))
+            m["kv_quantized"] = self._kv_quant
             m["decode_buckets"] = list(self.decode_buckets)
             m["free_blocks"] = self.allocator.free_blocks
             m["total_blocks"] = self.allocator.num_blocks

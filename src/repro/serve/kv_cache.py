@@ -28,9 +28,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
-from repro.nn.attention import PagedKVCache
+from repro.nn.attention import PagedKVCache, QuantPagedKVCache
+from repro.quant import kv as kvq
+from repro.quant.policy import PrecisionPolicy
 
 NULL_BLOCK = 0
+
+_POOL_TYPES = (PagedKVCache, QuantPagedKVCache)
 
 
 # ---------------------------------------------------------------------------
@@ -207,21 +211,75 @@ def pool_blocks(slots: int, max_seq: int, block_size: int) -> int:
     return slots * blocks_for(max_seq, block_size) + 1
 
 
+def validate_pool_packing(cfg: ModelConfig, block_size: int,
+                          bits: int, layer: str = "") -> None:
+    """Eager packing validation: every assumption the packed layout makes is
+    checked at pool-construction time with a pointed message, instead of
+    surfacing as an opaque reshape failure inside the first traced chunk."""
+    where = f" ({layer})" if layer else ""
+    kvq.validate_kv_bits(bits)
+    if block_size < 1:
+        raise ValueError(f"block_size must be >= 1, got {block_size}")
+    try:
+        kvq.packed_head_dim(cfg.head_dim, bits)   # odd head_dim at 4-bit
+    except ValueError as e:
+        raise ValueError(f"{cfg.name}{where}: {e}") from None
+
+
+def kv_bits_by_layer(cfg: ModelConfig,
+                     policy: Optional[PrecisionPolicy]) -> Tuple[Tuple[int, ...], ...]:
+    """Per-layer KV bit assignment from the policy (16 everywhere when None).
+    Layer names follow the cache tree: ``group{gi}.l{li}``."""
+    return tuple(
+        tuple(policy.kv_bits_for(f"group{gi}.l{li}") if policy else 16
+              for li in range(len(period)))
+        for gi, (period, _) in enumerate(cfg.groups))
+
+
 def init_paged_caches(cfg: ModelConfig, num_blocks: int, block_size: int, *,
-                      dtype=jnp.bfloat16):
-    """PagedKVCache pool tree with lm.init_caches' structure: a tuple per
-    group of per-period-layer leaves, each stacked over the group's repeats."""
+                      dtype=jnp.bfloat16,
+                      policy: Optional[PrecisionPolicy] = None):
+    """Pool tree with lm.init_caches' structure: a tuple per group of
+    per-period-layer leaves, each stacked over the group's repeats.
+
+    Per-layer storage follows the PrecisionPolicy's ``kv_bits_for``: 16-bit
+    layers keep plain float PagedKVCache pools in `dtype`; 8/4-bit layers
+    get QuantPagedKVCache — packed int8 payloads (half-width head_dim at
+    4-bit) plus per-(block, head) power-of-two scale-exponent planes,
+    initialized to quant/kv.EXP_EMPTY so the first write into a block always
+    sets the scale.  Packing assumptions are validated eagerly here.
+    """
     assert paged_supported(cfg), f"{cfg.name}: arch not pageable"
     kvh, hd = cfg.kv_heads_phys, cfg.head_dim
+    bits_tree = kv_bits_by_layer(cfg, policy)
     caches = []
-    for period, repeats in cfg.groups:
-        per_layer = tuple(
-            PagedKVCache(
-                k=jnp.zeros((repeats, num_blocks, block_size, kvh, hd), dtype),
-                v=jnp.zeros((repeats, num_blocks, block_size, kvh, hd), dtype),
-            )
-            for _ in period)
-        caches.append(per_layer)
+    for gi, (period, repeats) in enumerate(cfg.groups):
+        per_layer = []
+        for li in range(len(period)):
+            bits = bits_tree[gi][li]
+            validate_pool_packing(cfg, block_size, bits,
+                                  layer=f"group{gi}.l{li}")
+            if bits == 16:
+                per_layer.append(PagedKVCache(
+                    k=jnp.zeros((repeats, num_blocks, block_size, kvh, hd),
+                                dtype),
+                    v=jnp.zeros((repeats, num_blocks, block_size, kvh, hd),
+                                dtype),
+                ))
+                continue
+            hdp = kvq.packed_head_dim(hd, bits)
+            per_layer.append(QuantPagedKVCache(
+                k=jnp.zeros((repeats, num_blocks, block_size, kvh, hdp),
+                            jnp.int8),
+                v=jnp.zeros((repeats, num_blocks, block_size, kvh, hdp),
+                            jnp.int8),
+                k_exp=jnp.full((repeats, num_blocks, kvh), kvq.EXP_EMPTY,
+                               jnp.int8),
+                v_exp=jnp.full((repeats, num_blocks, kvh), kvq.EXP_EMPTY,
+                               jnp.int8),
+                bits=bits,
+            ))
+        caches.append(tuple(per_layer))
     return tuple(caches)
 
 
@@ -237,9 +295,13 @@ def copy_pool_block(pools, src: jax.Array, dst: jax.Array):
     slot-private block before decode starts writing into it, so the shared
     cached copy is never mutated. `src`/`dst` are traced scalars — one jit
     trace covers every copy.
+
+    Quantized pools copy payload *and* scale metadata together: the exponent
+    planes have the same (stack, block, ...) leading layout as the payloads,
+    so the one generic block-axis copy moves both.
     """
     def one(pool):
-        assert isinstance(pool, PagedKVCache)
+        assert isinstance(pool, _POOL_TYPES)
 
         def cp(buf):
             blk = jax.lax.dynamic_slice(
@@ -248,7 +310,10 @@ def copy_pool_block(pools, src: jax.Array, dst: jax.Array):
             return jax.lax.dynamic_update_slice(
                 buf, blk, (0, dst) + (0,) * (buf.ndim - 2))
 
+        if isinstance(pool, QuantPagedKVCache):
+            return QuantPagedKVCache(cp(pool.k), cp(pool.v), cp(pool.k_exp),
+                                     cp(pool.v_exp), bits=pool.bits)
         return PagedKVCache(cp(pool.k), cp(pool.v))
 
     return jax.tree.map(one, pools,
-                        is_leaf=lambda c: isinstance(c, PagedKVCache))
+                        is_leaf=lambda c: isinstance(c, _POOL_TYPES))

@@ -35,6 +35,17 @@ prefix, so wiring it into a table is indistinguishable — bit for bit — from
 recomputing it. The trie key being the literal token content is what makes
 that safe: two prompts share a node only if every token in the block (and in
 every ancestor block) matches.
+
+Quantized pools (kv_bits < 16) carry scale metadata *with* the block: the
+per-(block, head) exponent planes are indexed by the same pool block id a
+node stores, so sharing or COW-copying a block shares/copies its scales
+automatically (kv_cache.copy_pool_block moves payload and exponents
+together). The one sharing mode that would break under a shared block
+exponent — partial-block COW, whose donor exponent depends on the donor's
+trailing positions — is disabled by the engine at kv_bits < 16
+(engine._match_prefix rounds such matches down to the chunk grid), keeping
+full-block reuse exact: identical chunk writes produce identical payloads
+AND identical exponents.
 """
 from __future__ import annotations
 

@@ -10,6 +10,10 @@ The serving scheme differs from training's FSDP x TP (launch/steps.py):
     over `data` (any slot may own any block, so a data-sharded pool would
     need per-shard allocators — that is the multi-host follow-up, not this
     layer). Decode batch (slots) shards over `data` via the activation rules.
+    Quantized pools (PrecisionPolicy kv_bits < 16) shard the same way, with
+    the packed payload's storage head_dim deciding the fallback and the
+    (repeats, blocks, kvh) scale-exponent planes sharding their kv-head axis
+    alongside the payload — a block and its scales share a shard.
   * dense caches — launch/steps.cache_pspecs: slot batch over `data`,
     kv heads over `model`.
   * slot state (last token, lengths, decode budget, active mask) — a tiny
@@ -47,7 +51,7 @@ from repro.launch import steps as steps_lib
 from repro.launch.mesh import (make_serve_mesh, named_shardings,  # noqa: F401
                                parse_mesh_spec)
 from repro.models.config import ModelConfig
-from repro.nn.attention import PagedKVCache
+from repro.nn.attention import PagedKVCache, QuantPagedKVCache
 
 
 def _axis_size(mesh: Mesh, axis: str) -> int:
@@ -78,28 +82,52 @@ def place_dense_caches(caches, cfg: ModelConfig, mesh: Mesh, slots: int):
     return jax.device_put(caches, named_shardings(mesh, pspecs))
 
 
-def paged_pool_pspecs(cfg: ModelConfig, mesh: Mesh):
+def _pool_leaf_spec(mesh: Mesh, kv_heads: int, packed_hd: int):
+    """Payload spec for one (repeats, blocks, block_size, kvh, hd') leaf:
+    kv heads shard over `model` when divisible (the *packed* head_dim as the
+    fallback, matching cache_pspecs), blocks stay whole on every replica."""
+    m = _axis_size(mesh, "model")
+    if kv_heads % m == 0:
+        return P(None, None, None, "model", None)
+    if packed_hd % m == 0:
+        return P(None, None, None, None, "model")
+    return P(None, None, None, None, None)
+
+
+def paged_pool_pspecs(cfg: ModelConfig, mesh: Mesh, pools=None):
     """PartitionSpec tree mirroring kv_cache.init_paged_caches' structure.
 
-    Pool leaves are (repeats, num_blocks, block_size, kv_heads, head_dim);
-    kv heads shard over `model` when divisible (head_dim as the fallback,
-    matching cache_pspecs), blocks stay whole on every data replica.
+    With `pools` (the actual cache tree), specs are derived leaf-by-leaf so
+    quantized layers shard correctly: packed payloads use their *storage*
+    head_dim (half-width at 4-bit) for the fallback divisibility check, and
+    the (repeats, blocks, kvh) scale-exponent planes shard their kv-head
+    axis alongside the payload's — a block's payload and its scale metadata
+    always land on the same shard.  Without `pools`, the all-float layout is
+    assumed (back-compat for callers that never quantize).
     """
     m = _axis_size(mesh, "model")
-    if cfg.kv_heads_phys % m == 0:
-        spec = P(None, None, None, "model", None)
-    elif cfg.head_dim % m == 0:
-        spec = P(None, None, None, None, "model")
-    else:
-        spec = P(None, None, None, None, None)
-    return tuple(
-        tuple(PagedKVCache(k=spec, v=spec) for _ in period)
-        for period, _ in cfg.groups)
+
+    def leaf_spec(c):
+        if isinstance(c, QuantPagedKVCache):
+            spec = _pool_leaf_spec(mesh, c.k.shape[-2], c.k.shape[-1])
+            espec = (P(None, None, "model") if c.k_exp.shape[-1] % m == 0
+                     else P(None, None, None))
+            return QuantPagedKVCache(spec, spec, espec, espec, bits=c.bits)
+        return PagedKVCache(k=leaf_spec_f, v=leaf_spec_f)
+
+    leaf_spec_f = _pool_leaf_spec(mesh, cfg.kv_heads_phys, cfg.head_dim)
+    if pools is None:
+        return tuple(
+            tuple(PagedKVCache(k=leaf_spec_f, v=leaf_spec_f) for _ in period)
+            for period, _ in cfg.groups)
+    return jax.tree.map(
+        leaf_spec, pools,
+        is_leaf=lambda c: isinstance(c, (PagedKVCache, QuantPagedKVCache)))
 
 
 def place_paged_pools(pools, cfg: ModelConfig, mesh: Mesh):
-    return jax.device_put(pools,
-                          named_shardings(mesh, paged_pool_pspecs(cfg, mesh)))
+    return jax.device_put(
+        pools, named_shardings(mesh, paged_pool_pspecs(cfg, mesh, pools)))
 
 
 def mesh_summary(mesh: Mesh) -> str:

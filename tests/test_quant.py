@@ -1,0 +1,225 @@
+"""Direct tests for the quant/ package: QConfig round-trip properties,
+power-of-two scale exponents, the packed-KV substrate (quant/kv.py), and
+PrecisionPolicy rule matching incl. the paper's PAPER_MIXED 8/4/2/4/8 scheme
+and the KV-bits rules the serving engine consumes.
+
+Deterministic (seeded) versions of every property always run; hypothesis
+variants widen the input space when hypothesis is installed (CI does)."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.quant import kv as kvq
+from repro.quant.policy import (PAPER_MIXED, PrecisionPolicy, kv_policy,
+                                stage_policy, unified)
+from repro.quant.quantizers import (QConfig, compute_scale, dequantize,
+                                    fake_quant, pot_round_scale, qrange,
+                                    quantize, scale_exponent)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(not HAVE_HYPOTHESIS,
+                                      reason="hypothesis not installed")
+
+
+# ---------------------------------------------------------------------------
+# QConfig round-trip properties
+# ---------------------------------------------------------------------------
+
+def _roundtrip_check(x, bits, pot):
+    cfg = QConfig(bits=bits, pot_scale=pot)
+    s = compute_scale(x, cfg)
+    err = jnp.abs(dequantize(quantize(x, s, cfg), s) - x)
+    assert float(jnp.max(err)) <= float(s) / 2 + 1e-6
+    q = np.asarray(quantize(x, s, cfg), np.int32)
+    assert q.min() >= cfg.qmin and q.max() <= cfg.qmax
+    if pot:
+        e = int(scale_exponent(s))
+        assert float(s) == 2.0 ** e
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("pot", [False, True])
+def test_quantize_dequantize_error_bound(rng, bits, pot):
+    """|x - dq(q(x))| <= scale/2 (round-to-nearest onto a symmetric uniform
+    grid), with calibrated or power-of-two scales; ints stay in range."""
+    for _ in range(10):
+        x = jnp.asarray(rng.normal(size=64) * rng.uniform(0.1, 100),
+                        jnp.float32)
+        _roundtrip_check(x, bits, pot)
+
+
+def test_quantize_symmetric(rng):
+    """Negation symmetry: |q(x)| == |q(-x)| on the symmetric grid."""
+    x = jnp.asarray(rng.normal(size=128), jnp.float32)
+    cfg = QConfig(bits=8)
+    s = compute_scale(x, cfg)
+    np.testing.assert_array_equal(
+        np.abs(np.asarray(quantize(x, s, cfg), np.int32)),
+        np.abs(np.asarray(quantize(-x, s, cfg), np.int32)))
+
+
+@needs_hypothesis
+def test_quantize_dequantize_error_bound_hypothesis():
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.floats(-100.0, 100.0, allow_nan=False), min_size=1,
+                    max_size=64),
+           st.sampled_from([2, 4, 8]), st.booleans())
+    def prop(vals, bits, pot):
+        _roundtrip_check(jnp.asarray(vals, jnp.float32), bits, pot)
+
+    prop()
+
+
+def test_pot_scale_is_power_of_two_and_covers(rng):
+    """pot_round_scale returns the smallest covering 2^e; scale_exponent
+    recovers the exact integer exponent."""
+    for s0 in [*np.exp(rng.uniform(-14, 14, size=20)), 0.5, 1.0, 2.0, 4096.0]:
+        s = float(pot_round_scale(jnp.float32(s0)))
+        e = int(scale_exponent(jnp.float32(s)))
+        assert s == 2.0 ** e
+        assert s >= s0 * (1 - 1e-6)          # covers
+        assert s < s0 * 2 * (1 + 1e-6)       # smallest such power
+
+
+def test_qrange_and_fake_quant_identity_at_high_bits():
+    assert qrange(8) == (-128, 127)
+    assert qrange(8, signed=False) == (0, 255)
+    x = jnp.linspace(-1, 1, 17)
+    np.testing.assert_array_equal(np.asarray(fake_quant(x, QConfig(bits=32))),
+                                  np.asarray(x))
+
+
+# ---------------------------------------------------------------------------
+# Packed-KV substrate (power-of-two exponents, int4 packing)
+# ---------------------------------------------------------------------------
+
+def _kv_roundtrip_check(x, bits):
+    payload, e = kvq.store_block(x, bits)
+    back = kvq.load_block(payload, e, bits)
+    step = np.asarray(jnp.exp2(e.astype(jnp.float32)), np.float64).max()
+    err = float(jnp.max(jnp.abs(back - x)))
+    # round-to-nearest within the grid, + at most one clipped step at the
+    # very top of the range (pot_exponent's documented edge)
+    assert err <= step * 1.5 + 1e-6
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_kv_pot_roundtrip_error_bound(rng, bits):
+    """store_block/load_block round-trip error stays within the block's
+    power-of-two grid step (half a step + the documented one-step clip)."""
+    for scale in (1e-3, 1.0, 1e3):
+        x = jnp.asarray(rng.normal(size=(16, 4, 8)) * scale, jnp.float32)
+        _kv_roundtrip_check(x, bits)
+
+
+@needs_hypothesis
+def test_kv_pot_roundtrip_hypothesis():
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.floats(-1e4, 1e4, allow_nan=False), min_size=4,
+                    max_size=64),
+           st.sampled_from([8, 4]))
+    def prop(vals, bits):
+        x = jnp.asarray(vals + [1.0], jnp.float32).reshape(-1, 1, 1)
+        x = jnp.broadcast_to(x, (x.shape[0], 1, 2))  # even head_dim for int4
+        _kv_roundtrip_check(x, bits)
+
+    prop()
+
+
+def test_int4_pack_unpack_exact(rng):
+    q = jnp.asarray(rng.integers(-7, 8, size=(5, 3, 2, 8)), jnp.int8)
+    packed = kvq.pack_int4(q)
+    assert packed.shape == (5, 3, 2, 4)
+    np.testing.assert_array_equal(np.asarray(kvq.unpack_int4(packed)),
+                                  np.asarray(q))
+
+
+def test_pot_exponent_integer_exact():
+    """frexp-based exponents: exact powers of two map to exact grids."""
+    amax = jnp.asarray([1.0, 2.0, 0.5, 127.0, 0.0])
+    e = np.asarray(kvq.pot_exponent(amax, 8), np.int32)
+    # amax=1.0: frexp -> 2^1, e = 1 - 7 = -6 (the covering grid: 127 * 2^-6)
+    assert e[0] == -6 and e[1] == -5 and e[2] == -7
+    assert e[3] == 0                       # 127 stored exactly at scale 1
+    assert e[4] == -7                      # zero block: f=0 -> -(bits-1)
+    # dequant of the stored grid is exact
+    q = kvq.quantize_pot(jnp.asarray([0.5]), jnp.asarray([-7], jnp.int8), 8)
+    assert float(kvq.dequantize_pot(q, jnp.asarray([-7], jnp.int8))[0]) == 0.5
+
+
+def test_exp2i_exact_powers():
+    """exp2i constructs bit-exact powers of two where jnp.exp2 may not."""
+    e = jnp.arange(-126, 127, dtype=jnp.int32)
+    got = np.asarray(kvq.exp2i(e), np.float64)
+    np.testing.assert_array_equal(got, 2.0 ** np.arange(-126, 127))
+
+
+def test_requant_shift_matches_regrid():
+    """q * 2^e re-expressed at e + delta equals round(q / 2^delta)."""
+    q = jnp.asarray([-100, -3, -1, 0, 1, 3, 100], jnp.int8)
+    out = np.asarray(kvq.requant_shift(q, jnp.asarray(2), 8), np.int32)
+    want = np.floor(np.asarray(q, np.float64) / 4 + 0.5).astype(np.int32)
+    np.testing.assert_array_equal(out, want)
+    # delta=0 is the identity
+    np.testing.assert_array_equal(
+        np.asarray(kvq.requant_shift(q, jnp.asarray(0), 8)), np.asarray(q))
+
+
+def test_packed_head_dim_validation():
+    assert kvq.packed_head_dim(8, 4) == 4
+    assert kvq.packed_head_dim(8, 8) == 8
+    with pytest.raises(ValueError, match="odd"):
+        kvq.packed_head_dim(7, 4)
+    with pytest.raises(ValueError, match="kv_bits"):
+        kvq.validate_kv_bits(2)
+
+
+# ---------------------------------------------------------------------------
+# PrecisionPolicy rules
+# ---------------------------------------------------------------------------
+
+def test_paper_mixed_scheme():
+    """The paper's Table I protocol: 8/4/2/4 over the stages, 8-bit FC."""
+    assert PAPER_MIXED.bits_for("stage0.conv1") == 8
+    assert PAPER_MIXED.bits_for("stage1.conv2") == 4
+    assert PAPER_MIXED.bits_for("stage2.conv1") == 2
+    assert PAPER_MIXED.bits_for("stage3.conv1") == 4
+    assert PAPER_MIXED.bits_for("fc") == 8
+    assert PAPER_MIXED.bits_for("classifier") == 8
+    assert PAPER_MIXED.qconfig_for("stage2.conv1").bits == 2
+
+
+def test_policy_rule_order_first_match_wins():
+    p = PrecisionPolicy(rules=(("attn", 4), ("attn.out", 8)), default_bits=16)
+    assert p.bits_for("layer0.attn.out") == 4      # first rule wins
+    assert p.bits_for("layer0.mlp") == 16
+
+
+def test_kv_rules_and_defaults():
+    p = PrecisionPolicy(kv_rules=(("group0", 8), (r"group1\.l0", 4)),
+                        kv_default_bits=16)
+    assert p.kv_bits_for("group0.l0") == 8
+    assert p.kv_bits_for("group1.l0") == 4
+    assert p.kv_bits_for("group1.l1") == 16
+    assert p.kv_quantized
+    assert not unified(8).kv_quantized            # weights-only policy
+    assert kv_policy(8).kv_bits_for("group0.l0") == 8
+    assert kv_policy(16).kv_quantized is False
+    assert stage_policy([8, 4]).kv_default_bits == 16
+
+
+def test_kv_rules_validate_bits():
+    with pytest.raises(ValueError, match="kv_bits"):
+        PrecisionPolicy(kv_default_bits=2)
+    with pytest.raises(ValueError, match="kv_bits"):
+        PrecisionPolicy(kv_rules=(("group0", 12),))
+    p = kv_policy(8).with_kv(4)
+    assert p.kv_default_bits == 4
+    assert dataclasses.replace(p, kv_default_bits=16).kv_quantized is False
