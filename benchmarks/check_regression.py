@@ -8,7 +8,10 @@ The baseline's ``metrics`` map dotted report paths to floor values: a
 measured value below ``floor * (1 - max_regression)`` fails the run.
 ``ceilings`` are the latency/cost mirror image: a measured value above
 ``ceiling * (1 + max_regression)`` fails (TTFT percentiles, prefill tokens
-per request — quantities where growth is the regression). Floors are
+per request — quantities where growth is the regression). ``hard_floors``
+gate as-is — NOT scaled by ``--max-regression`` — for quantities that are
+already ratios with their noise cancelled in-process (the telemetry
+on/off overhead ratio: 0.95 means 0.95, not 0.95 minus slack). Floors are
 deliberately conservative for shared CI runners (absolute tokens/sec varies
 with host load), while the decode-scaling speedup, the prefix-caching TTFT
 improvement and the prefill-tokens-avoided fraction are same-process ratios
@@ -68,6 +71,16 @@ def main() -> int:
               f"gate {gate:.3f})")
         if got > gate:
             failures.append(f"{path}: {got:.3f} > gate {gate:.3f}")
+    for path, floor in baseline.get("hard_floors", {}).items():
+        got = lookup(report, path)
+        if got is None:
+            failures.append(f"{path}: missing from {args.bench}")
+            continue
+        status = "OK " if got >= floor else "FAIL"
+        print(f"{status} {path}: {got:.3f} (hard floor {floor:.3f}, "
+              "no slack)")
+        if got < floor:
+            failures.append(f"{path}: {got:.3f} < hard floor {floor:.3f}")
     for path, want in baseline.get("exact", {}).items():
         got = lookup(report, path)
         ok = got == want

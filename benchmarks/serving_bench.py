@@ -48,6 +48,7 @@ from repro.models import lm
 from repro.models.config import GRAUConfig
 from repro.serve.engine import EngineConfig, Request, ServeEngine
 from repro.serve.sampling import SamplingParams
+from repro.serve.telemetry import percentiles
 
 
 def synth_trace(n: int, mean_interarrival_ticks: float, vocab: int,
@@ -110,14 +111,17 @@ def run_trace(engine: ServeEngine, trace, sampling: SamplingParams,
     ttfts = [rs.ttft
              for rs in list(engine.scheduler.finished)[n_finished_before:]
              if rs.ttft is not None]
+    # the shared exact implementation (serve/telemetry.py) — the scheduler's
+    # live snapshot uses the histogram estimate; reports use this
+    p50, p90, p99 = percentiles(ttfts, (50, 90, 99))
     return {
         "wall_s": wall,
         "generated_tokens": gen_tokens,
         "tokens_per_s": gen_tokens / wall if wall > 0 else 0.0,
         "ttft_mean_s": float(np.mean(ttfts)),
-        "ttft_p50_s": float(np.percentile(ttfts, 50)),
-        "ttft_p90_s": float(np.percentile(ttfts, 90)),
-        "ttft_p99_s": float(np.percentile(ttfts, 99)),
+        "ttft_p50_s": p50,
+        "ttft_p90_s": p90,
+        "ttft_p99_s": p99,
         "ticks": ticks,
         "compiles": engine.compile_count(),
         "backend": "paged" if engine.paged else "dense",
@@ -361,6 +365,72 @@ def bench_kv_quant(cfg, params, args):
     return out
 
 
+def bench_telemetry(cfg, params, args):
+    """Telemetry overhead: one identical trace through telemetry-on vs -off
+    engines (paged backend with prefix cache on, so every publish site —
+    spans, counters, gauges, tick phases — is actually exercised).
+
+    The contract this section gates: telemetry is host-side bookkeeping
+    only, so turning it on must (a) leave token streams bit-identical,
+    (b) leave the warm compile count unchanged and cause zero recompiles
+    (no new jit traces), and (c) cost <= 5% decode throughput —
+    `overhead_ratio` (on/off, medians over `--telemetry-reps`) is the
+    check_regression hard floor at 0.95. The section also smoke-exports
+    both surfaces: Prometheus text size and (with --trace-out) the
+    lifecycle-trace JSONL artifact CI uploads.
+    """
+    trace = synth_trace(args.telemetry_requests, 1.0, cfg.vocab_size,
+                        max(args.max_new, 8), args.seed)
+    base = dict(slots=max(args.slots, 4), max_seq=128, page_size=16,
+                prefix_cache=True, prefill_chunk=32, seed=args.seed)
+    out = {"requests": args.telemetry_requests, "slots": base["slots"],
+           "reps": args.telemetry_reps}
+    tokens = {}
+    for name, on in (("telemetry_off", False), ("telemetry_on", True)):
+        reps = []
+        for _ in range(args.telemetry_reps):
+            engine = ServeEngine(cfg, params,
+                                 EngineConfig(telemetry=on, **base))
+            warm = engine.warmup()
+            stats = run_trace(engine, trace, SamplingParams())
+            stats["warm_compiles"] = warm
+            stats["recompiles_after_warmup"] = (engine.compile_count()
+                                                - warm)
+            reps.append(stats)
+        tokens[name] = {rs.rid: tuple(rs.out_tokens)
+                        for rs in engine.scheduler.finished}
+        med = sorted(reps, key=lambda s: s["tokens_per_s"])[len(reps) // 2]
+        med["tokens_per_s_reps"] = [r["tokens_per_s"] for r in reps]
+        out[name] = med
+        print(f"telemetry/{name}: {med['tokens_per_s']:.1f} tok/s "
+              f"[warm={med['warm_compiles']}, "
+              f"{med['recompiles_after_warmup']} recompiles]", flush=True)
+    out["tokens_bit_identical"] = (tokens["telemetry_on"]
+                                   == tokens["telemetry_off"])
+    out["warm_compiles_equal"] = (out["telemetry_on"]["warm_compiles"]
+                                  == out["telemetry_off"]["warm_compiles"])
+    out["overhead_ratio"] = (out["telemetry_on"]["tokens_per_s"]
+                             / max(out["telemetry_off"]["tokens_per_s"],
+                                   1e-9))
+    # export-surface smoke on the last telemetry-on engine: a scrape and a
+    # trace dump must both be non-trivially populated after real traffic
+    prom = engine.prometheus_text()
+    out["prometheus_bytes"] = len(prom)
+    out["prometheus_families"] = sum(
+        1 for line in prom.splitlines() if line.startswith("# TYPE"))
+    snap = engine.registry.snapshot()
+    out["decode_tokens_counted"] = snap["serve_decode_tokens_total"]
+    out["pool_blocks_leaked"] = snap["serve_kv_pool_blocks_leaked"]
+    if args.trace_out:
+        out["trace_events_written"] = engine.export_trace(args.trace_out)
+        print(f"telemetry: wrote {out['trace_events_written']} trace events "
+              f"to {args.trace_out}", flush=True)
+    print(f"telemetry: overhead_ratio={out['overhead_ratio']:.3f} "
+          f"(on/off tok/s), bit-identical={out['tokens_bit_identical']}, "
+          f"warm-compiles-equal={out['warm_compiles_equal']}", flush=True)
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-3b")
@@ -386,9 +456,16 @@ def main() -> None:
                     help="requests in the quantized-KV (kv_quant) section")
     ap.add_argument("--kv-reps", type=int, default=3,
                     help="repetitions per kv_quant variant (median)")
+    ap.add_argument("--telemetry-requests", type=int, default=24,
+                    help="requests in the telemetry-overhead section")
+    ap.add_argument("--telemetry-reps", type=int, default=3,
+                    help="repetitions per telemetry variant (median)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the telemetry section's lifecycle-trace "
+                         "JSONL here (the CI artifact)")
     ap.add_argument("--sections", default="all",
-                    help="comma list of sections to run: "
-                         "runs,decode_scaling,prefix,kv_quant (default all)")
+                    help="comma list of sections to run: runs,decode_scaling,"
+                         "prefix,kv_quant,telemetry (default all)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke sizes: fewer requests, smaller capacity")
@@ -408,10 +485,11 @@ def main() -> None:
         args.kv_requests = 12
         args.kv_reps = 2
     for name in ("requests", "scaling_requests", "scaling_reps",
-                 "prefix_requests", "prefix_reps", "kv_requests", "kv_reps"):
+                 "prefix_requests", "prefix_reps", "kv_requests", "kv_reps",
+                 "telemetry_requests", "telemetry_reps"):
         if getattr(args, name) < 1:
             ap.error(f"--{name.replace('_', '-')} must be >= 1")
-    sections = (("runs", "decode_scaling", "prefix", "kv_quant")
+    sections = (("runs", "decode_scaling", "prefix", "kv_quant", "telemetry")
                 if args.sections == "all"
                 else tuple(s.strip() for s in args.sections.split(",") if s))
 
@@ -468,6 +546,8 @@ def main() -> None:
                                                         args)
     if "kv_quant" in sections:
         report["kv_quant"] = bench_kv_quant(base_cfg, params, args)
+    if "telemetry" in sections:
+        report["telemetry"] = bench_telemetry(base_cfg, params, args)
 
     if mesh_shape:
         # sharded vs single-device: same float/greedy trace, so the delta is

@@ -54,6 +54,16 @@ def main() -> None:
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-telemetry", action="store_true",
+                    help="disable the metrics registry + lifecycle traces "
+                         "(telemetry is on by default; overhead is gated "
+                         "<= 5%% by benchmarks/serving_bench.py)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve Prometheus /metrics (and /metrics.json) on "
+                         "this port while running; 0 picks an ephemeral port")
+    ap.add_argument("--trace-out", default=None,
+                    help="write per-request lifecycle traces as JSONL here "
+                         "on exit (schema: docs/observability.md)")
     args = ap.parse_args()
 
     from repro.launch.mesh import ensure_host_devices, parse_mesh_spec
@@ -73,6 +83,11 @@ def main() -> None:
     cfg = get_config(args.arch, smoke=True)
     params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0), dtype=jax.numpy.float32)
     paged = None if args.backend == "auto" else (args.backend == "paged")
+    telemetry = not args.no_telemetry
+    if args.metrics_port is not None and not telemetry:
+        ap.error("--metrics-port requires telemetry (drop --no-telemetry)")
+    if args.trace_out is not None and not telemetry:
+        ap.error("--trace-out requires telemetry (drop --no-telemetry)")
     engine = ServeEngine(
         cfg, params,
         EngineConfig(slots=args.slots, max_seq=args.max_seq, paged=paged,
@@ -81,8 +96,16 @@ def main() -> None:
                      prefix_cache=args.prefix_cache,
                      prefill_chunk=args.prefill_chunk,
                      prefill_token_budget=args.prefill_budget,
+                     telemetry=telemetry,
                      seed=args.seed),
         mesh=mesh)
+
+    server = None
+    if args.metrics_port is not None:
+        from repro.serve.telemetry import start_metrics_server
+        server = start_metrics_server(engine.registry, args.metrics_port)
+        print(f"metrics: http://{server.server_address[0]}:"
+              f"{server.server_address[1]}/metrics")
 
     if engine.paged:
         # startup memory table: the paper's LUT-cost table's memory sibling —
@@ -130,6 +153,11 @@ def main() -> None:
           f"cached_prefix_tokens={m['cached_prefix_tokens']} "
           f"evictions={m['evictions']}")
     print(json.dumps(m, indent=2, default=str))
+    if args.trace_out:
+        n = engine.export_trace(args.trace_out)
+        print(f"wrote {n} trace events to {args.trace_out}")
+    if server is not None:
+        server.shutdown()
 
 
 if __name__ == "__main__":

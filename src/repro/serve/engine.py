@@ -86,6 +86,8 @@ from repro.nn.attention import (AttnQuant, CrossKV, KVCache, MLACache,
 from repro.nn.mamba2 import SSMState
 from repro.serve import kv_cache as kvc
 from repro.serve import sampling as samp_lib
+from repro.serve import telemetry as tel
+from repro.serve import trace as trace_lib
 from repro.serve.sampling import SamplingParams
 from repro.serve.scheduler import RequestState, Scheduler
 
@@ -136,6 +138,12 @@ class EngineConfig:
     max_prefills_per_tick: Optional[int] = None
     max_pending_ticks: int = 32   # force a host drain after this many
     # undelivered decode ticks (bounds ghost decode past an unseen EOS)
+    telemetry: bool = True        # metrics registry + lifecycle traces +
+    # tick-phase timing. Entirely host-side: enabling it adds zero jit
+    # traces and zero device syncs (benchmarks/serving_bench.py gates the
+    # tokens/sec overhead at <= 5%); disabling compiles every publish site
+    # down to a dead branch / no-op recorder
+    trace_capacity: int = 8192    # lifecycle-trace ring-buffer bound
     seed: int = 0
 
 
@@ -150,12 +158,16 @@ class _CountingJit:
     an evicted entry leaves unchanged.
     """
 
-    def __init__(self, fn, name: str, donate_argnums=()):
+    def __init__(self, fn, name: str, donate_argnums=(), on_trace=None):
         self.name = name
         self._traces = 0
 
         def counted(*args):
             self._traces += 1
+            if on_trace is not None:
+                # host-side callback, runs only while tracing (never in the
+                # compiled program): publishes the trace event to telemetry
+                on_trace()
             return fn(*args)
 
         self._jit = jax.jit(counted, donate_argnums=donate_argnums)
@@ -201,6 +213,24 @@ class ServeEngine:
         self.dtype = dtype
         self.mesh = mesh
         self._act = lm.make_act(cfg)
+
+        # telemetry first, so every component below can publish into it.
+        # All of it is host-side bookkeeping: registering metrics and
+        # recording spans never enters a traced function, so the telemetry
+        # flag cannot change shapes, schedules, trace counts, or token
+        # streams — only whether the ledger is written.
+        self.telemetry_enabled = bool(ecfg.telemetry)
+        if self.telemetry_enabled:
+            self.registry: Optional[tel.MetricsRegistry] = \
+                tel.MetricsRegistry()
+            self._tel: Optional[tel.ServingMetrics] = \
+                tel.ServingMetrics(self.registry)
+            self.trace = trace_lib.TraceRecorder(ecfg.trace_capacity)
+        else:
+            self.registry = None
+            self._tel = None
+            self.trace = trace_lib.NullTraceRecorder()
+        self.trace.attach_owner(self)
         self._has_ssm = any(spec.kind == "mamba"
                             for period, _ in cfg.groups for spec in period)
         self.bucketed = not self._has_ssm
@@ -328,6 +358,13 @@ class ServeEngine:
             else:
                 self.caches = shard_lib.place_dense_caches(self.caches, cfg,
                                                            mesh, ecfg.slots)
+            if self._tel is not None:
+                shard_lib.publish_mesh_metrics(self._tel, mesh)
+        elif self._tel is not None:
+            # unsharded: every axis is size 1 (metrics are engine-level
+            # aggregates either way — see sharding.publish_mesh_metrics)
+            self._tel.mesh_devices.set(1.0, axis="data")
+            self._tel.mesh_devices.set(1.0, axis="model")
 
         if ecfg.prefill_buckets is not None:
             self.buckets = tuple(sorted(ecfg.prefill_buckets))
@@ -367,7 +404,8 @@ class ServeEngine:
         self.scheduler = Scheduler(
             ecfg.policy, ecfg.max_prefills_per_tick,
             prefill_token_budget=(self._prefill_budget if self.paged
-                                  else None))
+                                  else None),
+            metrics=self._tel)
         self.stats: Dict[str, Any] = {"ticks": 0, "decode_tokens": 0,
                                       "prefill_tokens": 0,
                                       "cached_prefix_tokens": 0}
@@ -386,20 +424,60 @@ class ServeEngine:
             decode_fn = shard_lib.with_shard_ctx(decode_fn, mesh, cfg)
             prefill_fn = shard_lib.with_shard_ctx(prefill_fn, mesh, cfg)
             chunk_fn = shard_lib.with_shard_ctx(chunk_fn, mesh, cfg)
+        def on_trace(name):
+            # per-fn compile events into the registry; _CountingJit._traces
+            # stays the authoritative count for compile_count()
+            if self._tel is None:
+                return None
+            return self._tel.jit_traces.labels(fn=name).inc
+
         self._decode = _CountingJit(decode_fn, "decode",
-                                    donate_argnums=(1, 2))
+                                    donate_argnums=(1, 2),
+                                    on_trace=on_trace("decode"))
         self._prefill = _CountingJit(prefill_fn, "prefill",
-                                     donate_argnums=(3,))
+                                     donate_argnums=(3,),
+                                     on_trace=on_trace("prefill"))
         self._reset = _CountingJit(reset_fn, "reset_slot",
-                                   donate_argnums=(0,))
+                                   donate_argnums=(0,),
+                                   on_trace=on_trace("reset_slot"))
         # chunked-prefill chunk forward + the copy-on-write block copy
         # (partial-block prefix reuse); paged engines only
         self._chunk = _CountingJit(chunk_fn, "prefill_chunk",
-                                   donate_argnums=(2,))
+                                   donate_argnums=(2,),
+                                   on_trace=on_trace("prefill_chunk"))
         self._copy = _CountingJit(self._copy_fn, "cow_copy",
-                                  donate_argnums=(0,))
+                                  donate_argnums=(0,),
+                                  on_trace=on_trace("cow_copy"))
         self._jits = (self._decode, self._prefill, self._reset, self._chunk,
                       self._copy)
+
+        # static metric entries are computed once; metrics() is then a cheap
+        # merge of running aggregates — no per-call recomputation (and no
+        # side effects), so callers may poll it freely
+        self._static_metrics: Dict[str, Any] = {
+            "backend": "paged" if self.paged else "dense",
+            "telemetry": self.telemetry_enabled,
+        }
+        if self.paged:
+            bits_tree = kvc.kv_bits_by_layer(self.cfg, self.precision)
+            bits_flat = sorted({b for grp in bits_tree for b in grp})
+            self._static_metrics.update({
+                "paged_impl": self.paged_impl,
+                "kv_bits": (bits_flat[0] if len(bits_flat) == 1
+                            else list(bits_flat)),
+                "kv_quantized": self._kv_quant,
+                "decode_buckets": list(self.decode_buckets),
+                "total_blocks": self.allocator.num_blocks,
+                "prefill_chunk": self.prefill_chunk,
+                "prefill_token_budget": self._prefill_budget,
+                "prefix_cache": self.radix is not None,
+            })
+        if mesh is not None:
+            from repro.serve import sharding as shard_lib
+            self._static_metrics["mesh"] = shard_lib.mesh_summary(mesh)
+        if self._tel is not None and self.paged:
+            self._tel.pool_blocks_total.set(self.allocator.num_blocks)
+        self._publish_gauges()
 
     # --- jitted bodies ---------------------------------------------------
 
@@ -523,6 +601,10 @@ class ServeEngine:
         req.out_tokens = rs.out_tokens          # live alias
         self._requests[req.rid] = req
         self.scheduler.submit(rs, self.stats["ticks"], time.perf_counter())
+        self.trace.record(req.rid, "submit", prompt_len=plen,
+                          max_new_tokens=int(req.max_new_tokens))
+        self.trace.record(req.rid, "queued",
+                          queue_depth=len(self.scheduler.waiting))
         return req.rid
 
     def poll(self) -> List[Request]:
@@ -634,6 +716,12 @@ class ServeEngine:
         self.stats["prefill_tokens"] += ctx
         rs.computed_prefill_tokens = ctx
         rs.prefill_pos = rs.prefill_ctx = ctx
+        self.trace.record(rs.rid, "admit", slot=slot,
+                          cached_prefix_tokens=0, suffix_tokens=ctx,
+                          blocks_reserved=0)
+        if self._tel is not None:
+            self._tel.requests_admitted.inc()
+            self._tel.prefill_computed.inc(ctx)
         self._activate(slot, rs)
         return True
 
@@ -691,6 +779,14 @@ class ServeEngine:
         rs.match_memo = None
         rs.cached_prefix_tokens = cached_tokens
         self.stats["cached_prefix_tokens"] += cached_tokens
+        self.trace.record(rs.rid, "admit", slot=slot,
+                          cached_prefix_tokens=cached_tokens,
+                          suffix_tokens=ctx - cached_tokens,
+                          blocks_reserved=total)
+        if self._tel is not None:
+            self._tel.requests_admitted.inc()
+            if cached_tokens:
+                self._tel.prefill_cached.inc(cached_tokens)
         # incremental-publish cursor: suffix chunks extend the trie from the
         # end of the matched chain instead of re-walking from the root
         rs.published_blocks = len(cached)
@@ -727,6 +823,7 @@ class ServeEngine:
                 int(rs.rid) & 0x7FFFFFFF),
             sample_step=st.sample_step.at[slot].set(0),
         )
+        self.trace.record(rs.rid, "activate", slot=slot, context_tokens=ctx)
 
     def _run_chunk(self, rs: RequestState) -> None:
         p0 = rs.pending_chunks.pop(0)
@@ -743,6 +840,10 @@ class ServeEngine:
         rs.prefill_pos = p0 + C
         rs.computed_prefill_tokens += n
         self.stats["prefill_tokens"] += n
+        self.trace.record(rs.rid, "prefill_chunk", p0=p0, tokens=n,
+                          kind="computed")
+        if self._tel is not None:
+            self._tel.prefill_computed.inc(n)
         if self.radix is not None:
             # publish the newly completed full blocks immediately (not at
             # activation): a same-prefix request admitted one tick later can
@@ -809,6 +910,11 @@ class ServeEngine:
     def _retire(self, slot: int, rs: RequestState, reason: str,
                 now: float, tick: int) -> None:
         self.scheduler.retire(rs, tick, now, reason)
+        decode_s = (now - rs.first_token_time
+                    if rs.first_token_time is not None else 0.0)
+        self.trace.record(rs.rid, "finish", reason=reason,
+                          tokens=len(rs.out_tokens), decode_s=decode_s,
+                          tpot_s=rs.tpot or 0.0)
         self.slot_req[slot] = None
         self._host_len[slot] = 0
         if self.paged:
@@ -842,9 +948,17 @@ class ServeEngine:
         slots advanced. Sampled tokens and termination flags stay on device
         until the next drain (poll(), admission pressure, or the pending
         cap) — the hot loop never blocks on a host sync per token."""
+        # tick-phase timing brackets host code the tick already runs —
+        # perf_counter reads at section boundaries, no block_until_ready, no
+        # extra device round trips. The device-step wait itself is observed
+        # in _drain, at the host sync that already exists there.
+        t = self._tel
+        t0 = time.perf_counter() if t is not None else 0.0
         if self.scheduler.waiting:
             # admission decisions need an up-to-date view of free slots
             self._drain()
+            if t is not None:
+                t0 = time.perf_counter()   # drain timed itself; restart
             free = self.slot_req.count(None)
             if free:
                 not_admitted = [
@@ -863,6 +977,9 @@ class ServeEngine:
 
         active = [s for s, r in enumerate(self.slot_req)
                   if r is not None and not r.pending_chunks]
+        if t is not None:
+            t1 = time.perf_counter()
+            t.phase_schedule.observe(t1 - t0)
         if not active:
             return 0
 
@@ -875,6 +992,11 @@ class ServeEngine:
                                          nxt, done))
         self._host_len[active] += 1
         self.stats["ticks"] += 1
+        if t is not None:
+            # dispatch = host cost of enqueueing the async decode jit; the
+            # device's own execution time surfaces as _drain's first sync
+            t.phase_dispatch.observe(time.perf_counter() - t1)
+            t.ticks.inc()
         if len(self._pending) >= self.ecfg.max_pending_ticks:
             self._drain()
         return len(active)
@@ -888,10 +1010,20 @@ class ServeEngine:
         if not self._pending:
             return
         pending, self._pending = self._pending, []
+        t = self._tel
+        t_start = time.perf_counter() if t is not None else 0.0
+        sync_s = 0.0          # time blocked in the np.asarray host syncs —
+        # the one place the engine already waits on the device, so the
+        # device-step phase is measured without adding any sync of its own
+        delivered = 0
         for rec in pending:
+            if t is not None:
+                s0 = time.perf_counter()
             toks = np.asarray(rec.tokens)
             done = np.asarray(rec.done)
             now = time.perf_counter()
+            if t is not None:
+                sync_s += now - s0
             for slot in rec.slots:
                 rs = self.slot_req[slot]
                 if rs is None:
@@ -902,11 +1034,57 @@ class ServeEngine:
                 rs.out_tokens.append(tok)
                 if rs.first_token_time is None:
                     rs.first_token_time = now
+                    self.trace.record(rs.rid, "first_token",
+                                      ttft_s=now - rs.submit_time)
                 self.stats["decode_tokens"] += 1
+                delivered += 1
                 if done[slot]:
                     reason = ("eos" if tok == self.ecfg.eos_id
                               else "max_tokens")
                     self._retire(slot, rs, reason, now, rec.tick)
+        if t is not None:
+            if delivered:
+                t.decode_tokens.inc(delivered)
+            t.phase_device_step.observe(sync_s)
+            t.phase_drain.observe(
+                max(0.0, time.perf_counter() - t_start - sync_s))
+            self._publish_gauges()
+
+    def _publish_gauges(self) -> None:
+        """Refresh point-in-time gauges (slot/pool occupancy, sharing,
+        refcount leaks, radix size) and mirror the prefix-cache lifetime
+        counters into the registry. Called at drain boundaries — the same
+        cadence slots and blocks actually change at — never per token.
+        Pure host arithmetic over the allocator/radix bookkeeping."""
+        t = self._tel
+        if t is None:
+            return
+        t.slots_active.set(sum(r is not None for r in self.slot_req))
+        if not self.paged:
+            return
+        alloc = self.allocator
+        t.pool_blocks_free.set(alloc.free_blocks)
+        t.pool_blocks_live.set(alloc.live_blocks)
+        t.pool_blocks_shared.set(alloc.shared_blocks)
+        # leak detection: every live block must be reachable from a slot's
+        # reservation (suffix blocks + pinned cached prefix) or from a radix
+        # node (cache-owned reference). A block nobody can account for means
+        # a refcount was taken and never released.
+        reachable = set()
+        for rs in self.slot_req:
+            if rs is not None:
+                reachable.update(rs.blocks)
+                reachable.update(rs.cached_blocks)
+        if self.radix is not None:
+            reachable.update(self.radix.block_ids())
+            t.radix_nodes.set(self.radix.num_nodes())
+            # the radix cache keeps its own lifetime counts; mirror them
+            # (monotone, so set == sync) instead of double-counting events
+            t.prefix_hits.set(self.radix.hits)
+            t.prefix_misses.set(self.radix.misses)
+            t.prefix_evictions.set(self.radix.evictions)
+        leaked = [b for b in alloc.live_block_ids() if b not in reachable]
+        t.pool_blocks_leaked.set(len(leaked))
 
     # --- warmup -----------------------------------------------------------
 
@@ -1002,11 +1180,19 @@ class ServeEngine:
                 "gather_bytes": t.bytes_by_op.get("gather", 0.0)}
 
     def metrics(self) -> Dict[str, Any]:
+        """Snapshot of the engine's serving metrics (merged over the
+        scheduler's lifecycle aggregates). Side-effect-free and cheap: the
+        config-derived entries were precomputed at construction
+        (`_static_metrics`), the scheduler snapshot is O(1) histogram reads,
+        and the dynamic entries below are dict lookups over host
+        bookkeeping — no device sync, no jit, no per-request walk. The key
+        set is a stable schema (docs/observability.md); keys are added, not
+        renamed."""
         m = dict(self.scheduler.metrics())
         m.update(self.stats)
+        m.update(self._static_metrics)
         m["compiles"] = self.compile_count()
         m["compiles_by_fn"] = {j.name: j.compiles for j in self._jits}
-        m["backend"] = "paged" if self.paged else "dense"
         # prefix-cache counters are always present (zero when disabled) so
         # dashboards/launchers can report them unconditionally
         cached = self.stats["cached_prefix_tokens"]
@@ -1015,23 +1201,22 @@ class ServeEngine:
         m["prefix_hit_rate"] = cached / max(cached + computed, 1)
         m["evictions"] = self.radix.evictions if self.radix else 0
         if self.paged:
-            m["paged_impl"] = self.paged_impl
-            bits_tree = kvc.kv_bits_by_layer(self.cfg, self.precision)
-            bits_flat = sorted({b for grp in bits_tree for b in grp})
-            m["kv_bits"] = (bits_flat[0] if len(bits_flat) == 1
-                            else list(bits_flat))
-            m["kv_quantized"] = self._kv_quant
-            m["decode_buckets"] = list(self.decode_buckets)
             m["free_blocks"] = self.allocator.free_blocks
-            m["total_blocks"] = self.allocator.num_blocks
-            m["prefill_chunk"] = self.prefill_chunk
-            m["prefill_token_budget"] = self._prefill_budget
-            m["prefix_cache"] = self.radix is not None
             if self.radix is not None:
                 m["prefix_cache_nodes"] = self.radix.num_nodes()
                 m["prefix_cache_hits"] = self.radix.hits
                 m["prefix_cache_misses"] = self.radix.misses
-        if self.mesh is not None:
-            from repro.serve import sharding as shard_lib
-            m["mesh"] = shard_lib.mesh_summary(self.mesh)
         return m
+
+    def prometheus_text(self) -> str:
+        """Prometheus text exposition of the metrics registry (empty string
+        with telemetry off — scrapers see a valid, if blank, page)."""
+        if self.registry is None:
+            return ""
+        self._publish_gauges()      # gauges current as of the scrape
+        return self.registry.to_prometheus_text()
+
+    def export_trace(self, path) -> int:
+        """Write the lifecycle-trace ring buffer as JSONL (one event per
+        line, schema in serve/trace.py); returns the number of lines."""
+        return self.trace.export_jsonl(path)

@@ -148,6 +148,18 @@ class BlockAllocator:
     def live_blocks(self) -> int:
         return len(self._refs)
 
+    @property
+    def shared_blocks(self) -> int:
+        """Live blocks held by more than one owner (prefix sharing)."""
+        return sum(1 for r in self._refs.values() if r > 1)
+
+    def live_block_ids(self) -> List[int]:
+        """Snapshot of currently allocated block ids — the telemetry
+        reachability check compares this against what slots and the radix
+        cache can actually account for (anything left over is a refcount
+        leak)."""
+        return list(self._refs)
+
     def can_alloc(self, n: int) -> bool:
         return n <= len(self._free)
 

@@ -126,6 +126,18 @@ class RadixCache:
             stack.extend(n.children.values())
         return out
 
+    def block_ids(self) -> List[int]:
+        """Pool block ids held by resident nodes — what the telemetry
+        refcount-leak check can account to the cache (one cache-owned
+        reference per node)."""
+        out, stack = [], [self.root]
+        while stack:
+            n = stack.pop()
+            for c in n.children.values():
+                out.append(c.block)
+                stack.append(c)
+        return out
+
     # --- lookup ----------------------------------------------------------
 
     def match(self, tokens: np.ndarray) -> PrefixMatch:

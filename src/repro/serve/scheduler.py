@@ -18,11 +18,13 @@ Policies
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Callable, Deque, List, Optional
 
 import numpy as np
 
+from repro.serve import telemetry as tel
 from repro.serve.sampling import SamplingParams
 
 POLICIES = ("fcfs", "prefill")
@@ -42,6 +44,7 @@ class RequestState:
     admit_tick: int = -1
     finish_tick: int = -1
     submit_time: float = 0.0
+    admit_time: Optional[float] = None
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
     slot: int = -1
@@ -80,12 +83,23 @@ class RequestState:
             return None
         return self.first_token_time - self.submit_time
 
+    @property
+    def tpot(self) -> Optional[float]:
+        """Mean time per output token after the first (needs >= 2 tokens
+        and a finish time)."""
+        n = len(self.out_tokens)
+        if (self.first_token_time is None or self.finish_time is None
+                or n < 2):
+            return None
+        return (self.finish_time - self.first_token_time) / (n - 1)
+
 
 class Scheduler:
     def __init__(self, policy: str = "fcfs",
                  max_prefills_per_tick: Optional[int] = None,
                  keep_finished: int = 100_000,
-                 prefill_token_budget: Optional[int] = None):
+                 prefill_token_budget: Optional[int] = None,
+                 metrics: Optional[tel.ServingMetrics] = None):
         if policy not in POLICIES:
             raise ValueError(f"policy {policy!r} not in {POLICIES}")
         self.policy = policy
@@ -98,10 +112,30 @@ class Scheduler:
         self.prefill_token_budget = prefill_token_budget
         self.waiting: Deque[RequestState] = deque()
         # bounded lifecycle record: a long-lived engine must not retain every
-        # retired request's prompt/tokens forever. TTFT aggregates below are
-        # exact over the full lifetime; percentiles use this recent window.
+        # retired request's prompt/tokens forever. Aggregates and histograms
+        # below are exact over the full lifetime; this window only feeds
+        # callers that want the raw recent records (benchmarks).
         self.finished: Deque[RequestState] = deque(maxlen=keep_finished)
-        # metrics
+        # metrics: counters are O(1) updates at the lifecycle transitions;
+        # latency distributions go into fixed-bucket histograms (bounded
+        # memory, cheap quantile snapshots). When the engine hands us its
+        # ServingMetrics, the same observations land in the exported
+        # registry; otherwise standalone histograms keep metrics() cheap.
+        self._tel = metrics
+        if metrics is not None:
+            self._ttft_hist = metrics.ttft
+            self._tpot_hist = metrics.tpot
+            self._qwait_hist = metrics.queue_wait
+        else:
+            self._ttft_hist = tel.Histogram(
+                "serve_ttft_seconds", "", (),
+                tel.DEFAULT_LATENCY_BUCKETS).labels()
+            self._tpot_hist = tel.Histogram(
+                "serve_tpot_seconds", "", (),
+                tel.DEFAULT_LATENCY_BUCKETS).labels()
+            self._qwait_hist = tel.Histogram(
+                "serve_queue_wait_seconds", "", (),
+                tel.DEFAULT_LATENCY_BUCKETS).labels()
         self.submitted = 0
         self.admitted = 0
         self.retired = 0
@@ -119,6 +153,9 @@ class Scheduler:
         self.waiting.append(rs)
         self.submitted += 1
         self.max_queue_depth = max(self.max_queue_depth, len(self.waiting))
+        if self._tel is not None:
+            self._tel.requests_submitted.inc()
+            self._tel.queue_depth.set(len(self.waiting))
 
     def pick(self, free_slots: int, tick: int,
              can_admit: Callable[[RequestState], bool]) -> List[RequestState]:
@@ -127,14 +164,21 @@ class Scheduler:
         nothing behind it jumps the queue)."""
         budget = min(free_slots, self.max_prefills_per_tick)
         chosen: List[RequestState] = []
+        now = time.perf_counter()
         while self.waiting and len(chosen) < budget:
             if not can_admit(self.waiting[0]):
                 break
             rs = self.waiting.popleft()
             rs.admit_tick = tick
+            rs.admit_time = now
             self._queue_tick_sum += rs.queue_ticks
             self.admitted += 1
             chosen.append(rs)
+        if self._tel is not None and chosen:
+            # the admitted *counter* is published by the engine once the
+            # reservation actually lands (requeue_front must never have to
+            # walk a monotonic counter backwards)
+            self._tel.queue_depth.set(len(self.waiting))
         return chosen
 
     def requeue_front(self, rs: RequestState) -> None:
@@ -149,7 +193,10 @@ class Scheduler:
             self._queue_tick_sum -= rs.queue_ticks
             self.admitted -= 1
             rs.admit_tick = -1
+            rs.admit_time = None
         self.waiting.appendleft(rs)
+        if self._tel is not None:
+            self._tel.queue_depth.set(len(self.waiting))
 
     def retire(self, rs: RequestState, tick: int, now: float,
                reason: str) -> None:
@@ -160,13 +207,32 @@ class Scheduler:
         if rs.ttft is not None:
             self._ttft_sum += rs.ttft
             self._ttft_n += 1
+            self._ttft_hist.observe(rs.ttft)
+        if rs.tpot is not None:
+            self._tpot_hist.observe(rs.tpot)
+        if rs.admit_time is not None:
+            self._qwait_hist.observe(rs.admit_time - rs.submit_time)
         self._computed_prefill_sum += rs.computed_prefill_tokens
         self._cached_prefix_sum += rs.cached_prefix_tokens
         self.finished.append(rs)
+        if self._tel is not None:
+            (self._tel.retired_eos if reason == "eos"
+             else self._tel.retired_max_tokens).inc()
 
     # --- metrics --------------------------------------------------------
+    def ttft_percentiles(self, qs=(50, 90, 99)) -> List[Optional[float]]:
+        """Exact TTFT percentiles over the retained `finished` window — the
+        shared-helper path benchmarks use; the live metrics() snapshot uses
+        the histogram estimates instead so it stays O(1)."""
+        return tel.percentiles(
+            [rs.ttft for rs in self.finished if rs.ttft is not None], qs)
+
     def metrics(self) -> dict:
-        recent = [rs.ttft for rs in self.finished if rs.ttft is not None]
+        """Snapshot of the lifecycle aggregates. Side-effect-free and O(1):
+        counters are running sums and the latency percentiles come from the
+        fixed-bucket histograms (bucket-interpolated, full lifetime) — no
+        walk over the finished window, no list materialization. The key set
+        is a stable schema (docs/observability.md)."""
         return {
             "policy": self.policy,
             "submitted": self.submitted,
@@ -178,12 +244,13 @@ class Scheduler:
                                  if self.admitted else 0.0),
             "mean_ttft_s": (self._ttft_sum / self._ttft_n
                             if self._ttft_n else None),
-            "p50_ttft_s": (float(np.percentile(recent, 50))
-                           if recent else None),
-            "p90_ttft_s": (float(np.percentile(recent, 90))
-                           if recent else None),
-            "p99_ttft_s": (float(np.percentile(recent, 99))
-                           if recent else None),
+            "p50_ttft_s": self._ttft_hist.quantile(50),
+            "p90_ttft_s": self._ttft_hist.quantile(90),
+            "p99_ttft_s": self._ttft_hist.quantile(99),
+            "p50_tpot_s": self._tpot_hist.quantile(50),
+            "p99_tpot_s": self._tpot_hist.quantile(99),
+            "p50_queue_wait_s": self._qwait_hist.quantile(50),
+            "p99_queue_wait_s": self._qwait_hist.quantile(99),
             "prefill_tokens_per_request": (
                 self._computed_prefill_sum / self.retired
                 if self.retired else 0.0),

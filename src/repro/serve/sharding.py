@@ -41,6 +41,8 @@ Everything resolves through the same logical-axis rules as training
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import numpy as np
 import jax
 from jax.sharding import Mesh, PartitionSpec as P
@@ -134,3 +136,23 @@ def mesh_summary(mesh: Mesh) -> str:
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     body = "x".join(f"{a}={sizes[a]}" for a in mesh.axis_names)
     return f"mesh({body}, devices={int(np.prod(mesh.devices.shape))})"
+
+
+def publish_mesh_metrics(sm, mesh: Optional[Mesh]) -> None:
+    """Record the mesh topology in the engine's metric registry.
+
+    Serving metrics are *engine-level aggregates*: the tick loop is SPMD, so
+    every device sees the same schedule, the same admissions, and the same
+    token counts — a per-device breakdown of those series would carry no
+    information. The per-device quantities that DO differ (a shard's slice
+    of the KV pool, a shard's share of gather traffic) are the engine-level
+    value divided by the axis size recorded here; dashboards derive them
+    from this gauge instead of the engine exporting near-duplicate series.
+    `sm` is a telemetry.ServingMetrics; with no mesh every axis reads 1.
+    """
+    if mesh is None:
+        sm.mesh_devices.set(1.0, axis="data")
+        sm.mesh_devices.set(1.0, axis="model")
+        return
+    for axis, size in zip(mesh.axis_names, mesh.devices.shape):
+        sm.mesh_devices.set(float(size), axis=str(axis))

@@ -26,3 +26,28 @@ import pytest  # noqa: E402
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True)
+def _trace_span_check():
+    """Sweep lifecycle-trace recorders after every test.
+
+    Any engine a test built (telemetry is on by default) registered its
+    TraceRecorder in serve/trace._LIVE; draining it here validates the
+    event schema and the span accounting — a request retired without a
+    `finish` event (a span leak) fails the test that leaked it, with the
+    engine's own state as the cross-check while it is still alive. The
+    import happens lazily so collecting tests that never touch the serving
+    stack doesn't pull it in.
+    """
+    yield
+    import sys
+    trace_lib = sys.modules.get("repro.serve.trace")
+    if trace_lib is None:       # test never imported the serving stack
+        return
+    errors = []
+    for rec in trace_lib.drain_recorders():
+        errors += rec.validate()
+        errors += rec.check_leaks()
+    assert not errors, "trace span leaks/schema violations:\n" + \
+        "\n".join(errors)
