@@ -365,6 +365,150 @@ def bench_kv_quant(cfg, params, args):
     return out
 
 
+def synth_overload_trace(n: int, mean_interarrival_ticks: float, vocab: int,
+                         max_new: int, seed: int, *, big_every: int = 6,
+                         big_prompt: int = 60, max_prompt: int = 16):
+    """Poisson arrivals where every `big_every`-th request carries a long
+    prompt — the head-of-line shape: a big reservation blocks while smalls
+    stream past it, so a tight pool exercises lookahead admission and then
+    KV-pressure preemption once the big head ages."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(mean_interarrival_ticks, size=n)
+    arrivals = np.floor(np.cumsum(gaps)).astype(int)
+    trace = []
+    for i, a in enumerate(arrivals):
+        size = (big_prompt if i % big_every == big_every - 1
+                else int(rng.integers(4, max_prompt)))
+        trace.append((int(a), rng.integers(2, vocab, size=size), max_new))
+    return trace
+
+
+def _run_overload_trace(engine: ServeEngine, trace,
+                        sampling: SamplingParams, max_ticks: int = 100000):
+    """run_trace plus overload accounting: admission-refusal errors are
+    counted (the contract is zero — overload control is backpressure and
+    preemption, never refusal), and per-request streams/preempt counts come
+    back for the bit-identity checks."""
+    pending = [(a, Request(rid=i, prompt=p, max_new_tokens=m,
+                           sampling=sampling))
+               for i, (a, p, m) in enumerate(trace)]
+    n_before = len(engine.scheduler.finished)
+    errors = 0
+    t0 = time.perf_counter()
+    ticks = 0
+    done = []
+    while (pending or engine.scheduler.waiting
+           or any(r is not None for r in engine.slot_req)):
+        while pending and pending[0][0] <= ticks:
+            try:
+                engine.submit(pending.pop(0)[1])
+            except ValueError:
+                errors += 1
+        engine.step()
+        done.extend(engine.poll())
+        ticks += 1
+        if ticks >= max_ticks:
+            raise RuntimeError("overload trace did not drain")
+    wall = time.perf_counter() - t0
+    finished = list(engine.scheduler.finished)[n_before:]
+    gen_tokens = sum(len(r.out_tokens or []) for r in done)
+    ttfts = [rs.ttft for rs in finished if rs.ttft is not None]
+    tpots = [rs.tpot for rs in finished if rs.tpot is not None]
+    m = engine.metrics()
+    ttft_p50, ttft_p99 = percentiles(ttfts, (50, 99))
+    tpot_p50, tpot_p99 = percentiles(tpots, (50, 99))
+    stats = {
+        "wall_s": wall,
+        "ticks": ticks,
+        "completed": len(done),
+        "generated_tokens": gen_tokens,
+        "goodput_tokens_per_s": gen_tokens / wall if wall > 0 else 0.0,
+        "ttft_p50_s": ttft_p50,
+        "ttft_p99_s": ttft_p99,
+        "tpot_p50_s": tpot_p50,
+        "tpot_p99_s": tpot_p99,
+        "admission_errors": errors,
+        "preempted": m["preempted"],
+        "hol_skips": m["hol_skips"],
+        "compiles": engine.compile_count(),
+    }
+    streams = {rs.rid: tuple(rs.out_tokens) for rs in finished}
+    preempt_counts = {rs.rid: rs.preempt_count for rs in finished}
+    return stats, streams, preempt_counts
+
+
+def bench_overload(cfg, params, args):
+    """Overload sweep: Poisson arrivals at 1.0/1.5/2.0x estimated capacity
+    through a deliberately tight KV pool (big every-6th prompts need most
+    of it), preemption on — plus a preemption-off run at 1.5x for the
+    control comparison.
+
+    The contracts this section gates: past capacity the engine preempts
+    instead of refusing admission (preempted > 0, admission_errors == 0 at
+    every rate), goodput holds a floor, and preemption is stream-invisible
+    — greedy token streams of never-preempted requests are bit-identical
+    to the non-preempting engine's, and preempted requests reproduce their
+    uninterrupted streams exactly (fold + chunk-grid recompute + resumed
+    sample_step). Keys use `p` for the decimal point (r1p5x = 1.5x) so the
+    check_regression dotted paths stay unambiguous.
+    """
+    slots = max(args.slots, 4)
+    max_new = max(args.max_new, 8)
+    # capacity estimate: each retired request occupies one slot for about
+    # max_new decode ticks, so `slots` requests retire per ~max_new ticks
+    capacity_interarrival = max_new / slots
+    ecfg = dict(slots=slots, max_seq=128, page_size=16,
+                num_blocks=args.overload_blocks, prefill_chunk=32,
+                preempt_after_ticks=4, seed=args.seed)
+    out = {"requests": args.overload_requests, "slots": slots,
+           "num_blocks": args.overload_blocks,
+           "capacity_interarrival_ticks": capacity_interarrival}
+    runs = {}
+    for label, rate, preempt in (("r1x", 1.0, True), ("r1p5x", 1.5, True),
+                                 ("r2x", 2.0, True),
+                                 ("r1p5x_no_preempt", 1.5, False)):
+        trace = synth_overload_trace(
+            args.overload_requests, capacity_interarrival / rate,
+            cfg.vocab_size, max_new, args.seed)
+        engine = ServeEngine(cfg, params,
+                             EngineConfig(preemption=preempt, **ecfg))
+        warm = engine.warmup()
+        stats, streams, pc = _run_overload_trace(engine, trace,
+                                                 SamplingParams())
+        stats["recompiles_after_warmup"] = engine.compile_count() - warm
+        stats["rate_x_capacity"] = rate
+        runs[label] = (streams, pc)
+        out[label] = stats
+        print(f"overload/{label}: goodput "
+              f"{stats['goodput_tokens_per_s']:.1f} tok/s, TTFT p99 "
+              f"{stats['ttft_p99_s'] * 1e3:.1f} ms, TPOT p99 "
+              f"{(stats['tpot_p99_s'] or 0) * 1e3:.1f} ms, "
+              f"preempted {stats['preempted']}, hol_skips "
+              f"{stats['hol_skips']}, admission errors "
+              f"{stats['admission_errors']} "
+              f"[{stats['recompiles_after_warmup']} recompiles]",
+              flush=True)
+    on_streams, on_pc = runs["r1p5x"]
+    off_streams, _ = runs["r1p5x_no_preempt"]
+    never = {rid for rid, n in on_pc.items() if n == 0}
+    out["tokens_bit_identical_never_preempted"] = all(
+        on_streams[rid] == off_streams.get(rid) for rid in never)
+    out["tokens_bit_identical_all"] = on_streams == off_streams
+    out["preempted_requests_r1p5x"] = sum(1 for n in on_pc.values() if n)
+    out["admission_errors_total"] = sum(
+        out[k]["admission_errors"]
+        for k in ("r1x", "r1p5x", "r2x", "r1p5x_no_preempt"))
+    out["goodput_ratio_r1p5x"] = (
+        out["r1p5x"]["goodput_tokens_per_s"]
+        / max(out["r1p5x_no_preempt"]["goodput_tokens_per_s"], 1e-9))
+    print(f"overload: preempted {out['r1p5x']['preempted']} at 1.5x "
+          f"({out['preempted_requests_r1p5x']} requests), goodput ratio "
+          f"vs no-preempt {out['goodput_ratio_r1p5x']:.2f}, bit-identical "
+          f"never-preempted {out['tokens_bit_identical_never_preempted']}, "
+          f"all {out['tokens_bit_identical_all']}", flush=True)
+    return out
+
+
 def bench_telemetry(cfg, params, args):
     """Telemetry overhead: one identical trace through telemetry-on vs -off
     engines (paged backend with prefix cache on, so every publish site —
@@ -460,12 +604,17 @@ def main() -> None:
                     help="requests in the telemetry-overhead section")
     ap.add_argument("--telemetry-reps", type=int, default=3,
                     help="repetitions per telemetry variant (median)")
+    ap.add_argument("--overload-requests", type=int, default=36,
+                    help="requests per rate in the overload section")
+    ap.add_argument("--overload-blocks", type=int, default=10,
+                    help="KV pool size (blocks) for the overload section; "
+                         "deliberately tight so big prompts block the head")
     ap.add_argument("--trace-out", default=None,
                     help="write the telemetry section's lifecycle-trace "
                          "JSONL here (the CI artifact)")
     ap.add_argument("--sections", default="all",
                     help="comma list of sections to run: runs,decode_scaling,"
-                         "prefix,kv_quant,telemetry (default all)")
+                         "prefix,kv_quant,telemetry,overload (default all)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke sizes: fewer requests, smaller capacity")
@@ -484,12 +633,15 @@ def main() -> None:
         args.scaling_requests = 32
         args.kv_requests = 12
         args.kv_reps = 2
+        args.overload_requests = 24
     for name in ("requests", "scaling_requests", "scaling_reps",
                  "prefix_requests", "prefix_reps", "kv_requests", "kv_reps",
-                 "telemetry_requests", "telemetry_reps"):
+                 "telemetry_requests", "telemetry_reps",
+                 "overload_requests", "overload_blocks"):
         if getattr(args, name) < 1:
             ap.error(f"--{name.replace('_', '-')} must be >= 1")
-    sections = (("runs", "decode_scaling", "prefix", "kv_quant", "telemetry")
+    sections = (("runs", "decode_scaling", "prefix", "kv_quant", "telemetry",
+                 "overload")
                 if args.sections == "all"
                 else tuple(s.strip() for s in args.sections.split(",") if s))
 
@@ -548,6 +700,8 @@ def main() -> None:
         report["kv_quant"] = bench_kv_quant(base_cfg, params, args)
     if "telemetry" in sections:
         report["telemetry"] = bench_telemetry(base_cfg, params, args)
+    if "overload" in sections:
+        report["overload"] = bench_overload(base_cfg, params, args)
 
     if mesh_shape:
         # sharded vs single-device: same float/greedy trace, so the delta is

@@ -50,6 +50,16 @@ def main() -> None:
                     help="prepend a shared synthetic system prompt of this "
                          "many tokens to every request (prefix-cache demo)")
     ap.add_argument("--policy", choices=["fcfs", "prefill"], default="fcfs")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="KV pool size in blocks (default: no "
+                         "oversubscription); small pools exercise "
+                         "preemption under load")
+    ap.add_argument("--no-preemption", action="store_true",
+                    help="disable KV-pressure preemption (a blocked request "
+                         "then waits for natural retirements)")
+    ap.add_argument("--preempt-after-ticks", type=int, default=8,
+                    help="ticks a blocked queue head must wait before it "
+                         "may evict later-arrival decode slots")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
@@ -92,18 +102,22 @@ def main() -> None:
         cfg, params,
         EngineConfig(slots=args.slots, max_seq=args.max_seq, paged=paged,
                      page_size=args.page_size, policy=args.policy,
+                     num_blocks=args.num_blocks,
                      kv_bits=args.kv_bits if args.kv_bits != 16 else None,
                      prefix_cache=args.prefix_cache,
                      prefill_chunk=args.prefill_chunk,
                      prefill_token_budget=args.prefill_budget,
+                     preemption=not args.no_preemption,
+                     preempt_after_ticks=args.preempt_after_ticks,
                      telemetry=telemetry,
                      seed=args.seed),
         mesh=mesh)
 
-    server = None
     if args.metrics_port is not None:
-        from repro.serve.telemetry import start_metrics_server
-        server = start_metrics_server(engine.registry, args.metrics_port)
+        # engine-owned endpoint: engine.close() (the finally below) stops
+        # the socket and joins the serving thread, so the launcher cannot
+        # leak the listener however it exits
+        server = engine.serve_metrics(args.metrics_port)
         print(f"metrics: http://{server.server_address[0]}:"
               f"{server.server_address[1]}/metrics")
 
@@ -144,20 +158,24 @@ def main() -> None:
                     max_new_tokens=args.max_new, sampling=sampling,
                     encoder_frames=enc)
             for i in range(args.requests)]
-    done = engine.run(reqs)
-    for r in done:
-        print(f"req {r.rid}: prompt={len(r.prompt)} toks -> "
-              f"generated {len(r.out_tokens or [])}: {(r.out_tokens or [])[:8]}...")
-    m = engine.metrics()
-    print(f"prefix cache: hit_rate={m['prefix_hit_rate']:.2f} "
-          f"cached_prefix_tokens={m['cached_prefix_tokens']} "
-          f"evictions={m['evictions']}")
-    print(json.dumps(m, indent=2, default=str))
-    if args.trace_out:
-        n = engine.export_trace(args.trace_out)
-        print(f"wrote {n} trace events to {args.trace_out}")
-    if server is not None:
-        server.shutdown()
+    try:
+        done = engine.run(reqs)
+        for r in done:
+            print(f"req {r.rid}: prompt={len(r.prompt)} toks -> "
+                  f"generated {len(r.out_tokens or [])}: "
+                  f"{(r.out_tokens or [])[:8]}...")
+        m = engine.metrics()
+        print(f"prefix cache: hit_rate={m['prefix_hit_rate']:.2f} "
+              f"cached_prefix_tokens={m['cached_prefix_tokens']} "
+              f"evictions={m['evictions']}")
+        print(f"preemption: preempted={m['preempted']} "
+              f"hol_skips={m['hol_skips']}")
+        print(json.dumps(m, indent=2, default=str))
+        if args.trace_out:
+            n = engine.export_trace(args.trace_out)
+            print(f"wrote {n} trace events to {args.trace_out}")
+    finally:
+        engine.close()
 
 
 if __name__ == "__main__":

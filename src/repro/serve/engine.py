@@ -50,6 +50,15 @@ kv_bits < 16 (a donor block's shared scale exponent depends on its trailing
 positions — see _match_prefix), so reuse rounds down to the chunk grid and
 cache-on/off streams stay bit-identical at any fixed kv_bits.
 
+Overload control is preemption, not refusal: when a waiting request cannot
+reserve blocks while free slots exist, the engine evicts last-admitted
+decode slots (LIFO — least progress lost), folds their generated tokens
+into the prompt, and requeues them for bit-exact recompute through the same
+chunk-grid prefill (see _preempt_slot; serve/frontdoor.py drives this from
+an asyncio streaming API). cancel() releases a request's blocks/pins at any
+lifecycle stage. Both reuse the ghost-slot mechanism drains already rely
+on, so neither adds device ops or jit traces.
+
 Static-shape invariants (serving never recompiles after warmup):
   * the decode+sample step sees (slots, 1) tokens, the same cache tree,
     (slots,)-shaped slot state and sampler params, and one block-table shape
@@ -73,7 +82,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+from typing import (Any, Callable, Dict, List, NamedTuple, Optional,
+                    Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -138,6 +148,18 @@ class EngineConfig:
     max_prefills_per_tick: Optional[int] = None
     max_pending_ticks: int = 32   # force a host drain after this many
     # undelivered decode ticks (bounds ghost decode past an unseen EOS)
+    preemption: bool = True       # KV-pressure preemption (paged only): when
+    # a waiting request cannot reserve blocks while free slots exist, evict
+    # last-admitted decode slots (their generated tokens fold into the
+    # prompt; re-admission recomputes bit-exactly through chunked prefill)
+    # instead of stalling the queue until blocks happen to free
+    preempt_after_ticks: int = 8  # a blocked head must have waited this many
+    # ticks (since submit, or since its own last preemption — anti-ping-pong)
+    # before it may evict running requests
+    admission_lookahead: int = 8  # scheduler head-of-line fix: how many
+    # unadmittable queue entries pick() may look past (0 = strict FCFS)
+    head_age_cap: int = 64        # fairness: once a blocked head has waited
+    # this many ticks, lookahead is suspended (strict arrival order again)
     telemetry: bool = True        # metrics registry + lifecycle traces +
     # tick-phase timing. Entirely host-side: enabling it adds zero jit
     # traces and zero device syncs (benchmarks/serving_bench.py gates the
@@ -401,11 +423,21 @@ class ServeEngine:
         # admission order; chunk grants rotate round-robin across them
         self._prefill_rr = 0
 
+        if ecfg.preempt_after_ticks < 1:
+            raise ValueError("preempt_after_ticks must be >= 1, got "
+                             f"{ecfg.preempt_after_ticks}")
         self.scheduler = Scheduler(
             ecfg.policy, ecfg.max_prefills_per_tick,
             prefill_token_budget=(self._prefill_budget if self.paged
                                   else None),
-            metrics=self._tel)
+            metrics=self._tel,
+            lookahead=ecfg.admission_lookahead,
+            head_age_cap=ecfg.head_age_cap)
+        # frontdoor hooks: called per delivered token / per retirement at
+        # drain time (host code, never inside a trace); None = no-op
+        self.token_sink: Optional[Callable[[int, int], None]] = None
+        self.retire_sink: Optional[Callable[[int, str], None]] = None
+        self._metrics_server: Optional[Any] = None
         self.stats: Dict[str, Any] = {"ticks": 0, "decode_tokens": 0,
                                       "prefill_tokens": 0,
                                       "cached_prefix_tokens": 0}
@@ -617,6 +649,13 @@ class ServeEngine:
         reusable); lifecycle records stay on scheduler.finished for metrics.
         """
         self._drain()
+        return self.reap()
+
+    def reap(self) -> List[Request]:
+        """Deliver already-drained finished requests WITHOUT forcing a
+        drain — poll() is drain() + reap(). The async front door uses this
+        with drain(keep=1) so delivery never blocks on the tick that was
+        just dispatched to the device."""
         out = [self._requests.pop(rs.rid) for rs in self._finished_unpolled]
         self._finished_unpolled = []
         return out
@@ -821,7 +860,10 @@ class ServeEngine:
             active=st.active.at[slot].set(True),
             sample_seed=st.sample_seed.at[slot].set(
                 int(rs.rid) & 0x7FFFFFFF),
-            sample_step=st.sample_step.at[slot].set(0),
+            # draws already made for this request: 0 on a fresh admission,
+            # len(out_tokens) when resuming after preemption — the sampled
+            # stream continues with exactly the keys it would have used
+            sample_step=st.sample_step.at[slot].set(len(rs.out_tokens)),
         )
         self.trace.record(rs.rid, "activate", slot=slot, context_tokens=ctx)
 
@@ -930,6 +972,175 @@ class ServeEngine:
                 rs.radix_nodes = []
             self.block_table[slot] = kvc.NULL_BLOCK
         self._finished_unpolled.append(rs)
+        if self.retire_sink is not None:
+            self.retire_sink(rs.rid, reason)
+
+    # --- preemption -------------------------------------------------------
+
+    def _preempt_slot(self, slot: int) -> None:
+        """Evict one activated decode slot under KV-pool pressure: free its
+        blocks, unpin its radix chain, and requeue the request at the front
+        of the waiting queue (scheduler.preempt) for bit-exact recompute.
+
+        Resume is exact by construction: the generated-so-far tokens fold
+        into the prompt, so re-admission recomputes the full context through
+        the absolute-grid chunked prefill (the same compiled programs on the
+        same inputs as if the context had been prefilled fresh — the
+        cache-on/off invariant), and _activate re-arms sample_step at
+        len(out_tokens) so a sampled stream continues with exactly the keys
+        it would have drawn uninterrupted. Prefill-computed full blocks the
+        slot already published stay in the radix cache (unpinned ->
+        evictable headroom now, cheap re-match at resume); decode-written
+        blocks are dropped and recomputed — publishing them would hand
+        decode-written K/V to the prefill path and break its bit-exactness
+        contract.
+
+        The device slot state is left untouched ("ghost-active", the same
+        mechanism as undrained finishes): the NULLed table row sends its
+        decode writes to the trash block, the remaining countdown bounds the
+        ghost ticks, and _activate fully re-arms the state on reuse — so
+        preemption adds no device ops and no new jit traces."""
+        rs = self.slot_req[slot]
+        freed = len(rs.blocks) + len(rs.cached_blocks)
+        self.trace.record(rs.rid, "preempt", slot=slot,
+                          tokens_generated=len(rs.out_tokens),
+                          blocks_freed=freed)
+        self.slot_req[slot] = None
+        self._host_len[slot] = 0
+        self.allocator.free(rs.blocks)
+        rs.blocks = []
+        if rs.cached_blocks:
+            self.allocator.free(rs.cached_blocks)
+            rs.cached_blocks = []
+        if rs.radix_nodes:
+            self.radix.unpin(rs.radix_nodes)
+            rs.radix_nodes = []
+        self.block_table[slot] = kvc.NULL_BLOCK
+        new = rs.out_tokens[rs.folded_tokens:]
+        if new:
+            # tokens generated since the last fold become context; the
+            # drained done flag guarantees budget remains (a spent budget
+            # retires at drain, and preemption only runs against a drained
+            # pending buffer)
+            assert len(new) < rs.max_new_tokens
+            rs.prompt = np.concatenate(
+                [rs.prompt, np.asarray(new, np.int32)])
+            rs.max_new_tokens -= len(new)
+            rs.folded_tokens = len(rs.out_tokens)
+        rs.slot = -1
+        rs.table_row = None
+        rs.prefill_pos = rs.prefill_ctx = 0
+        rs.pending_chunks = []
+        rs.match_memo = None
+        rs.cached_prefix_tokens = 0
+        rs.published_blocks = 0
+        rs.radix_tail = None
+        self.scheduler.preempt(rs, self.stats["ticks"])
+
+    def _maybe_preempt(self) -> int:
+        """Admit-or-preempt: when the blocked queue head has waited
+        `preempt_after_ticks` (since submit, or since its own last
+        preemption), evict last-admitted decode slots — LIFO, least progress
+        lost — until the head's reservation fits. Returns slots preempted.
+
+        Must run against a drained pending buffer (out_tokens current, no
+        in-flight ticks to discard). Victims are restricted to requests
+        that *arrived after* the head — preemption is the enforcement arm
+        of arrival-order fairness (it reclaims capacity the lookahead
+        handed to opportunistic later arrivals), and because "may preempt"
+        is then a strict order, preemption cycles (two requests evicting
+        each other forever) cannot exist. The head is held out of the queue
+        while victims requeue so it stays in front of them: the freed
+        blocks must admit *it*, not hand the pool straight back to a
+        requeued victim. Mid-prefill slots are never victims (their
+        computed blocks are shared-publishable work in flight); a what-if
+        gate skips the whole storm when even preempting every victim could
+        not admit the head (e.g. surviving pins keep the pool occupied) —
+        then the head waits for natural retirements exactly as without
+        preemption."""
+        sched = self.scheduler
+        head = sched.waiting[0]
+        if self._can_admit(head):
+            return 0
+        if head.wait_age(self.stats["ticks"]) < self.ecfg.preempt_after_ticks:
+            return 0
+        victims = sorted(
+            (s for s, r in enumerate(self.slot_req)
+             if r is not None and s not in self._prefilling
+             and r.arrival_seq > head.arrival_seq),
+            key=lambda s: (self.slot_req[s].admit_tick, s))
+        if not victims:
+            return 0
+        # what-if headroom across all victims: directly freed private
+        # blocks (no cache reference) + cache blocks that become evictable
+        # once every victim chain is unpinned, minus the head's own matched
+        # chain (about to be pinned — never both reused and evictable)
+        _, matched, _, _, _ = self._match_prefix(head)
+        chains: List[Any] = []
+        direct = 0
+        for s in victims:
+            rs = self.slot_req[s]
+            chains.extend(rs.radix_nodes)
+            published_own = max(0, rs.published_blocks
+                                - len(rs.cached_blocks))
+            direct += len(rs.blocks) - published_own
+        headroom = 0
+        if self.radix is not None:
+            headroom = max(0, self.radix.evictable_after_unpin(chains)
+                           - len(matched))
+        if (self._blocks_needed(head) - len(matched)
+                > self.allocator.free_blocks + direct + headroom):
+            return 0
+        sched.waiting.popleft()
+        n = 0
+        while victims and not self._can_admit(head):
+            self._preempt_slot(victims.pop())
+            n += 1
+        sched.waiting.appendleft(head)
+        return n
+
+    # --- cancellation -----------------------------------------------------
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a live request, releasing its resources wherever it is in
+        the lifecycle — waiting in the queue, mid-chunked-prefill, or
+        mid-decode. Returns True if it was cancelled; False if it is unknown
+        or already finished (in-flight ticks are drained first, so a request
+        whose stream just completed keeps its tokens — cancellation never
+        rolls back delivered output). The cancelled request is retired with
+        reason "cancelled" and is still returned by poll() with whatever
+        tokens it produced."""
+        req = self._requests.get(rid)
+        if req is None:
+            return False
+        self._drain()
+        now = time.perf_counter()
+        tick = self.stats["ticks"]
+        for rs in self.scheduler.waiting:
+            if rs.rid == rid:
+                # never admitted: no slot, no blocks — just close the span
+                self.scheduler.waiting.remove(rs)
+                self.scheduler.retire(rs, tick, now, "cancelled")
+                self.trace.record(rid, "finish", reason="cancelled",
+                                  tokens=len(rs.out_tokens), decode_s=0.0,
+                                  tpot_s=0.0)
+                self._finished_unpolled.append(rs)
+                if self.retire_sink is not None:
+                    self.retire_sink(rid, "cancelled")
+                return True
+        for slot, rs in enumerate(self.slot_req):
+            if rs is not None and rs.rid == rid:
+                if slot in self._prefilling:
+                    # mid-prefill: the slot was never decode-visible (table
+                    # row still NULL); _retire frees blocks + unpins the
+                    # published chain
+                    self._prefilling.remove(slot)
+                # mid-decode: the device slot goes ghost-active exactly like
+                # preemption — trash writes, bounded by the remaining
+                # countdown, fully re-armed by the next _activate
+                self._retire(slot, rs, "cancelled", now, tick)
+                return True
+        return False    # finished since the caller last polled
 
     # --- decode tick ------------------------------------------------------
 
@@ -960,6 +1171,11 @@ class ServeEngine:
             if t is not None:
                 t0 = time.perf_counter()   # drain timed itself; restart
             free = self.slot_req.count(None)
+            if free and self.paged and self.ecfg.preemption:
+                # head blocked on blocks (not slots): evict last-admitted
+                # decode slots so it admits instead of stalling the queue
+                if self._maybe_preempt():
+                    free = self.slot_req.count(None)
             if free:
                 not_admitted = [
                     rs for rs in self.scheduler.pick(
@@ -1001,15 +1217,28 @@ class ServeEngine:
             self._drain()
         return len(active)
 
-    def _drain(self) -> None:
-        """Deliver every pending decode tick: one host sync per drained batch
-        instead of one per token. Ticks are replayed in order so retirement
-        and slot recycling land exactly where the per-tick loop would have
-        put them (a slot freed at tick t is admissible at tick t+1 for any
-        caller that polls between steps)."""
-        if not self._pending:
+    def drain(self, keep: int = 0) -> None:
+        """Deliver pending decode ticks to host, leaving the newest `keep`
+        enqueued. `keep=1` is the overlap knob the async front door uses:
+        after step() enqueues tick N+1, drain(keep=1) syncs only ticks
+        <= N — work the device has already finished (it is executing N+1) —
+        so token delivery proceeds while the device computes, instead of
+        blocking on the tick that was just dispatched."""
+        self._drain(keep)
+
+    def _drain(self, keep: int = 0) -> None:
+        """Deliver every pending decode tick (all but the newest `keep`):
+        one host sync per drained batch instead of one per token. Ticks are
+        replayed in order so retirement and slot recycling land exactly
+        where the per-tick loop would have put them (a slot freed at tick t
+        is admissible at tick t+1 for any caller that polls between steps)."""
+        if len(self._pending) <= keep:
             return
-        pending, self._pending = self._pending, []
+        if keep:
+            pending = self._pending[:-keep]
+            self._pending = self._pending[-keep:]
+        else:
+            pending, self._pending = self._pending, []
         t = self._tel
         t_start = time.perf_counter() if t is not None else 0.0
         sync_s = 0.0          # time blocked in the np.asarray host syncs —
@@ -1032,6 +1261,8 @@ class ServeEngine:
                     continue
                 tok = int(toks[slot])
                 rs.out_tokens.append(tok)
+                if self.token_sink is not None:
+                    self.token_sink(rs.rid, tok)
                 if rs.first_token_time is None:
                     rs.first_token_time = now
                     self.trace.record(rs.rid, "first_token",
@@ -1217,6 +1448,40 @@ class ServeEngine:
         return self.registry.to_prometheus_text()
 
     def export_trace(self, path) -> int:
-        """Write the lifecycle-trace ring buffer as JSONL (one event per
-        line, schema in serve/trace.py); returns the number of lines."""
+        """Write the lifecycle-trace ring buffer as JSONL (wall-clock epoch
+        header + one event per line, schema in serve/trace.py); returns the
+        number of lines."""
         return self.trace.export_jsonl(path)
+
+    # --- lifecycle --------------------------------------------------------
+
+    def serve_metrics(self, port: int = 0):
+        """Start an HTTP metrics endpoint for this engine's registry and
+        *own* it: close() stops the socket and joins the serving thread, so
+        embedders that manage the engine (or use it as a context manager)
+        cannot leak the listener. Returns the server (`.port` carries the
+        bound port when 0 was requested); idempotent — a second call returns
+        the already-running server."""
+        if self.registry is None:
+            raise ValueError("serve_metrics() requires telemetry=True")
+        if self._metrics_server is None:
+            self._metrics_server = tel.start_metrics_server(self.registry,
+                                                            port)
+        return self._metrics_server
+
+    def close(self) -> None:
+        """Release host-side resources: deliver pending ticks (so no
+        generated tokens are stranded on device) and stop the owned metrics
+        endpoint. Idempotent; the engine remains usable for introspection
+        (metrics(), export_trace()) afterwards."""
+        self._drain()
+        if self._metrics_server is not None:
+            self._metrics_server.stop()
+            self._metrics_server = None
+
+    def __enter__(self) -> "ServeEngine":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False

@@ -1,0 +1,228 @@
+"""Asyncio streaming front door over ServeEngine: per-token streams,
+overlapped host/device scheduling, cancellation, and backpressure.
+
+The engine's native surface is a host-driven tick loop (submit / step /
+poll) that delivers tokens in drained batches — right for benchmarks, wrong
+for serving: a caller wants an ``async submit()`` whose result yields tokens
+as they are generated, cancellation when the client disconnects, and an
+admission queue that applies backpressure instead of growing without bound.
+FrontDoor is that layer. It owns one background tick task and stays
+single-threaded: every engine call happens on the event loop, so no engine
+state is ever touched concurrently — concurrency here is interleaving, not
+parallelism, which is exactly what the engine's host bookkeeping (and JAX's
+single-stream dispatch) wants.
+
+Overlap: each loop iteration runs ``engine.step()`` (enqueues decode tick
+N+1, non-blocking) and then ``engine.drain(keep=1)`` — syncing only ticks
+the device has already finished while it executes the tick just dispatched.
+Token delivery therefore proceeds *during* the device step instead of
+serializing behind it. Per-token hooks (``token_sink``/``retire_sink``)
+route straight into per-request ``asyncio.Queue`` streams at drain time; a
+request's stream survives preemption transparently (the engine re-admits
+and recomputes bit-exactly; the stream just keeps yielding).
+
+Overload control is backpressure + preemption, never refusal: ``submit()``
+awaits while the waiting queue is at ``max_waiting`` (arrival pacing), and
+under KV-pool pressure the engine preempts later arrivals rather than
+erroring the blocked head (engine._maybe_preempt). No admission path raises
+on overload.
+"""
+from __future__ import annotations
+
+import asyncio
+import itertools
+from typing import AsyncIterator, List, Optional
+
+import numpy as np
+
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.sampling import SamplingParams
+
+__all__ = ["FrontDoor", "TokenStream"]
+
+_FINISH = object()       # in-queue sentinel terminating a TokenStream
+
+
+class TokenStream:
+    """One request's async token stream.
+
+    Async-iterate to receive tokens as the engine generates them; iteration
+    ends when the request retires (EOS, max_tokens, or cancellation) and
+    ``finish_reason`` is set from then on. ``tokens`` accumulates everything
+    yielded so far (it aliases the engine's live output list, so it is
+    up to date even between reads)."""
+
+    def __init__(self, rid: int, door: "FrontDoor", tokens: List[int]):
+        self.rid = rid
+        self.tokens = tokens          # live alias of Request.out_tokens
+        self.finish_reason: Optional[str] = None
+        self._door = door
+        self._q: asyncio.Queue = asyncio.Queue()
+
+    # engine-side (called from the tick task via the engine sinks)
+    def _push(self, tok: int) -> None:
+        self._q.put_nowait(tok)
+
+    def _finish(self, reason: str) -> None:
+        self.finish_reason = reason
+        self._q.put_nowait(_FINISH)
+
+    # client-side
+    def __aiter__(self) -> AsyncIterator[int]:
+        return self
+
+    async def __anext__(self) -> int:
+        item = await self._q.get()
+        if item is _FINISH:
+            raise StopAsyncIteration
+        return item
+
+    async def drain(self) -> List[int]:
+        """Consume the stream to completion; returns the full token list."""
+        async for _ in self:
+            pass
+        return self.tokens
+
+    async def cancel(self) -> bool:
+        """Cancel this request wherever it is (queued, prefilling,
+        decoding); its blocks/pins are released immediately. Returns False
+        if it had already finished — the stream then ends with the original
+        finish reason and keeps every generated token."""
+        return await self._door.cancel(self.rid)
+
+
+class FrontDoor:
+    """Async serving facade owning a ServeEngine and its tick loop.
+
+    Use as an async context manager (or call start()/stop()); while it is
+    running, do not drive the engine's submit/step/poll directly — the
+    front door owns the engine's token/retire sinks and its tick cadence.
+
+    `max_waiting`: admission backpressure — submit() awaits while this many
+    requests are queued (None = unbounded). Pacing arrivals at the door
+    keeps the waiting queue (and its memory) bounded without ever refusing
+    a request."""
+
+    def __init__(self, engine: ServeEngine,
+                 max_waiting: Optional[int] = None):
+        if max_waiting is not None and max_waiting < 1:
+            raise ValueError(f"max_waiting must be >= 1, got {max_waiting}")
+        self.engine = engine
+        self.max_waiting = max_waiting
+        self._streams: dict = {}            # rid -> TokenStream (live)
+        self._rids = itertools.count()
+        self._task: Optional[asyncio.Task] = None
+        self._wake = asyncio.Event()        # submit -> tick task
+        self._space = asyncio.Event()       # tick task -> blocked submitters
+        self._running = False
+        engine.token_sink = self._on_token
+        engine.retire_sink = self._on_retire
+
+    # --- engine sinks (tick-task context) --------------------------------
+
+    def _on_token(self, rid: int, tok: int) -> None:
+        stream = self._streams.get(rid)
+        if stream is not None:
+            stream._push(tok)
+
+    def _on_retire(self, rid: int, reason: str) -> None:
+        stream = self._streams.pop(rid, None)
+        if stream is not None:
+            stream._finish(reason)
+
+    # --- client API ------------------------------------------------------
+
+    async def submit(self, prompt, max_new_tokens: int = 32,
+                     sampling: Optional[SamplingParams] = None,
+                     encoder_frames=None,
+                     rid: Optional[int] = None) -> TokenStream:
+        """Enqueue one request; returns its TokenStream immediately (tokens
+        arrive as the engine generates them). Awaits under backpressure
+        when the waiting queue is at max_waiting. `rid` defaults to a fresh
+        id; passing one that collides with a live request raises (same
+        contract as ServeEngine.submit)."""
+        if not self._running:
+            raise RuntimeError("FrontDoor is not running (use 'async with' "
+                               "or call start())")
+        while (self.max_waiting is not None
+               and len(self.engine.scheduler.waiting) >= self.max_waiting):
+            self._space.clear()
+            await self._space.wait()
+        if rid is None:
+            rid = next(self._rids)
+            while rid in self.engine._requests:
+                rid = next(self._rids)
+        req = Request(rid=rid, prompt=np.asarray(prompt, np.int32),
+                      max_new_tokens=int(max_new_tokens),
+                      sampling=sampling or SamplingParams(),
+                      encoder_frames=encoder_frames)
+        self.engine.submit(req)
+        stream = TokenStream(rid, self, req.out_tokens)
+        self._streams[rid] = stream
+        self._wake.set()
+        return stream
+
+    async def cancel(self, rid: int) -> bool:
+        """Cancel a live request; see ServeEngine.cancel for semantics.
+        The request's stream ends with finish_reason "cancelled" (or its
+        real reason, if it won the race and finished first)."""
+        cancelled = self.engine.cancel(rid)
+        self.engine.reap()
+        return cancelled
+
+    # --- lifecycle -------------------------------------------------------
+
+    def start(self) -> None:
+        if self._task is not None:
+            raise RuntimeError("FrontDoor already started")
+        self._running = True
+        self._task = asyncio.get_running_loop().create_task(self._run())
+
+    async def stop(self) -> None:
+        """Stop the tick task. In-flight requests stay live inside the
+        engine (their streams resume if the door is started again);
+        call engine.close() — or use the context manager — to also stop
+        the owned metrics endpoint."""
+        self._running = False
+        self._wake.set()
+        if self._task is not None:
+            await self._task
+            self._task = None
+
+    async def __aenter__(self) -> "FrontDoor":
+        self.start()
+        return self
+
+    async def __aexit__(self, *exc) -> bool:
+        await self.stop()
+        self.engine.close()
+        return False
+
+    # --- tick task -------------------------------------------------------
+
+    def _has_work(self) -> bool:
+        eng = self.engine
+        return bool(eng.scheduler.waiting or eng._pending
+                    or any(r is not None for r in eng.slot_req))
+
+    async def _run(self) -> None:
+        eng = self.engine
+        while self._running:
+            if not self._has_work():
+                self._wake.clear()
+                self._space.set()           # empty queue: admit freely
+                await self._wake.wait()
+                continue
+            # dispatch tick N+1, then deliver every tick the device has
+            # already retired — the newest enqueued tick keeps executing
+            # while the host runs delivery and the streams' consumers
+            eng.step()
+            eng.drain(keep=1)
+            eng.reap()
+            if (self.max_waiting is None
+                    or len(eng.scheduler.waiting) < self.max_waiting):
+                self._space.set()
+            # hand the loop to submitters/consumers once per tick
+            await asyncio.sleep(0)
+        eng.drain()                         # deliver any still-pending ticks
+        eng.reap()

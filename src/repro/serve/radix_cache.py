@@ -260,6 +260,38 @@ class RadixCache:
                 total += 1
         return total
 
+    def evictable_after_unpin(self, nodes: List[RadixNode]) -> int:
+        """What-if headroom: `evictable_blocks()` as if one pin — and the
+        matching slot-owned block reference — were dropped from each entry
+        of `nodes`. Pass the concatenated pinned chains of prospective
+        preemption victims; pure query, mutates nothing.
+
+        The engine's preemption path uses this to check that preempting a
+        victim set can actually yield enough reclaimable blocks to admit
+        the blocked head before it pays for any preempt (victims whose
+        prefix is also pinned by a surviving slot free nothing)."""
+        drop: Dict[int, int] = {}
+        for n in nodes:
+            drop[id(n)] = drop.get(id(n), 0) + 1
+        order, stack = [], [self.root]
+        while stack:
+            n = stack.pop()
+            order.append(n)
+            stack.extend(n.children.values())
+        pinned_below: Dict[int, bool] = {}
+        total = 0
+        for n in reversed(order):               # children before parents
+            d = drop.get(id(n), 0)
+            assert n.pins >= d, "unpin what-if exceeds actual pins"
+            pinned = (n.pins - d > 0
+                      or any(pinned_below[id(c)]
+                             for c in n.children.values()))
+            pinned_below[id(n)] = pinned
+            if (n is not self.root and not pinned
+                    and self.allocator.refcount(n.block) - d == 1):
+                total += 1
+        return total
+
     def evict(self, need_free: int) -> int:
         """LRU-evict unpinned leaves until the allocator has `need_free`
         free blocks (or nothing evictable remains). Returns blocks whose

@@ -49,7 +49,22 @@ class RequestState:
     finish_time: Optional[float] = None
     slot: int = -1
     blocks: List[int] = dataclasses.field(default_factory=list)
-    finish_reason: str = ""        # "eos" | "max_tokens"
+    finish_reason: str = ""        # "eos" | "max_tokens" | "cancelled"
+    # preemption lifecycle: how many times this request was evicted from a
+    # decode slot under KV pressure, and the tick of the latest eviction —
+    # age-based policies (lookahead fairness, the engine's preemption gate)
+    # measure waiting from the preemption, not the original submit, so a
+    # freshly requeued victim cannot immediately trigger a counter-preemption
+    preempt_count: int = 0
+    preempt_tick: int = -1
+    # arrival order (total, unlike submit_tick which same-tick submissions
+    # share): a blocked head may only preempt later arrivals — the relation
+    # is a strict order, so preemption cycles cannot exist
+    arrival_seq: int = -1
+    # generated tokens already folded into `prompt` by past preemptions
+    # (resume recomputes them as context; the out_tokens list itself is
+    # never truncated — it aliases the user-facing Request)
+    folded_tokens: int = 0
     # chunked-prefill state machine (paged engines): next grid position to
     # compute and the context target; prefill_pos >= prefill_ctx <=> the slot
     # is decoding. Prefix-cache accounting rides along per request.
@@ -72,6 +87,12 @@ class RequestState:
     @property
     def prompt_len(self) -> int:
         return int(len(self.prompt))
+
+    def wait_age(self, tick: int) -> int:
+        """Ticks spent waiting since the last queue entry (submit, or the
+        most recent preemption)."""
+        base = self.preempt_tick if self.preempt_tick >= 0 else self.submit_tick
+        return tick - base
 
     @property
     def queue_ticks(self) -> int:
@@ -99,10 +120,24 @@ class Scheduler:
                  max_prefills_per_tick: Optional[int] = None,
                  keep_finished: int = 100_000,
                  prefill_token_budget: Optional[int] = None,
-                 metrics: Optional[tel.ServingMetrics] = None):
+                 metrics: Optional[tel.ServingMetrics] = None,
+                 lookahead: int = 8,
+                 head_age_cap: int = 64):
         if policy not in POLICIES:
             raise ValueError(f"policy {policy!r} not in {POLICIES}")
+        if lookahead < 0:
+            raise ValueError(f"lookahead must be >= 0, got {lookahead}")
+        if head_age_cap < 1:
+            raise ValueError(f"head_age_cap must be >= 1, got {head_age_cap}")
         self.policy = policy
+        # head-of-line fix: pick() may skip up to `lookahead` unadmittable
+        # queue entries so one oversized request cannot starve admissible
+        # smaller requests behind it. Fairness: once the head has waited
+        # `head_age_cap` ticks (since submit or its last preemption) the
+        # lookahead is suspended and admission reverts to strict arrival
+        # order — nothing can jump an aged head forever.
+        self.lookahead = lookahead
+        self.head_age_cap = head_age_cap
         if max_prefills_per_tick is None:
             max_prefills_per_tick = 1 if policy == "fcfs" else 1 << 30
         self.max_prefills_per_tick = max_prefills_per_tick
@@ -139,6 +174,8 @@ class Scheduler:
         self.submitted = 0
         self.admitted = 0
         self.retired = 0
+        self.preempted = 0
+        self.hol_skips = 0       # unadmittable entries looked past by pick()
         self.max_queue_depth = 0
         self._queue_tick_sum = 0
         self._ttft_sum = 0.0
@@ -150,6 +187,7 @@ class Scheduler:
     def submit(self, rs: RequestState, tick: int, now: float) -> None:
         rs.submit_tick = tick
         rs.submit_time = now
+        rs.arrival_seq = self.submitted
         self.waiting.append(rs)
         self.submitted += 1
         self.max_queue_depth = max(self.max_queue_depth, len(self.waiting))
@@ -159,21 +197,38 @@ class Scheduler:
 
     def pick(self, free_slots: int, tick: int,
              can_admit: Callable[[RequestState], bool]) -> List[RequestState]:
-        """Choose requests to admit this tick (arrival order, head-of-line
-        blocking on resources: a request that can't reserve blocks waits and
-        nothing behind it jumps the queue)."""
+        """Choose requests to admit this tick, in arrival order with bounded
+        lookahead: a queue head that cannot reserve resources is looked past
+        (up to `self.lookahead` blocked entries) so admissible smaller
+        requests behind it still admit — the head keeps its queue position
+        and retries every tick. Once a blocked head has waited
+        `head_age_cap` ticks, lookahead is suspended for it (strict arrival
+        order again) so newer arrivals cannot starve it indefinitely; at
+        that point only freed or preempted resources unblock the queue."""
         budget = min(free_slots, self.max_prefills_per_tick)
         chosen: List[RequestState] = []
         now = time.perf_counter()
+        skipped: List[RequestState] = []      # blocked entries, queue order
+        allow_skip = self.lookahead
+        if (self.waiting
+                and self.waiting[0].wait_age(tick) >= self.head_age_cap):
+            allow_skip = 0
         while self.waiting and len(chosen) < budget:
             if not can_admit(self.waiting[0]):
-                break
+                if len(skipped) >= allow_skip:
+                    break
+                skipped.append(self.waiting.popleft())
+                self.hol_skips += 1
+                continue
             rs = self.waiting.popleft()
             rs.admit_tick = tick
             rs.admit_time = now
             self._queue_tick_sum += rs.queue_ticks
             self.admitted += 1
             chosen.append(rs)
+        # restore the looked-past entries at the queue head, original order
+        for rs in reversed(skipped):
+            self.waiting.appendleft(rs)
         if self._tel is not None and chosen:
             # the admitted *counter* is published by the engine once the
             # reservation actually lands (requeue_front must never have to
@@ -198,6 +253,28 @@ class Scheduler:
         if self._tel is not None:
             self._tel.queue_depth.set(len(self.waiting))
 
+    def preempt(self, rs: RequestState, tick: int) -> None:
+        """Return an admitted-and-running request to the queue head: the
+        engine evicted it from its decode slot under KV-pool pressure and
+        will re-admit it later through the normal pick path (bit-exact
+        recompute via chunked prefill). Admission marks are reverted exactly
+        like requeue_front — the request will be admitted again, and the
+        monotonic admitted counter is published by the engine per slot
+        grant — and the preempt tick is stamped so age-based policies
+        measure its wait from here."""
+        self.preempted += 1
+        rs.preempt_count += 1
+        rs.preempt_tick = tick
+        if rs.admit_tick >= 0:
+            self._queue_tick_sum -= rs.queue_ticks
+            self.admitted -= 1
+            rs.admit_tick = -1
+            rs.admit_time = None
+        self.waiting.appendleft(rs)
+        if self._tel is not None:
+            self._tel.preemptions.inc()
+            self._tel.queue_depth.set(len(self.waiting))
+
     def retire(self, rs: RequestState, tick: int, now: float,
                reason: str) -> None:
         rs.finish_tick = tick
@@ -216,8 +293,7 @@ class Scheduler:
         self._cached_prefix_sum += rs.cached_prefix_tokens
         self.finished.append(rs)
         if self._tel is not None:
-            (self._tel.retired_eos if reason == "eos"
-             else self._tel.retired_max_tokens).inc()
+            self._tel.retired_by_reason[reason].inc()
 
     # --- metrics --------------------------------------------------------
     def ttft_percentiles(self, qs=(50, 90, 99)) -> List[Optional[float]]:
@@ -238,6 +314,8 @@ class Scheduler:
             "submitted": self.submitted,
             "admitted": self.admitted,
             "retired": self.retired,
+            "preempted": self.preempted,
+            "hol_skips": self.hol_skips,
             "waiting": len(self.waiting),
             "max_queue_depth": self.max_queue_depth,
             "mean_queue_ticks": (self._queue_tick_sum / self.admitted

@@ -399,6 +399,18 @@ class ServingMetrics:
             "Requests retired, by finish reason", labels=("reason",))
         self.retired_eos = self._retired.labels(reason="eos")
         self.retired_max_tokens = self._retired.labels(reason="max_tokens")
+        self.retired_cancelled = self._retired.labels(reason="cancelled")
+        # one dispatch table for every retire site (scheduler + engine):
+        # an unknown reason KeyErrors loudly instead of silently miscounting
+        self.retired_by_reason = {
+            "eos": self.retired_eos,
+            "max_tokens": self.retired_max_tokens,
+            "cancelled": self.retired_cancelled,
+        }
+        self.preemptions = r.counter(
+            "serve_preemptions_total",
+            "Decode slots preempted under KV-pool pressure (the victim is "
+            "requeued and recomputed bit-exactly; not a retirement)").labels()
         self.decode_tokens = r.counter(
             "serve_decode_tokens_total",
             "Tokens sampled by the decode loop (delivered at drain)").labels()
@@ -479,7 +491,11 @@ def start_metrics_server(registry: MetricsRegistry, port: int,
     """Serve ``/metrics`` (Prometheus text) and ``/metrics.json`` for
     `registry` on a daemon thread. Returns the live ``HTTPServer`` — its
     actual port is ``server.server_address[1]`` (pass port=0 for an
-    ephemeral port in tests); call ``server.shutdown()`` to stop."""
+    ephemeral port in tests). Call ``server.stop()`` to stop it: that ends
+    ``serve_forever`` *and* closes the listening socket (``shutdown()``
+    alone leaves the socket open until process exit — the leak long-lived
+    embedders must not inherit; ``ServeEngine.close()`` and the launcher go
+    through ``stop()``)."""
     from http.server import BaseHTTPRequestHandler, HTTPServer
 
     class Handler(BaseHTTPRequestHandler):
@@ -507,4 +523,12 @@ def start_metrics_server(registry: MetricsRegistry, port: int,
     thread = threading.Thread(target=server.serve_forever,
                               name="metrics-exporter", daemon=True)
     thread.start()
+
+    def stop() -> None:
+        server.shutdown()        # stop serve_forever (joins the poll loop)
+        server.server_close()    # release the listening socket now
+        thread.join(timeout=5.0)
+
+    server.stop = stop           # idempotent enough: second call is a no-op
+    # socket close on an already-closed server
     return server

@@ -33,7 +33,15 @@ tests/test_telemetry.py pins it):
                  construction and show up as admit.cached_prefix_tokens)
   activate:     slot, context_tokens            (decode-visible from here)
   first_token:  ttft_s
-  finish:       reason ("eos"|"max_tokens"), tokens, decode_s, tpot_s
+  preempt:      slot, tokens_generated, blocks_freed   (the span stays open:
+                 the request is requeued and later re-admitted — its next
+                 admit/activate pair is the resume)
+  finish:       reason ("eos"|"max_tokens"|"cancelled"), tokens, decode_s,
+                 tpot_s
+  epoch:        wall_time_s  (export-time header, not a ring event: one
+                 ``time.time()`` <-> ``perf_counter`` pair anchoring every
+                 monotonic ts to the wall clock, so traces correlate across
+                 processes and with Prometheus scrape times)
 """
 from __future__ import annotations
 
@@ -55,7 +63,9 @@ EVENT_FIELDS: Dict[str, tuple] = {
     "prefill_chunk": ("p0", "tokens", "kind"),
     "activate": ("slot", "context_tokens"),
     "first_token": ("ttft_s",),
+    "preempt": ("slot", "tokens_generated", "blocks_freed"),
     "finish": ("reason", "tokens", "decode_s", "tpot_s"),
+    "epoch": ("wall_time_s",),
 }
 
 _OPENING = "submit"
@@ -139,6 +149,13 @@ class TraceRecorder:
             self._open.discard(rid)
             self._slot_owner = {s: r for s, r in self._slot_owner.items()
                                 if r != rid}
+        elif event == "preempt":
+            # the span stays open (the request is requeued, not retired) but
+            # the slot is vacated — without this the slot-recycle oracle
+            # below would flag the victim as a leak on the next admit
+            slot = int(attrs["slot"])
+            if self._slot_owner.get(slot) == rid:
+                del self._slot_owner[slot]
         elif event == "admit":
             # slot recycling is the recorder-internal leak oracle: the
             # engine only re-admits into a slot after retiring its previous
@@ -207,17 +224,25 @@ class TraceRecorder:
     # --- export ---------------------------------------------------------
 
     def export_jsonl(self, path_or_file) -> int:
-        """Write every buffered event as one JSON object per line; returns
-        the number of lines written."""
-        events = self.events()
+        """Write the trace as JSONL: one `epoch` header line anchoring the
+        monotonic clock to the wall clock, then every buffered event in ring
+        order. Returns the number of lines written (events + 1).
+
+        Event timestamps are ``time.perf_counter()`` values, which are only
+        meaningful within this process; the header samples both clocks at
+        export time so a consumer can convert any event to wall-clock time
+        as ``wall_time_s - (header.ts - event.ts)``."""
+        lines = [{"ts": time.perf_counter(), "rid": -1, "event": "epoch",
+                  "wall_time_s": time.time()}]
+        lines.extend(self.events())
         if hasattr(path_or_file, "write"):
-            for ev in events:
+            for ev in lines:
                 path_or_file.write(json.dumps(ev) + "\n")
         else:
             with open(path_or_file, "w") as f:
-                for ev in events:
+                for ev in lines:
                     f.write(json.dumps(ev) + "\n")
-        return len(events)
+        return len(lines)
 
 
 class NullTraceRecorder:

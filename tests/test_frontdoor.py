@@ -1,0 +1,435 @@
+"""Head-of-line admission, preemption, cancellation, and the asyncio
+streaming front door.
+
+The contracts under test: a blocked queue head must not starve admissible
+requests behind it (bounded-lookahead pick) nor be starved by them forever
+(age cap + preemption); preemption and cancellation must release every
+resource (blocks, radix pins, trace spans — the autouse conftest fixture
+sweeps the spans); preemption must be stream-invisible (bit-identical
+greedy tokens vs a never-preempting engine, including the preempted
+requests themselves via fold + recompute); and the FrontDoor must deliver
+the engine's exact streams through async iteration with working
+cancellation and backpressure."""
+import asyncio
+import socket
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.archs import get_config
+from repro.models import lm
+from repro.serve.engine import EngineConfig, Request, ServeEngine
+from repro.serve.frontdoor import FrontDoor
+from repro.serve.sampling import SamplingParams
+from repro.serve.scheduler import RequestState, Scheduler
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    cfg = get_config("llama3.2-3b", smoke=True)
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    return cfg, params
+
+
+def total_pins(radix) -> int:
+    stack, total = [radix.root], 0
+    while stack:
+        n = stack.pop()
+        total += n.pins
+        stack.extend(n.children.values())
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Scheduler.pick: bounded lookahead + age-cap fairness (pure host-side)
+# ---------------------------------------------------------------------------
+
+def _rs(rid: int, need: int) -> RequestState:
+    rs = RequestState(rid=rid, prompt=np.zeros(4, np.int32),
+                      max_new_tokens=4)
+    rs.need = need          # blocks this request pretends to need
+    return rs
+
+
+def test_pick_looks_past_blocked_head():
+    """The head-of-line stall regression: an unadmittable head must not
+    block admissible smaller requests behind it — before the bounded
+    lookahead, this pick admitted nothing."""
+    sched = Scheduler(policy="prefill", lookahead=8)
+    for i, need in enumerate((100, 1, 1)):
+        sched.submit(_rs(i, need), tick=0, now=0.0)
+    chosen = sched.pick(free_slots=2, tick=1,
+                        can_admit=lambda rs: rs.need <= 2)
+    assert [rs.rid for rs in chosen] == [1, 2]
+    # the blocked head keeps its queue position and retries next tick
+    assert [rs.rid for rs in sched.waiting] == [0]
+    assert sched.hol_skips >= 1
+
+
+def test_pick_lookahead_is_bounded():
+    """Only `lookahead` blocked entries are looked past — an admissible
+    request beyond the window stays queued (bounded scan, no O(queue)
+    walk per tick)."""
+    sched = Scheduler(policy="prefill", lookahead=2)
+    for i in range(3):
+        sched.submit(_rs(i, 100), tick=0, now=0.0)
+    sched.submit(_rs(3, 1), tick=0, now=0.0)
+    chosen = sched.pick(free_slots=4, tick=1,
+                        can_admit=lambda rs: rs.need <= 2)
+    assert chosen == []
+    assert [rs.rid for rs in sched.waiting] == [0, 1, 2, 3]
+
+
+def test_pick_age_cap_restores_arrival_order():
+    """Fairness: once the blocked head has waited head_age_cap ticks,
+    lookahead is suspended — newer arrivals stop jumping it, so only
+    freed (or preempted) resources can unblock the queue."""
+    sched = Scheduler(policy="prefill", lookahead=8, head_age_cap=10)
+    sched.submit(_rs(0, 100), tick=0, now=0.0)
+    sched.submit(_rs(1, 1), tick=0, now=0.0)
+    can = lambda rs: rs.need <= 2                      # noqa: E731
+    assert [r.rid for r in sched.pick(2, tick=9, can_admit=can)] == [1]
+    sched.submit(_rs(2, 1), tick=9, now=0.0)
+    assert sched.pick(2, tick=10, can_admit=can) == []  # head aged out
+    assert [rs.rid for rs in sched.waiting] == [0, 2]
+    # ...until the head itself becomes admissible
+    assert [r.rid for r in sched.pick(2, tick=11,
+                                      can_admit=lambda rs: True)] == [0, 2]
+
+
+def test_preempt_requeues_at_head_and_restamps_age():
+    sched = Scheduler(policy="prefill")
+    a, b = _rs(0, 1), _rs(1, 1)
+    sched.submit(a, tick=0, now=0.0)
+    sched.submit(b, tick=0, now=0.0)
+    assert len(sched.pick(2, tick=0, can_admit=lambda rs: True)) == 2
+    sched.preempt(a, tick=7)
+    assert sched.waiting[0] is a and a.preempt_count == 1
+    assert a.admit_tick == -1           # admission marks reverted
+    assert a.wait_age(9) == 2           # measured from the preemption
+    assert sched.preempted == 1 and sched.admitted == 1
+
+
+# ---------------------------------------------------------------------------
+# Preemption: stream-invisible eviction under KV-pool pressure
+# ---------------------------------------------------------------------------
+
+def _hol_prompts(cfg):
+    rng = np.random.default_rng(1)
+    return {0: rng.integers(2, cfg.vocab_size, size=4),
+            1: rng.integers(2, cfg.vocab_size, size=33),
+            2: rng.integers(2, cfg.vocab_size, size=4),
+            3: rng.integers(2, cfg.vocab_size, size=4)}
+
+
+def _hol_requests(prompts, sampling=SamplingParams()):
+    """The head-of-line shape: a big arrival (rid 1, 3 blocks at
+    page_size 16) behind one short-lived small, then two long-lived smalls
+    that backfill the retired capacity via lookahead and pin the pool —
+    rid 1 can only ever admit by preempting them."""
+    mk = lambda rid, new: Request(                      # noqa: E731
+        rid=rid, prompt=prompts[rid].copy(), max_new_tokens=new,
+        sampling=sampling)
+    return [mk(0, 4), mk(1, 10), mk(2, 12), mk(3, 12)]
+
+
+@pytest.mark.parametrize("sampling", [
+    SamplingParams(),
+    SamplingParams(temperature=0.8, top_k=50, top_p=0.95),
+], ids=["greedy", "sampled"])
+def test_preemption_is_stream_invisible(small_lm, sampling):
+    """Under a pool too tight for everyone, the aged blocked head preempts
+    later arrivals; every stream — including the preempted requests,
+    which fold generated tokens into their prompt and recompute context
+    bit-exactly on re-admission — matches a roomy-pool engine that never
+    preempts. Sampled streams pin the sample_step resume (same keys after
+    recompute), greedy pins the KV recompute itself."""
+    cfg, params = small_lm
+    prompts = _hol_prompts(cfg)
+    ref_eng = ServeEngine(cfg, params,
+                          EngineConfig(slots=4, max_seq=64, page_size=16))
+    ref = _hol_requests(prompts, sampling)
+    ref_eng.run(ref)
+    ref_out = {r.rid: list(r.out_tokens) for r in ref}
+    assert all(ref_out.values())
+
+    engine = ServeEngine(cfg, params,
+                         EngineConfig(slots=3, max_seq=64, page_size=16,
+                                      num_blocks=4, preemption=True,
+                                      preempt_after_ticks=2))
+    reqs = _hol_requests(prompts, sampling)
+    done = engine.run(reqs, max_ticks=400)
+    assert len(done) == 4
+    assert engine.metrics()["preempted"] > 0
+    assert {r.rid: list(r.out_tokens) for r in reqs} == ref_out
+    # every preemption left the pool consistent: all blocks back at the end
+    assert engine.allocator.free_blocks == engine.allocator.num_blocks - 1
+    pe = [e for e in engine.trace.events() if e["event"] == "preempt"]
+    assert pe and all(e["blocks_freed"] > 0 for e in pe)
+
+
+def test_preemption_off_streams_identical_when_pool_suffices(small_lm):
+    """preemption=False is the old engine: with a pool that (just) fits,
+    streams are bit-identical across the flag — the preempt path is pure
+    addition, invisible when it never fires."""
+    cfg, params = small_lm
+    prompts = _hol_prompts(cfg)
+    out = {}
+    for flag in (True, False):
+        engine = ServeEngine(cfg, params,
+                             EngineConfig(slots=3, max_seq=64, page_size=16,
+                                          preemption=flag,
+                                          preempt_after_ticks=2))
+        reqs = _hol_requests(prompts)
+        engine.run(reqs, max_ticks=400)
+        assert engine.metrics()["preempted"] == 0
+        out[flag] = {r.rid: list(r.out_tokens) for r in reqs}
+    assert out[True] == out[False]
+
+
+def test_preemption_never_targets_earlier_arrivals(small_lm):
+    """The victim relation is a strict arrival order: with preemption on,
+    a later-arrival head can never evict earlier arrivals, so two
+    requests that cannot coexist in the pool serialize instead of
+    ping-ponging (the run terminates with both complete)."""
+    cfg, params = small_lm
+    rng = np.random.default_rng(3)
+    engine = ServeEngine(cfg, params,
+                         EngineConfig(slots=2, max_seq=64, page_size=16,
+                                      num_blocks=4, preemption=True,
+                                      preempt_after_ticks=2))
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(2, cfg.vocab_size, size=33),
+                    max_new_tokens=6)
+            for i in range(2)]                # 3 blocks each, pool holds 3
+    done = engine.run(reqs, max_ticks=400)
+    assert len(done) == 2
+    assert all(len(r.out_tokens) == 6 for r in reqs)
+    assert engine.metrics()["preempted"] == 0   # waits, never cycles
+
+
+# ---------------------------------------------------------------------------
+# Cancellation: queued, mid-chunked-prefill, mid-decode
+# ---------------------------------------------------------------------------
+
+def test_cancel_while_queued(small_lm):
+    cfg, params = small_lm
+    engine = ServeEngine(cfg, params,
+                         EngineConfig(slots=1, max_seq=64, page_size=8))
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(2, cfg.vocab_size, size=5),
+                    max_new_tokens=8) for i in range(2)]
+    for r in reqs:
+        engine.submit(r)
+    engine.step()                      # rid 0 admitted, rid 1 queued
+    assert engine.cancel(1) is True
+    done = engine.run([], max_ticks=100)
+    polled = {r.rid for r in done}
+    assert polled == {0, 1}
+    st = {rs.rid: rs for rs in engine.scheduler.finished}
+    assert st[1].finish_reason == "cancelled" and st[1].out_tokens == []
+    assert st[0].finish_reason == "max_tokens"
+    assert engine.allocator.free_blocks == engine.allocator.num_blocks - 1
+
+
+def test_cancel_mid_chunked_prefill_releases_blocks_and_pins(small_lm):
+    cfg, params = small_lm
+    engine = ServeEngine(cfg, params,
+                         EngineConfig(slots=2, max_seq=128, page_size=16,
+                                      prefix_cache=True, prefill_chunk=16,
+                                      prefill_token_budget=16))
+    rng = np.random.default_rng(0)
+    req = Request(rid=0, prompt=rng.integers(2, cfg.vocab_size, size=60),
+                  max_new_tokens=4)
+    engine.submit(req)
+    engine.step()                      # admits + runs exactly one chunk
+    assert engine._prefilling, "prompt should still be mid-prefill"
+    assert engine.cancel(0) is True
+    assert not engine._prefilling
+    # blocks the chunk published into the radix stay cached — but unpinned,
+    # so every non-free block is evictable: nothing is leaked
+    assert (engine.allocator.free_blocks + engine.radix.evictable_blocks()
+            == engine.allocator.num_blocks - 1)
+    assert total_pins(engine.radix) == 0
+    assert engine.poll()[0].rid == 0
+    # the engine is fully reusable after the mid-prefill cancel
+    req2 = Request(rid=1, prompt=rng.integers(2, cfg.vocab_size, size=7),
+                   max_new_tokens=3)
+    engine.run([req2])
+    assert len(req2.out_tokens) == 3
+
+
+def test_cancel_mid_decode_keeps_tokens_and_reuses_slot(small_lm):
+    cfg, params = small_lm
+    engine = ServeEngine(cfg, params,
+                         EngineConfig(slots=1, max_seq=64, page_size=8))
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(2, cfg.vocab_size, size=6)
+    req = Request(rid=0, prompt=prompt.copy(), max_new_tokens=32)
+    engine.submit(req)
+    while not req.out_tokens:
+        engine.step()
+        engine.poll()
+    assert engine.cancel(0) is True
+    kept = list(req.out_tokens)
+    assert kept, "cancellation must not roll back delivered tokens"
+    st = {rs.rid: rs for rs in engine.scheduler.finished}
+    assert st[0].finish_reason == "cancelled"
+    assert engine.allocator.free_blocks == engine.allocator.num_blocks - 1
+    # ghost device state: the freed slot re-arms for the next request,
+    # whose stream matches a fresh engine's
+    req2 = Request(rid=1, prompt=prompt.copy(), max_new_tokens=4)
+    engine.run([req2])
+    fresh = ServeEngine(cfg, params,
+                        EngineConfig(slots=1, max_seq=64, page_size=8))
+    ref = Request(rid=1, prompt=prompt.copy(), max_new_tokens=4)
+    fresh.run([ref])
+    assert req2.out_tokens == ref.out_tokens
+    n = min(len(kept), len(req2.out_tokens))       # same prompt, greedy:
+    assert req2.out_tokens[:n] == kept[:n]         # common prefix agrees
+
+
+def test_cancel_unknown_and_finished_return_false(small_lm):
+    cfg, params = small_lm
+    engine = ServeEngine(cfg, params, EngineConfig(slots=1, max_seq=64))
+    assert engine.cancel(99) is False
+    req = Request(rid=0, prompt=np.array([5, 6, 7], np.int32),
+                  max_new_tokens=2)
+    engine.run([req])
+    assert engine.cancel(0) is False   # already finished: keeps its tokens
+    assert len(req.out_tokens) == 2
+
+
+# ---------------------------------------------------------------------------
+# FrontDoor: async streams over the engine
+# ---------------------------------------------------------------------------
+
+def test_frontdoor_streams_match_engine_run(small_lm):
+    """Per-token async iteration delivers exactly the engine's greedy
+    streams, with finish reasons, while overlapping host scheduling with
+    the in-flight device tick (drain keep=1)."""
+    cfg, params = small_lm
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(2, cfg.vocab_size, size=int(rng.integers(3, 12)))
+               for _ in range(5)]
+    ref_eng = ServeEngine(cfg, params,
+                          EngineConfig(slots=2, max_seq=64, page_size=8))
+    refs = [Request(rid=i, prompt=p.copy(), max_new_tokens=6)
+            for i, p in enumerate(prompts)]
+    ref_eng.run(refs)
+
+    engine = ServeEngine(cfg, params,
+                         EngineConfig(slots=2, max_seq=64, page_size=8))
+
+    async def serve():
+        async with FrontDoor(engine) as door:
+            streams = [await door.submit(p, max_new_tokens=6)
+                       for p in prompts]
+            got = []
+            for s in streams:
+                toks = []
+                async for tok in s:
+                    toks.append(tok)
+                got.append((toks, s.finish_reason))
+            return got
+
+    got = asyncio.run(serve())
+    for (toks, reason), ref in zip(got, refs):
+        assert toks == ref.out_tokens
+        assert reason == "max_tokens"
+    assert all(r is None for r in engine.slot_req)
+
+
+def test_frontdoor_cancel_stops_stream(small_lm):
+    cfg, params = small_lm
+    engine = ServeEngine(cfg, params,
+                         EngineConfig(slots=1, max_seq=128, page_size=8))
+    prompt = np.array([5, 6, 7, 8, 9], np.int32)
+
+    async def serve():
+        async with FrontDoor(engine) as door:
+            stream = await door.submit(prompt, max_new_tokens=64)
+            got = [await stream.__anext__() for _ in range(3)]
+            assert await stream.cancel() is True
+            async for tok in stream:       # drains whatever was in flight
+                got.append(tok)
+            return got, stream.finish_reason
+
+    got, reason = asyncio.run(serve())
+    assert reason == "cancelled"
+    assert 3 <= len(got) < 64
+    assert engine.allocator.free_blocks == engine.allocator.num_blocks - 1
+
+
+def test_frontdoor_backpressure_bounds_waiting_queue(small_lm):
+    """submit() awaits instead of growing the waiting queue past
+    max_waiting — overload control by pacing, not refusal: every request
+    still completes."""
+    cfg, params = small_lm
+    engine = ServeEngine(cfg, params,
+                         EngineConfig(slots=1, max_seq=64, page_size=8))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(2, cfg.vocab_size, size=5) for _ in range(5)]
+    depth_high = 0
+
+    async def serve():
+        nonlocal depth_high
+        async with FrontDoor(engine, max_waiting=2) as door:
+            streams = []
+            for p in prompts:
+                streams.append(await door.submit(p, max_new_tokens=4))
+                depth_high = max(depth_high,
+                                 len(engine.scheduler.waiting))
+            return [await s.drain() for s in streams]
+
+    outs = asyncio.run(serve())
+    assert depth_high <= 2
+    assert all(len(toks) == 4 for toks in outs)
+
+
+def test_frontdoor_submit_requires_running(small_lm):
+    cfg, params = small_lm
+    engine = ServeEngine(cfg, params, EngineConfig(slots=1, max_seq=64))
+
+    async def bad():
+        door = FrontDoor(engine)
+        with pytest.raises(RuntimeError, match="not running"):
+            await door.submit(np.array([5, 6, 7], np.int32))
+
+    asyncio.run(bad())
+
+
+# ---------------------------------------------------------------------------
+# Engine lifecycle: owned metrics endpoint is really shut down
+# ---------------------------------------------------------------------------
+
+def test_close_releases_metrics_port(small_lm):
+    cfg, params = small_lm
+    engine = ServeEngine(cfg, params, EngineConfig(slots=1, max_seq=64))
+    server = engine.serve_metrics(0)
+    port = server.server_address[1]
+    engine.close()
+    engine.close()                     # idempotent
+    # the listener is gone: the port can be bound again immediately
+    s = socket.socket()
+    s.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    s.bind(("127.0.0.1", port))
+    s.close()
+
+
+def test_engine_context_manager_closes(small_lm):
+    cfg, params = small_lm
+    with ServeEngine(cfg, params,
+                     EngineConfig(slots=1, max_seq=64)) as engine:
+        server = engine.serve_metrics(0)
+        port = server.server_address[1]
+        req = Request(rid=0, prompt=np.array([5, 6, 7], np.int32),
+                      max_new_tokens=2)
+        engine.run([req])
+    assert engine._metrics_server is None
+    s = socket.socket()
+    s.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    s.bind(("127.0.0.1", port))
+    s.close()

@@ -2,6 +2,7 @@
 zero-cost contracts (no new jit traces, bit-identical streams, side-effect-
 free snapshots) the observability subsystem must keep."""
 import json
+import time
 import urllib.error
 import urllib.request
 
@@ -138,6 +139,7 @@ GOLDEN_SCHEMA = {
     "serve_requests_submitted_total": ("counter", ()),
     "serve_requests_admitted_total": ("counter", ()),
     "serve_requests_retired_total": ("counter", ("reason",)),
+    "serve_preemptions_total": ("counter", ()),
     "serve_decode_tokens_total": ("counter", ()),
     "serve_prefill_tokens_total": ("counter", ("kind",)),
     "serve_ticks_total": ("counter", ()),
@@ -316,9 +318,17 @@ def test_request_lifecycle_trace_jsonl(small_lm, tmp_path):
     assert len(done) == 3
     path = tmp_path / "trace.jsonl"
     n = engine.export_trace(path)
-    events = [json.loads(line) for line in path.read_text().splitlines()]
-    assert len(events) == n
-    for ev in events:
+    lines = [json.loads(line) for line in path.read_text().splitlines()]
+    assert len(lines) == n
+    # line 0 anchors the relative perf_counter timestamps to wall-clock:
+    # wall_time_s (epoch seconds) and ts (perf_counter) read back to back
+    # at export time, so consumers recover absolute times via
+    # wall_time_s - (header.ts - event.ts)
+    header, events = lines[0], lines[1:]
+    assert header["event"] == "epoch" and header["rid"] == -1
+    assert abs(header["wall_time_s"] - time.time()) < 300.0
+    assert all(header["ts"] >= e["ts"] for e in events)
+    for ev in lines:
         assert trace_lib.validate_event(ev) is None
     for rid in range(3):
         kinds = [e["event"] for e in events if e["rid"] == rid]
