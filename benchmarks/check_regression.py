@@ -1,8 +1,14 @@
-"""Gate a benchmark JSON against a checked-in baseline.
+"""Gate a benchmark JSON against one or more checked-in baselines.
 
     PYTHONPATH=src python benchmarks/check_regression.py \
         --bench BENCH_serving.json \
-        --baseline benchmarks/baselines/serving_cpu_baseline.json
+        --baseline benchmarks/baselines/serving_cpu_baseline.json \
+        --baseline benchmarks/baselines/faults_smoke_baseline.json
+
+``--baseline`` may repeat: every file's gates are evaluated against the one
+bench report, ALL violated gates are reported (the run never stops at the
+first failure), and a per-baseline summary table closes the output. The
+exit code contract is unchanged: 0 when every gate passes, 1 otherwise.
 
 The baseline's ``metrics`` map dotted report paths to floor values: a
 measured value below ``floor * (1 - max_regression)`` fails the run.
@@ -11,19 +17,18 @@ measured value below ``floor * (1 - max_regression)`` fails the run.
 per request — quantities where growth is the regression). ``hard_floors``
 gate as-is — NOT scaled by ``--max-regression`` — for quantities that are
 already ratios with their noise cancelled in-process (the telemetry
-on/off overhead ratio: 0.95 means 0.95, not 0.95 minus slack). Floors are
-deliberately conservative for shared CI runners (absolute tokens/sec varies
-with host load), while the decode-scaling speedup, the prefix-caching TTFT
-improvement and the prefill-tokens-avoided fraction are same-process ratios
-and gate the actual properties this repo cares about: bucketed decode must
-not regress toward the full-capacity gather, and shared-prefix reuse must
-keep avoiding prompt recomputation.
+on/off overhead ratio: 0.95 means 0.95, not 0.95 minus slack). ``exact``
+entries compare ``==`` (bit-identity flags, zero-recompile contracts).
+Floors are deliberately conservative for shared CI runners (absolute
+tokens/sec varies with host load), while same-process ratios gate the
+actual properties this repo cares about.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import sys
+from typing import List, Tuple
 
 
 def lookup(report: dict, dotted: str):
@@ -35,25 +40,17 @@ def lookup(report: dict, dotted: str):
     return cur
 
 
-def main() -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--bench", required=True)
-    ap.add_argument("--baseline", required=True)
-    ap.add_argument("--max-regression", type=float, default=0.2,
-                    help="allowed fractional drop below the baseline floor")
-    args = ap.parse_args()
-
-    with open(args.bench) as f:
-        report = json.load(f)
-    with open(args.baseline) as f:
-        baseline = json.load(f)
-
-    failures = []
+def check_baseline(report: dict, baseline: dict, bench_name: str,
+                   max_regression: float) -> Tuple[int, List[str]]:
+    """Evaluate every gate in one baseline; returns (gates_run, failures)."""
+    failures: List[str] = []
+    gates = 0
     for path, floor in baseline.get("metrics", {}).items():
+        gates += 1
         got = lookup(report, path)
-        gate = floor * (1.0 - args.max_regression)
+        gate = floor * (1.0 - max_regression)
         if got is None:
-            failures.append(f"{path}: missing from {args.bench}")
+            failures.append(f"{path}: missing from {bench_name}")
             continue
         status = "OK " if got >= gate else "FAIL"
         print(f"{status} {path}: {got:.3f} (baseline {floor:.3f}, "
@@ -61,10 +58,11 @@ def main() -> int:
         if got < gate:
             failures.append(f"{path}: {got:.3f} < gate {gate:.3f}")
     for path, ceiling in baseline.get("ceilings", {}).items():
+        gates += 1
         got = lookup(report, path)
-        gate = ceiling * (1.0 + args.max_regression)
+        gate = ceiling * (1.0 + max_regression)
         if got is None:
-            failures.append(f"{path}: missing from {args.bench}")
+            failures.append(f"{path}: missing from {bench_name}")
             continue
         status = "OK " if got <= gate else "FAIL"
         print(f"{status} {path}: {got:.3f} (ceiling {ceiling:.3f}, "
@@ -72,9 +70,10 @@ def main() -> int:
         if got > gate:
             failures.append(f"{path}: {got:.3f} > gate {gate:.3f}")
     for path, floor in baseline.get("hard_floors", {}).items():
+        gates += 1
         got = lookup(report, path)
         if got is None:
-            failures.append(f"{path}: missing from {args.bench}")
+            failures.append(f"{path}: missing from {bench_name}")
             continue
         status = "OK " if got >= floor else "FAIL"
         print(f"{status} {path}: {got:.3f} (hard floor {floor:.3f}, "
@@ -82,14 +81,49 @@ def main() -> int:
         if got < floor:
             failures.append(f"{path}: {got:.3f} < hard floor {floor:.3f}")
     for path, want in baseline.get("exact", {}).items():
+        gates += 1
         got = lookup(report, path)
         ok = got == want
         print(f"{'OK ' if ok else 'FAIL'} {path}: {got!r} (expected {want!r})")
         if not ok:
             failures.append(f"{path}: {got!r} != {want!r}")
-    if failures:
+    return gates, failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", required=True)
+    ap.add_argument("--baseline", required=True, action="append",
+                    help="baseline JSON; may repeat — all gates from every "
+                         "baseline are evaluated against the one bench "
+                         "report")
+    ap.add_argument("--max-regression", type=float, default=0.2,
+                    help="allowed fractional drop below the baseline floor")
+    args = ap.parse_args()
+
+    with open(args.bench) as f:
+        report = json.load(f)
+
+    summary = []           # (baseline name, gates run, failures)
+    all_failures: List[str] = []
+    for path in args.baseline:
+        with open(path) as f:
+            baseline = json.load(f)
+        print(f"--- {path}")
+        gates, failures = check_baseline(report, baseline, args.bench,
+                                         args.max_regression)
+        summary.append((path, gates, failures))
+        all_failures.extend(failures)
+
+    name_w = max(len(p) for p, _, _ in summary)
+    print(f"\n{'baseline':<{name_w}}  gates  failed  status")
+    for path, gates, failures in summary:
+        status = "PASS" if not failures else "FAIL"
+        print(f"{path:<{name_w}}  {gates:>5}  {len(failures):>6}  {status}")
+
+    if all_failures:
         print("\nregression gate FAILED:", file=sys.stderr)
-        for f_ in failures:
+        for f_ in all_failures:
             print(f"  {f_}", file=sys.stderr)
         return 1
     print("regression gate passed")

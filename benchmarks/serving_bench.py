@@ -575,6 +575,217 @@ def bench_telemetry(cfg, params, args):
     return out
 
 
+def _faults_requests(cfg, args, *, shared, with_tails=True):
+    """Deterministic mixed batch: every prompt is `shared` plus a per-rid
+    tail, so the fault-matrix target (rid 1) holds real radix pins when the
+    shared prefix is already published. Rebuilt per call — fault runs and
+    the fault-free baseline must see bit-identical inputs."""
+    reqs = []
+    for i in range(args.faults_requests):
+        tail = np.random.default_rng(args.seed * 1000 + i).integers(
+            2, cfg.vocab_size, size=6).astype(np.int32)
+        prompt = np.concatenate([shared, tail]) if with_tails else shared
+        reqs.append(Request(rid=i, prompt=prompt.copy(),
+                            max_new_tokens=max(args.max_new, 8),
+                            sampling=SamplingParams()))
+    return reqs
+
+
+def bench_faults(cfg, params, args):
+    """Fault containment: the deterministic injection matrix from
+    serve/faults.fault_matrix, one engine per site, against a fault-free
+    baseline on the identical workload.
+
+    The contracts this section gates: every injected fault retires exactly
+    its target request with a structured reason (never a hang, never an
+    unhandled exception), every *unaffected* stream is bit-identical to the
+    fault-free run, `engine.audit()` reclaims injected pin/block leaks and
+    leaves zero leaked blocks, and no containment path compiles a new jit
+    trace. Plus the two degradation demos — deadline_ms retiring an expired
+    request with reason "deadline", and the tick watchdog degrading on an
+    injected slow step then auto-recovering — and a seeded chaos run whose
+    lifecycle trace is the CI artifact (--faults-trace-out).
+    """
+    from repro.serve import faults as faults_lib
+
+    target = 1
+    shared = np.random.default_rng(args.seed + 17).integers(
+        2, cfg.vocab_size, size=32).astype(np.int32)
+    base = dict(slots=max(args.slots, 4), max_seq=128, page_size=16,
+                prefix_cache=True, prefill_chunk=32, seed=args.seed)
+    sink = lambda rid, tok: None    # noqa: E731 — sink_error needs a sink
+
+    def run_batch(plan, publish):
+        engine = ServeEngine(cfg, params,
+                             EngineConfig(faults=plan, **base))
+        warm = engine.warmup()
+        engine.token_sink = sink
+        if publish:
+            # publish the shared prefix first so batch targets hold pins
+            engine.run([Request(rid=100, prompt=shared.copy(),
+                                max_new_tokens=4)])
+        engine.run(_faults_requests(cfg, args, shared=shared))
+        fin = {rs.rid: rs.finish_reason for rs in engine.scheduler.finished
+               if rs.rid != 100}
+        streams = {rs.rid: tuple(rs.out_tokens)
+                   for rs in engine.scheduler.finished if rs.rid != 100}
+        recompiles = engine.compile_count() - warm
+        return engine, fin, streams, recompiles
+
+    baselines = {}
+    for publish in (False, True):
+        engine, fin, streams, rec = run_batch(None, publish)
+        baselines[publish] = streams
+        engine.close()
+
+    out = {"target_rid": target, "requests": args.faults_requests,
+           "sites": {}}
+    leak_sites = ("radix_pin_leak", "block_leak")
+    for site, plan, reason in faults_lib.fault_matrix(target):
+        publish = site in leak_sites
+        engine, fin, streams, recompiles = run_batch(plan, publish)
+        rep = engine.audit()
+        rep2 = engine.audit()
+        others_ok = all(streams.get(rid) == toks
+                        for rid, toks in baselines[publish].items()
+                        if rid != target)
+        s = {
+            "retire_reason": fin.get(target),
+            "reason_ok": (True if reason is None
+                          else fin.get(target) == reason),
+            "streams_bit_identical": others_ok,
+            "injected": plan.injected.get(site, 0),
+            "reclaimed_refs": rep["reclaimed_refs"],
+            "reclaimed_pins": rep["reclaimed_pins"],
+            "reclaimed_second_audit": (rep2["reclaimed_refs"]
+                                       + rep2["reclaimed_pins"]),
+            "leaked_after": rep["leaked_after"],
+            "recompiles_after_warmup": recompiles,
+            "health": engine.health,
+        }
+        out["sites"][site] = s
+        engine.close()
+        print(f"faults/{site}: reason={s['retire_reason']!r} "
+              f"(ok={s['reason_ok']}), streams bit-identical="
+              f"{s['streams_bit_identical']}, reclaimed "
+              f"{s['reclaimed_refs']}r/{s['reclaimed_pins']}p, leaked "
+              f"{s['leaked_after']} [{recompiles} recompiles]", flush=True)
+
+    sites = out["sites"]
+    out["reasons_structured_all"] = all(s["reason_ok"]
+                                        for s in sites.values())
+    out["streams_bit_identical_all"] = all(s["streams_bit_identical"]
+                                           for s in sites.values())
+    out["all_sites_injected"] = all(s["injected"] >= 1
+                                    for s in sites.values())
+    out["leak_reclaim_ok"] = all(
+        sites[ls]["reclaimed_refs"] + sites[ls]["reclaimed_pins"] > 0
+        and sites[ls]["reclaimed_second_audit"] == 0 for ls in leak_sites)
+    out["leaked_after_max"] = max(s["leaked_after"] for s in sites.values())
+    out["recompiles_total"] = sum(s["recompiles_after_warmup"]
+                                  for s in sites.values())
+
+    # deadline: an expired budget retires with reason "deadline" at the
+    # next tick boundary, waiting or decoding alike
+    engine = ServeEngine(cfg, params, EngineConfig(**base))
+    engine.warmup()
+    engine.submit(Request(rid=0, prompt=np.array([5, 6, 7], np.int32),
+                          max_new_tokens=8, deadline_ms=0.001))
+    time.sleep(0.005)
+    fin = {}
+    for _ in range(20):
+        engine.step()
+        engine.poll()
+        fin = {rs.rid: rs.finish_reason for rs in engine.scheduler.finished}
+        if 0 in fin:
+            break
+    out["deadline"] = {"finish_reason": fin.get(0),
+                       "ok": fin.get(0) == "deadline"}
+    engine.close()
+    print(f"faults/deadline: reason={fin.get(0)!r}", flush=True)
+
+    # watchdog: injected slow steps (after the rolling window arms with
+    # clean samples) degrade the engine; in-threshold traffic recovers it
+    plan = faults_lib.FaultPlan()
+    spec = plan.arm("slow_step", once=False, delay_s=0.2, nth=24)
+    engine = ServeEngine(cfg, params,
+                         EngineConfig(slots=2, max_seq=128, page_size=16,
+                                      faults=plan, watchdog_ticks=2.0,
+                                      watchdog_floor_s=0.0,
+                                      watchdog_recovery=4, seed=args.seed))
+    engine.warmup()
+    wd = {"degraded": False, "recovered": False, "ticks": 0}
+    rid = 0
+
+    def feed(n=2):
+        nonlocal rid
+        for _ in range(n):
+            engine.submit(Request(
+                rid=rid,
+                prompt=np.random.default_rng(rid).integers(
+                    2, cfg.vocab_size, size=6),
+                max_new_tokens=48))
+            rid += 1
+
+    feed()
+    for _ in range(400):
+        if not (engine.scheduler.waiting
+                or any(r is not None for r in engine.slot_req)):
+            feed()
+        engine.step()
+        engine.poll()
+        wd["ticks"] += 1
+        if not wd["degraded"] and engine.health == "degraded":
+            wd["degraded"] = True
+            spec.once = True        # disarm: fired once-specs are spent
+        elif wd["degraded"] and engine.health == "healthy":
+            wd["recovered"] = True
+            break
+    engine.close()
+    out["watchdog"] = wd
+    print(f"faults/watchdog: degraded={wd['degraded']}, "
+          f"recovered={wd['recovered']} after {wd['ticks']} ticks",
+          flush=True)
+
+    # seeded chaos run: reproducible random plan over the mixed batch; the
+    # engine must retire every request with a structured reason and audit
+    # clean; the lifecycle trace is the CI chaos artifact
+    plan = faults_lib.FaultPlan.seeded(
+        args.seed, rids=tuple(range(args.faults_requests)), n=4)
+    engine = ServeEngine(cfg, params, EngineConfig(faults=plan, **base))
+    engine.warmup()
+    engine.token_sink = sink
+    reqs = _faults_requests(cfg, args, shared=shared)
+    engine.run(reqs)
+    fin = {rs.rid: rs.finish_reason for rs in engine.scheduler.finished}
+    rep = engine.audit()
+    out["chaos"] = {
+        "injected": dict(plan.injected),
+        "all_retired": all(r.rid in fin and bool(fin[r.rid])
+                           for r in reqs),
+        "retired_by_reason": {
+            r: sum(1 for v in fin.values() if v == r)
+            for r in sorted(set(fin.values()))},
+        "leaked_after": rep["leaked_after"],
+        "health": engine.health,
+    }
+    if args.faults_trace_out:
+        out["chaos"]["trace_events_written"] = engine.export_trace(
+            args.faults_trace_out)
+        print(f"faults/chaos: wrote "
+              f"{out['chaos']['trace_events_written']} trace events to "
+              f"{args.faults_trace_out}", flush=True)
+    engine.close()
+    print(f"faults/chaos: injected={out['chaos']['injected']}, "
+          f"all_retired={out['chaos']['all_retired']}, leaked "
+          f"{out['chaos']['leaked_after']}", flush=True)
+    print(f"faults: reasons_structured={out['reasons_structured_all']}, "
+          f"streams_bit_identical={out['streams_bit_identical_all']}, "
+          f"leak_reclaim_ok={out['leak_reclaim_ok']}, recompiles "
+          f"{out['recompiles_total']}", flush=True)
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-3b")
@@ -612,9 +823,15 @@ def main() -> None:
     ap.add_argument("--trace-out", default=None,
                     help="write the telemetry section's lifecycle-trace "
                          "JSONL here (the CI artifact)")
+    ap.add_argument("--faults-requests", type=int, default=4,
+                    help="requests in the fault-containment batch")
+    ap.add_argument("--faults-trace-out", default=None,
+                    help="write the chaos run's lifecycle-trace JSONL here "
+                         "(the CI chaos artifact)")
     ap.add_argument("--sections", default="all",
                     help="comma list of sections to run: runs,decode_scaling,"
-                         "prefix,kv_quant,telemetry,overload (default all)")
+                         "prefix,kv_quant,telemetry,overload,faults "
+                         "(default all)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke sizes: fewer requests, smaller capacity")
@@ -637,11 +854,14 @@ def main() -> None:
     for name in ("requests", "scaling_requests", "scaling_reps",
                  "prefix_requests", "prefix_reps", "kv_requests", "kv_reps",
                  "telemetry_requests", "telemetry_reps",
-                 "overload_requests", "overload_blocks"):
+                 "overload_requests", "overload_blocks", "faults_requests"):
         if getattr(args, name) < 1:
             ap.error(f"--{name.replace('_', '-')} must be >= 1")
+    if args.faults_requests < 2:
+        ap.error("--faults-requests must be >= 2 (the fault matrix targets "
+                 "rid 1)")
     sections = (("runs", "decode_scaling", "prefix", "kv_quant", "telemetry",
-                 "overload")
+                 "overload", "faults")
                 if args.sections == "all"
                 else tuple(s.strip() for s in args.sections.split(",") if s))
 
@@ -702,6 +922,8 @@ def main() -> None:
         report["telemetry"] = bench_telemetry(base_cfg, params, args)
     if "overload" in sections:
         report["overload"] = bench_overload(base_cfg, params, args)
+    if "faults" in sections:
+        report["faults"] = bench_faults(base_cfg, params, args)
 
     if mesh_shape:
         # sharded vs single-device: same float/greedy trace, so the delta is

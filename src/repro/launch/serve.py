@@ -60,6 +60,11 @@ def main() -> None:
     ap.add_argument("--preempt-after-ticks", type=int, default=8,
                     help="ticks a blocked queue head must wait before it "
                          "may evict later-arrival decode slots")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request wall-clock budget: a request past it "
+                         "retires with reason 'deadline' at the next tick "
+                         "boundary, keeping tokens generated before expiry "
+                         "(docs/serving.md, Failure handling)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
@@ -156,7 +161,7 @@ def main() -> None:
                          rng.integers(2, cfg.vocab_size,
                                       size=int(rng.integers(4, 12)))]),
                     max_new_tokens=args.max_new, sampling=sampling,
-                    encoder_frames=enc)
+                    encoder_frames=enc, deadline_ms=args.deadline_ms)
             for i in range(args.requests)]
     try:
         done = engine.run(reqs)

@@ -82,6 +82,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import Counter, deque
 from typing import (Any, Callable, Dict, List, NamedTuple, Optional,
                     Tuple)
 
@@ -94,12 +95,23 @@ from repro.models.config import ModelConfig
 from repro.nn.attention import (AttnQuant, CrossKV, KVCache, MLACache,
                                 PagedState)
 from repro.nn.mamba2 import SSMState
+from repro.serve import faults as faults_lib
 from repro.serve import kv_cache as kvc
 from repro.serve import sampling as samp_lib
 from repro.serve import telemetry as tel
 from repro.serve import trace as trace_lib
 from repro.serve.sampling import SamplingParams
 from repro.serve.scheduler import RequestState, Scheduler
+
+# Engine health states (docs/serving.md, Failure handling). HEALTHY serves
+# normally; DEGRADED keeps in-flight streams running but the front door
+# refuses new submits (watchdog trip, contained internal error); DRAINING is
+# the terminal close() state. Exported as the serve_health gauge (0/1/2) and
+# on /healthz (200 only when healthy).
+HEALTHY = "healthy"
+DEGRADED = "degraded"
+DRAINING = "draining"
+_HEALTH_CODE = {HEALTHY: 0, DEGRADED: 1, DRAINING: 2}
 
 
 @dataclasses.dataclass
@@ -112,6 +124,9 @@ class Request:
     sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
     encoder_frames: Optional[np.ndarray] = None   # (frames, d_model), enc-dec
     out_tokens: Optional[List[int]] = None
+    deadline_ms: Optional[float] = None   # wall-clock budget from submit();
+    # an expired request retires with reason "deadline" at the next tick
+    # boundary, releasing blocks/pins/spans exactly like cancel()
 
 
 @dataclasses.dataclass
@@ -160,6 +175,18 @@ class EngineConfig:
     # unadmittable queue entries pick() may look past (0 = strict FCFS)
     head_age_cap: int = 64        # fairness: once a blocked head has waited
     # this many ticks, lookahead is suspended (strict arrival order again)
+    watchdog_ticks: Optional[float] = 8.0   # tick watchdog: a device step
+    # exceeding watchdog_ticks x the rolling p99 tick time (and the floor
+    # below) degrades the engine to DEGRADED instead of blocking forever;
+    # None disables the watchdog
+    watchdog_floor_s: float = 0.25          # absolute minimum trip threshold
+    # (host-CPU tick noise is microseconds; a multiplier alone would trip on
+    # scheduler jitter, not hangs)
+    watchdog_recovery: int = 8    # consecutive in-threshold device steps
+    # after a watchdog trip before the engine recovers to HEALTHY
+    faults: Optional[Any] = None  # serve/faults.FaultPlan: deterministic
+    # fault injection for chaos tests/benches. None (production) keeps every
+    # injection site a single host-side None check
     telemetry: bool = True        # metrics registry + lifecycle traces +
     # tick-phase timing. Entirely host-side: enabling it adds zero jit
     # traces and zero device syncs (benchmarks/serving_bench.py gates the
@@ -221,6 +248,10 @@ class _TickRecord(NamedTuple):
     slots: Tuple[int, ...]   # host-believed active slots at enqueue time
     tokens: jax.Array        # (slots,) int32 sampled tokens (on device)
     done: jax.Array          # (slots,) bool fused EOS/max-token flags
+    ok: jax.Array            # (slots,) bool per-slot finite-logits flags
+    # (computed inside the decode jit — a (slots,) reduction, no extra
+    # sync; checked host-side at drain so a NaN/Inf slot is quarantined
+    # without touching its co-batched neighbours)
 
 
 class ServeEngine:
@@ -438,6 +469,21 @@ class ServeEngine:
         self.token_sink: Optional[Callable[[int, int], None]] = None
         self.retire_sink: Optional[Callable[[int, str], None]] = None
         self._metrics_server: Optional[Any] = None
+        # fault containment (docs/serving.md, Failure handling)
+        self.faults: Optional[faults_lib.FaultPlan] = ecfg.faults
+        self._health = HEALTHY
+        self.health_reason = ""
+        self._has_deadlines = False   # sticky: set by the first deadline
+        # submit, so deadline-free serving never scans for expiry
+        if ecfg.watchdog_recovery < 1:
+            raise ValueError("watchdog_recovery must be >= 1, got "
+                             f"{ecfg.watchdog_recovery}")
+        # rolling window of per-tick device-step sync times; the watchdog
+        # arms once the window has enough samples for a stable p99 and trips
+        # on max(floor, watchdog_ticks * p99)
+        self._tick_window: deque = deque(maxlen=128)
+        self._watchdog_arm = 16
+        self._watchdog_ok_streak = 0
         self.stats: Dict[str, Any] = {"ticks": 0, "decode_tokens": 0,
                                       "prefill_tokens": 0,
                                       "cached_prefix_tokens": 0}
@@ -480,8 +526,14 @@ class ServeEngine:
         self._copy = _CountingJit(self._copy_fn, "cow_copy",
                                   donate_argnums=(0,),
                                   on_trace=on_trace("cow_copy"))
+        # numeric quarantine: zero a possibly-poisoned pool block before it
+        # returns to the allocator (paged only; warmed alongside cow_copy so
+        # fault handling never adds a trace)
+        self._scrub = _CountingJit(self._scrub_fn, "scrub_block",
+                                   donate_argnums=(0,),
+                                   on_trace=on_trace("scrub_block"))
         self._jits = (self._decode, self._prefill, self._reset, self._chunk,
-                      self._copy)
+                      self._copy, self._scrub)
 
         # static metric entries are computed once; metrics() is then a cheap
         # merge of running aggregates — no per-call recomputation (and no
@@ -509,6 +561,8 @@ class ServeEngine:
             self._static_metrics["mesh"] = shard_lib.mesh_summary(mesh)
         if self._tel is not None and self.paged:
             self._tel.pool_blocks_total.set(self.allocator.num_blocks)
+        if self._tel is not None:
+            self._tel.health.set(_HEALTH_CODE[self._health])
         self._publish_gauges()
 
     # --- jitted bodies ---------------------------------------------------
@@ -533,7 +587,15 @@ class ServeEngine:
         keys = jax.vmap(
             lambda s, c: jax.random.fold_in(jax.random.fold_in(key, s), c)
         )(state.sample_seed, state.sample_step)
-        nxt = samp_lib.sample(logits[:, -1], sp, keys)
+        last = logits[:, -1]
+        nxt = samp_lib.sample(last, sp, keys)
+        # numeric guardrail: per-slot finite-logits flag, reduced on device
+        # (one (slots,) bool rides the existing drain sync — no extra host
+        # round trip, no per-token check). Inactive/ghost slots decode
+        # masked garbage that may legitimately be non-finite; they are
+        # exempted here and their outputs are dropped at drain anyway.
+        ok = ~state.active | jnp.all(jnp.isfinite(
+            last.astype(jnp.float32)), axis=-1)
         act_i = state.active.astype(jnp.int32)
         remaining = state.remaining - act_i
         done = state.active & ((nxt == self.ecfg.eos_id) | (remaining <= 0))
@@ -546,7 +608,7 @@ class ServeEngine:
             sample_seed=state.sample_seed,
             sample_step=state.sample_step + 1,
         )
-        return caches, state, nxt, done
+        return caches, state, nxt, done, ok
 
     def _prefill_fn(self, params, tokens, true_length, caches, slot,
                     encoder_frames):
@@ -588,6 +650,13 @@ class ServeEngine:
         slot-private block before decode writes into it."""
         return kvc.copy_pool_block(caches, src, dst)
 
+    def _scrub_fn(self, caches, blk):
+        """Numeric quarantine: zero one pool block (quant pools: payload +
+        EXP_EMPTY exponents) before it returns to the allocator — a
+        quarantined slot's KV may hold NaN/Inf, and recycled-block bytes are
+        still read by the attention gather before masking."""
+        return kvc.scrub_pool_block(caches, blk)
+
     def _reset_fn(self, caches, slot):
         """Zero one slot's recurrent state / cache lengths (empty-context
         admission on the exact-length SSM path)."""
@@ -625,11 +694,17 @@ class ServeEngine:
         if req.rid in self._requests:
             raise ValueError(f"duplicate rid {req.rid}")
 
+        if req.deadline_ms is not None and req.deadline_ms <= 0:
+            raise ValueError(f"deadline_ms must be > 0, got "
+                             f"{req.deadline_ms}")
         rs = RequestState(rid=req.rid,
                           prompt=np.asarray(req.prompt, np.int32),
                           max_new_tokens=int(req.max_new_tokens),
                           sampling=req.sampling,
-                          encoder_frames=req.encoder_frames)
+                          encoder_frames=req.encoder_frames,
+                          deadline_ms=req.deadline_ms)
+        if req.deadline_ms is not None:
+            self._has_deadlines = True
         req.out_tokens = rs.out_tokens          # live alias
         self._requests[req.rid] = req
         self.scheduler.submit(rs, self.stats["ticks"], time.perf_counter())
@@ -659,6 +734,185 @@ class ServeEngine:
         out = [self._requests.pop(rs.rid) for rs in self._finished_unpolled]
         self._finished_unpolled = []
         return out
+
+    # --- fault containment ------------------------------------------------
+
+    @property
+    def health(self) -> str:
+        """Current health state: HEALTHY / DEGRADED / DRAINING."""
+        return self._health
+
+    def _set_health(self, state: str, reason: str) -> None:
+        if state == self._health:
+            return
+        self._health = state
+        self.health_reason = reason
+        # rid -1: an engine-level event, not a request span
+        self.trace.record(-1, "health", state=state, reason=reason)
+        if self._tel is not None:
+            self._tel.health.set(_HEALTH_CODE[state])
+
+    def mark_degraded(self, reason: str) -> None:
+        """Degrade the engine (front-door tick-loop containment, operator
+        action). In-flight work keeps running; the front door refuses new
+        submits and /healthz turns 503 until recovery."""
+        if self._health == HEALTHY:
+            self._set_health(DEGRADED, reason)
+
+    def mark_healthy(self, reason: str = "recovered") -> None:
+        """Explicit recovery from DEGRADED (the watchdog also auto-recovers
+        after `watchdog_recovery` in-threshold device steps). A DRAINING
+        engine never recovers — close() is terminal."""
+        if self._health == DEGRADED:
+            self._watchdog_ok_streak = 0
+            self._set_health(HEALTHY, reason)
+
+    def _fault(self, site: str, rid: Optional[int] = None,
+               tick: Optional[int] = None) -> Optional[faults_lib.FaultSpec]:
+        """Fire one injection site against the attached FaultPlan. The
+        production cost of a site is the `faults is None` check at its
+        caller; this helper is only reached with a plan attached."""
+        spec = self.faults.fire(
+            site, rid=rid,
+            tick=self.stats["ticks"] if tick is None else tick)
+        if spec is not None and self._tel is not None:
+            self._tel.faults_injected(site=site).inc()
+        return spec
+
+    def _retire_unslotted(self, rs: RequestState, reason: str,
+                          now: float, tick: int) -> None:
+        """Retire a request that holds no slot and no blocks (still in the
+        waiting queue, or an admission that was aborted before reserving):
+        close the span, count the reason, make it deliverable."""
+        self.scheduler.retire(rs, tick, now, reason)
+        self.trace.record(rs.rid, "finish", reason=reason,
+                          tokens=len(rs.out_tokens), decode_s=0.0,
+                          tpot_s=0.0)
+        self._finished_unpolled.append(rs)
+        if self.retire_sink is not None:
+            self.retire_sink(rs.rid, reason)
+
+    def _retire_anywhere(self, rid: int, reason: str) -> bool:
+        """Retire a live request wherever it is in the lifecycle — the
+        shared containment path behind deadlines and step-level fault
+        recovery (cancel() is the user-facing twin). Resources are released
+        exactly like cancel(): waiting requests just close their span;
+        slotted requests free blocks, unpin radix chains, and go
+        ghost-active. Returns False if the rid is not live."""
+        now = time.perf_counter()
+        tick = self.stats["ticks"]
+        for rs in self.scheduler.waiting:
+            if rs.rid == rid:
+                self.scheduler.waiting.remove(rs)
+                self._retire_unslotted(rs, reason, now, tick)
+                return True
+        for slot, rs in enumerate(self.slot_req):
+            if rs is not None and rs.rid == rid:
+                if slot in self._prefilling:
+                    self._prefilling.remove(slot)
+                self._retire(slot, rs, reason, now, tick)
+                return True
+        return False
+
+    def _enforce_deadlines(self) -> int:
+        """Retire every live request whose deadline has expired (reason
+        "deadline"), at a tick boundary. Pending ticks are drained first so
+        tokens generated before expiry are delivered and a request that
+        actually finished in flight keeps its real finish reason — the
+        deadline never rolls back completed work. Returns retirements."""
+        if not self._has_deadlines:
+            return 0
+
+        def expired(rs: RequestState, now: float) -> bool:
+            return (rs.deadline_ms is not None
+                    and (now - rs.submit_time) * 1e3 >= rs.deadline_ms)
+
+        now = time.perf_counter()
+        hit = [rs for rs in self.scheduler.waiting if expired(rs, now)]
+        hit += [rs for rs in self.slot_req
+                if rs is not None and expired(rs, now)]
+        if not hit:
+            return 0
+        self._drain()
+        n = 0
+        now = time.perf_counter()
+        for rs in hit:
+            # the drain may have retired it (EOS won the race) — re-check
+            if rs.finish_tick < 0 and self._retire_anywhere(
+                    rs.rid, "deadline"):
+                n += 1
+        return n
+
+    def audit(self) -> Dict[str, Any]:
+        """Invariant audit: cross-check allocator refcounts against slot
+        reservations and radix pins, reclaim provably-leaked references,
+        and refresh the leak gauge. Safe to run on a live engine (drains
+        first so host bookkeeping is current).
+
+        Ownership model (one refcount per owner): a block is owed one
+        reference per live slot listing it in `blocks` or `cached_blocks`,
+        plus one if a radix node holds it; a radix node is owed one pin per
+        live slot listing it in `radix_nodes`. Any *excess* actual refcount
+        or pin is a leak with no possible owner — freed / clamped here and
+        reported. A *deficit* (owners exceed the refcount) cannot be fixed
+        safely (freeing the other owner's reference would corrupt it) and
+        is only reported. Returns the report dict; `leaked_after` == 0 is
+        the bench-gated invariant."""
+        self._drain()
+        report: Dict[str, Any] = {
+            "reclaimed_blocks": 0, "reclaimed_refs": 0,
+            "reclaimed_pins": 0, "mismatches": [],
+            "leaked_before": 0, "leaked_after": 0,
+        }
+        if not self.paged:
+            return report
+        alloc = self.allocator
+        expected: Counter = Counter()
+        pin_owners: Counter = Counter()
+        for rs in self.slot_req:
+            if rs is None:
+                continue
+            expected.update(rs.blocks)
+            expected.update(rs.cached_blocks)
+            for node in rs.radix_nodes:
+                pin_owners[id(node)] += 1
+        nodes = self.radix.nodes() if self.radix is not None else []
+        for node in nodes:
+            expected[node.block] += 1
+        live = alloc.live_block_ids()
+        report["leaked_before"] = sum(
+            1 for b in live if expected[b] == 0)
+        # excess pins first: an unpinned-only node keeps its block (cache-
+        # owned), so pin reclamation never cascades into block reclamation
+        for node in nodes:
+            owed = pin_owners[id(node)]
+            if node.pins > owed:
+                report["reclaimed_pins"] += node.pins - owed
+                report["mismatches"].append(
+                    f"node {node.tokens[:4]}...: pins {node.pins} > "
+                    f"owners {owed} (clamped)")
+                node.pins = owed
+            elif node.pins < owed:
+                report["mismatches"].append(
+                    f"node {node.tokens[:4]}...: pins {node.pins} < "
+                    f"owners {owed} (unfixable deficit)")
+        for b in live:
+            actual = alloc.refcount(b)
+            owed = expected[b]
+            if actual > owed:
+                excess = actual - owed
+                alloc.free([b] * excess)
+                report["reclaimed_refs"] += excess
+                if owed == 0:
+                    report["reclaimed_blocks"] += 1
+            elif actual < owed:
+                report["mismatches"].append(
+                    f"block {b}: refcount {actual} < owners {owed} "
+                    "(unfixable deficit)")
+        report["leaked_after"] = sum(
+            1 for b in alloc.live_block_ids() if expected[b] == 0)
+        self._publish_gauges()
+        return report
 
     # --- admission -------------------------------------------------------
 
@@ -770,6 +1024,16 @@ class ServeEngine:
         until activation, so ghost decode writes keep landing in trash while
         the slot is still prefilling."""
         total = self._blocks_needed(rs)
+        if (self.faults is not None
+                and self._fault("alloc_exhausted", rid=rs.rid)):
+            # injected pool exhaustion: containment is a structured
+            # retirement ("resource_exhausted"), not the requeue-retry loop
+            # a transient same-tick over-commit gets — nothing was reserved
+            # yet, so undoing the admission marks releases everything
+            self.scheduler.revert_admission(rs)
+            self._retire_unslotted(rs, "resource_exhausted",
+                                   time.perf_counter(), self.stats["ticks"])
+            return True
         match, cached, nodes, cached_tokens, cow_src = self._match_prefix(rs)
         if cached:
             # pin + hold before any eviction runs: the matched chain must
@@ -868,6 +1132,12 @@ class ServeEngine:
         self.trace.record(rs.rid, "activate", slot=slot, context_tokens=ctx)
 
     def _run_chunk(self, rs: RequestState) -> None:
+        if (self.faults is not None
+                and self._fault("chunk_error", rid=rs.rid)):
+            # raised before any state moves, so containment in
+            # _run_prefill_chunks sees a consistent request
+            raise faults_lib.InjectedFault("chunk_error", rs.rid,
+                                           self.stats["ticks"])
         p0 = rs.pending_chunks.pop(0)
         C = self.prefill_chunk
         W = kvc.chunk_table_width(p0, C, self.ecfg.page_size,
@@ -934,14 +1204,27 @@ class ServeEngine:
                 if budget < C:
                     break
                 rs = self.slot_req[slot]
-                if rs.pending_chunks:
+                if rs is None or not rs.pending_chunks:
+                    # None: retired mid-pass by chunk containment below
+                    continue
+                try:
                     self._run_chunk(rs)
-                    budget -= C
-                    ran += 1
-                    progressed = True
+                except Exception:
+                    # chunk-level fault containment: one failed chunk costs
+                    # one request ("internal_error"), never the engine —
+                    # _retire frees its blocks and unpins its published
+                    # chain; co-prefilling slots keep their grants
+                    self._retire(slot, rs, "internal_error",
+                                 time.perf_counter(), self.stats["ticks"])
+                    continue
+                budget -= C
+                ran += 1
+                progressed = True
         still: List[int] = []
         for slot in self._prefilling:
             rs = self.slot_req[slot]
+            if rs is None:
+                continue        # retired by chunk containment this tick
             if not rs.pending_chunks:
                 self._activate(slot, rs)
             else:
@@ -960,15 +1243,27 @@ class ServeEngine:
         self.slot_req[slot] = None
         self._host_len[slot] = 0
         if self.paged:
-            self.allocator.free(rs.blocks)
+            # leak-injection sites: model a retire path that forgets its
+            # cleanup. The bookkeeping lists are cleared either way (the
+            # leak is invisible to per-slot accounting — that is the point);
+            # the leaked refcounts/pins are what audit() must find and
+            # reclaim via the ownership cross-check.
+            leak_blocks = (self.faults is not None
+                           and self._fault("block_leak", rid=rs.rid))
+            leak_pins = (self.faults is not None
+                         and self._fault("radix_pin_leak", rid=rs.rid))
+            if not leak_blocks:
+                self.allocator.free(rs.blocks)
             rs.blocks = []
             if rs.cached_blocks:
                 # drop the slot's hold on shared prefix blocks (the cache's
                 # own reference keeps them warm) and unpin the chain
-                self.allocator.free(rs.cached_blocks)
+                if not leak_pins:
+                    self.allocator.free(rs.cached_blocks)
                 rs.cached_blocks = []
             if rs.radix_nodes:
-                self.radix.unpin(rs.radix_nodes)
+                if not leak_pins:
+                    self.radix.unpin(rs.radix_nodes)
                 rs.radix_nodes = []
             self.block_table[slot] = kvc.NULL_BLOCK
         self._finished_unpolled.append(rs)
@@ -1120,13 +1415,7 @@ class ServeEngine:
             if rs.rid == rid:
                 # never admitted: no slot, no blocks — just close the span
                 self.scheduler.waiting.remove(rs)
-                self.scheduler.retire(rs, tick, now, "cancelled")
-                self.trace.record(rid, "finish", reason="cancelled",
-                                  tokens=len(rs.out_tokens), decode_s=0.0,
-                                  tpot_s=0.0)
-                self._finished_unpolled.append(rs)
-                if self.retire_sink is not None:
-                    self.retire_sink(rid, "cancelled")
+                self._retire_unslotted(rs, "cancelled", now, tick)
                 return True
         for slot, rs in enumerate(self.slot_req):
             if rs is not None and rs.rid == rid:
@@ -1158,13 +1447,44 @@ class ServeEngine:
         """Admissions + one enqueued decode tick; returns the number of live
         slots advanced. Sampled tokens and termination flags stay on device
         until the next drain (poll(), admission pressure, or the pending
-        cap) — the hot loop never blocks on a host sync per token."""
+        cap) — the hot loop never blocks on a host sync per token.
+
+        Fault containment: per-request deadlines are enforced first (tick
+        boundaries are the deadline grid), and an InjectedFault escaping
+        the tick body is contained here — its target request retires with
+        reason "internal_error" (an untargeted fault degrades the engine
+        instead), so a step-level failure costs one request, never the
+        process. Real exceptions still propagate: the front door's tick
+        loop is the containment layer for those (it degrades the engine
+        and keeps draining in-flight streams)."""
+        if self._has_deadlines:
+            self._enforce_deadlines()
+        try:
+            return self._step_impl()
+        except faults_lib.InjectedFault as e:
+            if e.rid is not None and self._retire_anywhere(
+                    e.rid, "internal_error"):
+                # containment IS schedule progress (a retirement happened):
+                # returning 0 here would make run()'s dead-queue bail
+                # misread one contained tick as a permanently stuck head
+                return 1
+            self.mark_degraded(f"injected:{e.site}")
+            return 1
+
+    def _step_impl(self) -> int:
         # tick-phase timing brackets host code the tick already runs —
         # perf_counter reads at section boundaries, no block_until_ready, no
         # extra device round trips. The device-step wait itself is observed
         # in _drain, at the host sync that already exists there.
         t = self._tel
         t0 = time.perf_counter() if t is not None else 0.0
+        if self.faults is not None:
+            spec = self._fault("step_error")
+            if spec is not None:
+                # fired before any state moves this tick, so the containment
+                # in step() operates on a consistent engine
+                raise faults_lib.InjectedFault("step_error", spec.rid,
+                                               self.stats["ticks"])
         if self.scheduler.waiting:
             # admission decisions need an up-to-date view of free slots
             self._drain()
@@ -1202,10 +1522,10 @@ class ServeEngine:
         bt = (self.block_table[:, :self._decode_bucket(active)]
               if self.paged else None)
         key = self._key    # per-slot keys are derived inside the decode jit
-        self.caches, self._state, nxt, done = self._decode(
+        self.caches, self._state, nxt, done, ok = self._decode(
             self.params, self.caches, self._state, bt, self._sp_packed, key)
         self._pending.append(_TickRecord(self.stats["ticks"], tuple(active),
-                                         nxt, done))
+                                         nxt, done, ok))
         self._host_len[active] += 1
         self.stats["ticks"] += 1
         if t is not None:
@@ -1246,23 +1566,50 @@ class ServeEngine:
         # device-step phase is measured without adding any sync of its own
         delivered = 0
         for rec in pending:
-            if t is not None:
-                s0 = time.perf_counter()
+            s0 = time.perf_counter()
+            if self.faults is not None:
+                spec = self._fault("slow_step", tick=rec.tick)
+                if spec is not None:
+                    # a slow/hung device step: the stall lands inside the
+                    # sync bracket below, exactly where a real one would,
+                    # so the watchdog observes it the same way
+                    time.sleep(spec.delay_s)
             toks = np.asarray(rec.tokens)
             done = np.asarray(rec.done)
+            oks = np.asarray(rec.ok)
             now = time.perf_counter()
-            if t is not None:
-                sync_s += now - s0
+            sync_s += now - s0
+            self._watchdog(now - s0)
             for slot in rec.slots:
                 rs = self.slot_req[slot]
                 if rs is None:
                     # ghost tick: the slot finished at an earlier (buffered)
                     # tick; its masked decode output is dropped
                     continue
+                if (not oks[slot]
+                        or (self.faults is not None
+                            and self._fault("nan_logits", rid=rs.rid,
+                                            tick=rec.tick))):
+                    self._quarantine(slot, rs, now, rec.tick)
+                    continue
                 tok = int(toks[slot])
                 rs.out_tokens.append(tok)
                 if self.token_sink is not None:
-                    self.token_sink(rs.rid, tok)
+                    try:
+                        if (self.faults is not None
+                                and self._fault("sink_error", rid=rs.rid,
+                                                tick=rec.tick)):
+                            raise faults_lib.InjectedFault(
+                                "sink_error", rs.rid, rec.tick)
+                        self.token_sink(rs.rid, tok)
+                    except Exception:
+                        # sink containment: a failing consumer costs its
+                        # own request ("sink_error"), never the engine or
+                        # its co-batched streams. The token stays on
+                        # out_tokens — delivery to the sink failed, the
+                        # generation didn't.
+                        self._retire(slot, rs, "sink_error", now, rec.tick)
+                        continue
                 if rs.first_token_time is None:
                     rs.first_token_time = now
                     self.trace.record(rs.rid, "first_token",
@@ -1317,6 +1664,49 @@ class ServeEngine:
         leaked = [b for b in alloc.live_block_ids() if b not in reachable]
         t.pool_blocks_leaked.set(len(leaked))
 
+    def _watchdog(self, step_s: float) -> None:
+        """Tick watchdog: one observed device-step sync exceeding
+        max(watchdog_floor_s, watchdog_ticks x rolling-p99) degrades the
+        engine to DEGRADED instead of letting a hung device wedge the
+        whole process silently. Recovery is automatic after
+        `watchdog_recovery` consecutive in-threshold steps. Breaching
+        samples stay out of the rolling window, so a burst of hangs cannot
+        inflate the baseline and mask the next one."""
+        mult = self.ecfg.watchdog_ticks
+        if mult is None:
+            return
+        win = self._tick_window
+        if len(win) >= self._watchdog_arm:
+            thresh = max(self.ecfg.watchdog_floor_s,
+                         mult * float(np.percentile(np.asarray(win), 99)))
+            if step_s > thresh:
+                self._watchdog_ok_streak = 0
+                self.mark_degraded("watchdog")
+                return
+            if self._health == DEGRADED and self.health_reason == "watchdog":
+                self._watchdog_ok_streak += 1
+                if self._watchdog_ok_streak >= self.ecfg.watchdog_recovery:
+                    self.mark_healthy("watchdog_recovered")
+        win.append(step_s)
+
+    def _quarantine(self, slot: int, rs: RequestState, now: float,
+                    tick: int) -> None:
+        """Numeric quarantine: this slot's decode logits went non-finite.
+        Only the poisoned slot retires (reason "numeric_error"); co-batched
+        slots in the same tick record stream on bit-identically — per-slot
+        rows never mix in the decode math, so their logits are untouched by
+        construction. The slot's exclusively-owned blocks (refcount 1 —
+        exactly the ones its decode/prefill wrote that nobody shares) are
+        scrubbed before _retire returns them to the allocator: recycled
+        bytes are still read by the attention gather before masking, and
+        NaN survives a `0 *` mask. Shared blocks were read-only for this
+        slot and stay untouched."""
+        if self.paged:
+            for b in rs.blocks:
+                if self.allocator.refcount(b) == 1:
+                    self.caches = self._scrub(self.caches, np.int32(b))
+        self._retire(slot, rs, "numeric_error", now, tick)
+
     # --- warmup -----------------------------------------------------------
 
     def warmup(self, prefill: bool = True) -> int:
@@ -1332,12 +1722,13 @@ class ServeEngine:
         for i, nb in enumerate(buckets):
             bt = self.block_table[:, :nb] if self.paged else None
             key = jax.random.fold_in(self._key, np.uint32(2**31 + i))
-            self.caches, self._state, _, _ = self._decode(
+            self.caches, self._state, _, _, _ = self._decode(
                 self.params, self.caches, self._state, bt, self._sp_packed,
                 key)
         if prefill and self.paged:
             # chunked prefill: one trace per chunk-table bucket, plus the
-            # copy-on-write block copy — all against the null/trash block
+            # copy-on-write block copy and the quarantine scrub (so fault
+            # handling never compiles) — all against the null/trash block
             toks = np.zeros((1, self.prefill_chunk), np.int32)
             p0 = np.zeros(1, np.int32)
             for w in self.chunk_widths:
@@ -1346,6 +1737,7 @@ class ServeEngine:
                                           row, p0, np.zeros(1, np.int32))
             self.caches = self._copy(self.caches, np.int32(kvc.NULL_BLOCK),
                                      np.int32(kvc.NULL_BLOCK))
+            self.caches = self._scrub(self.caches, np.int32(kvc.NULL_BLOCK))
         elif prefill and self.bucketed:
             ef = (np.zeros((1, self.cfg.encoder.num_frames, self.cfg.d_model),
                            np.float32) if self.cfg.encoder is not None
@@ -1424,6 +1816,9 @@ class ServeEngine:
         m.update(self._static_metrics)
         m["compiles"] = self.compile_count()
         m["compiles_by_fn"] = {j.name: j.compiles for j in self._jits}
+        m["health"] = self._health
+        m["faults_injected"] = (dict(self.faults.injected)
+                                if self.faults is not None else {})
         # prefix-cache counters are always present (zero when disabled) so
         # dashboards/launchers can report them unconditionally
         cached = self.stats["cached_prefix_tokens"]
@@ -1465,19 +1860,27 @@ class ServeEngine:
         if self.registry is None:
             raise ValueError("serve_metrics() requires telemetry=True")
         if self._metrics_server is None:
-            self._metrics_server = tel.start_metrics_server(self.registry,
-                                                            port)
+            self._metrics_server = tel.start_metrics_server(
+                self.registry, port, health_cb=lambda: self._health)
         return self._metrics_server
 
     def close(self) -> None:
-        """Release host-side resources: deliver pending ticks (so no
-        generated tokens are stranded on device) and stop the owned metrics
-        endpoint. Idempotent; the engine remains usable for introspection
-        (metrics(), export_trace()) afterwards."""
-        self._drain()
-        if self._metrics_server is not None:
-            self._metrics_server.stop()
-            self._metrics_server = None
+        """Release host-side resources: enter DRAINING, deliver pending
+        ticks (so no generated tokens are stranded on device) and stop the
+        owned metrics endpoint. Idempotent, and exception-safe: even when
+        the final drain raises (e.g. an injected fault or a poisoned
+        device buffer), the metrics server is stopped, its thread joined,
+        and its port released before the exception propagates. The engine
+        remains usable for introspection (metrics(), export_trace())
+        afterwards; DRAINING is terminal — a closed engine never reports
+        healthy again."""
+        try:
+            self._set_health(DRAINING, "close")
+            self._drain()
+        finally:
+            server, self._metrics_server = self._metrics_server, None
+            if server is not None:
+                server.stop()
 
     def __enter__(self) -> "ServeEngine":
         return self

@@ -35,12 +35,27 @@ from typing import AsyncIterator, List, Optional
 
 import numpy as np
 
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import HEALTHY, Request, ServeEngine
 from repro.serve.sampling import SamplingParams
 
-__all__ = ["FrontDoor", "TokenStream"]
+__all__ = ["FrontDoor", "TokenStream", "EngineUnhealthy"]
 
 _FINISH = object()       # in-queue sentinel terminating a TokenStream
+
+
+class EngineUnhealthy(RuntimeError):
+    """submit() refused because the engine is DEGRADED or DRAINING.
+
+    In-flight streams keep draining (the tick loop still runs); only *new*
+    admissions are refused while unhealthy — the same contract /healthz
+    gives a load balancer. Retry after recovery (the watchdog auto-recovers
+    a watchdog-tripped engine; see docs/serving.md, Failure handling)."""
+
+    def __init__(self, state: str, reason: str):
+        super().__init__(f"engine is {state} ({reason or 'no reason'}); "
+                         "new submits refused")
+        self.state = state
+        self.reason = reason
 
 
 class TokenStream:
@@ -144,10 +159,14 @@ class FrontDoor:
         if not self._running:
             raise RuntimeError("FrontDoor is not running (use 'async with' "
                                "or call start())")
+        self._check_health()
         while (self.max_waiting is not None
                and len(self.engine.scheduler.waiting) >= self.max_waiting):
             self._space.clear()
             await self._space.wait()
+        # the engine may have degraded while this submitter waited for
+        # queue space — refuse here too, never enqueue into a sick engine
+        self._check_health()
         if rid is None:
             rid = next(self._rids)
             while rid in self.engine._requests:
@@ -162,10 +181,17 @@ class FrontDoor:
         self._wake.set()
         return stream
 
+    def _check_health(self) -> None:
+        health = self.engine.health
+        if health != HEALTHY:
+            raise EngineUnhealthy(health, self.engine.health_reason)
+
     async def cancel(self, rid: int) -> bool:
         """Cancel a live request; see ServeEngine.cancel for semantics.
         The request's stream ends with finish_reason "cancelled" (or its
-        real reason, if it won the race and finished first)."""
+        real reason, if it won the race and finished first). Allowed in any
+        health state — cancellation releases resources, which is exactly
+        what a degraded engine wants."""
         cancelled = self.engine.cancel(rid)
         self.engine.reap()
         return cancelled
@@ -182,20 +208,28 @@ class FrontDoor:
         """Stop the tick task. In-flight requests stay live inside the
         engine (their streams resume if the door is started again);
         call engine.close() — or use the context manager — to also stop
-        the owned metrics endpoint."""
+        the owned metrics endpoint. Idempotent and exception-safe: the
+        task handle is detached before awaiting, so a tick task that died
+        on an exception is awaited (and its error surfaced) exactly once,
+        and a second stop() is a no-op."""
         self._running = False
         self._wake.set()
-        if self._task is not None:
-            await self._task
-            self._task = None
+        task, self._task = self._task, None
+        if task is not None:
+            await task
 
     async def __aenter__(self) -> "FrontDoor":
         self.start()
         return self
 
     async def __aexit__(self, *exc) -> bool:
-        await self.stop()
-        self.engine.close()
+        # exception-safe: even when stop() re-raises a tick-task error, the
+        # engine is closed — metrics server stopped, thread joined, port
+        # released (engine.close() is itself idempotent + exception-safe)
+        try:
+            await self.stop()
+        finally:
+            self.engine.close()
         return False
 
     # --- tick task -------------------------------------------------------
@@ -216,9 +250,22 @@ class FrontDoor:
             # dispatch tick N+1, then deliver every tick the device has
             # already retired — the newest enqueued tick keeps executing
             # while the host runs delivery and the streams' consumers
-            eng.step()
-            eng.drain(keep=1)
-            eng.reap()
+            try:
+                eng.step()
+                eng.drain(keep=1)
+                eng.reap()
+            except Exception as e:
+                # tick-level containment: a step/drain failure the engine
+                # could not attribute to one request degrades the engine
+                # (submit() starts refusing) but the loop keeps running —
+                # in-flight streams drain to completion instead of hanging
+                # their consumers on a dead tick task
+                eng.mark_degraded(f"tick_error:{type(e).__name__}")
+                try:
+                    eng.drain()
+                    eng.reap()
+                except Exception:
+                    pass    # the next iteration retries delivery
             if (self.max_waiting is None
                     or len(eng.scheduler.waiting) < self.max_waiting):
                 self._space.set()

@@ -329,3 +329,38 @@ def copy_pool_block(pools, src: jax.Array, dst: jax.Array):
 
     return jax.tree.map(one, pools,
                         is_leaf=lambda c: isinstance(c, _POOL_TYPES))
+
+
+def scrub_pool_block(pools, blk: jax.Array):
+    """Zero one block (every layer's K and V) in place of its current
+    contents — the numeric-quarantine validation step before a block that
+    may hold NaN/Inf payloads goes back to the allocator.
+
+    Freeing alone would be unsound: a recycled block's stale payload is
+    normally harmless (dead positions are masked by context length), but
+    the paged-attention kernel still *reads* the bytes, and NaN propagates
+    through `0 * NaN` in the masked softmax path on some backends. Copying
+    from the null block is no better — ghost-active slots write real
+    (possibly poisoned) values there. So quarantine scrubs: float pools to
+    0, quant pools to zero payload + EXP_EMPTY exponents (the
+    "never-written" scale state, so the first real write re-arms the
+    scale). `blk` is a traced scalar — one jit trace covers every scrub.
+    """
+    def one(pool):
+        assert isinstance(pool, _POOL_TYPES)
+
+        def zero(buf, fill=0):
+            blank = jnp.full((buf.shape[0], 1) + buf.shape[2:], fill,
+                             buf.dtype)
+            return jax.lax.dynamic_update_slice(
+                buf, blank, (0, blk) + (0,) * (buf.ndim - 2))
+
+        if isinstance(pool, QuantPagedKVCache):
+            return QuantPagedKVCache(
+                zero(pool.k), zero(pool.v),
+                zero(pool.k_exp, kvq.EXP_EMPTY),
+                zero(pool.v_exp, kvq.EXP_EMPTY), bits=pool.bits)
+        return PagedKVCache(zero(pool.k), zero(pool.v))
+
+    return jax.tree.map(one, pools,
+                        is_leaf=lambda c: isinstance(c, _POOL_TYPES))

@@ -130,11 +130,17 @@ class RadixCache:
         """Pool block ids held by resident nodes — what the telemetry
         refcount-leak check can account to the cache (one cache-owned
         reference per node)."""
+        return [n.block for n in self.nodes()]
+
+    def nodes(self) -> List["RadixNode"]:
+        """Every resident node (the root sentinel excluded) — the engine's
+        invariant audit cross-checks each node's pin count and cache-owned
+        block reference against live slot reservations."""
         out, stack = [], [self.root]
         while stack:
             n = stack.pop()
             for c in n.children.values():
-                out.append(c.block)
+                out.append(c)
                 stack.append(c)
         return out
 

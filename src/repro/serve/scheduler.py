@@ -49,7 +49,11 @@ class RequestState:
     finish_time: Optional[float] = None
     slot: int = -1
     blocks: List[int] = dataclasses.field(default_factory=list)
-    finish_reason: str = ""        # "eos" | "max_tokens" | "cancelled"
+    finish_reason: str = ""        # tel.ServingMetrics.retired_by_reason keys
+    # per-request deadline in ms from submit (None = no deadline). Enforced
+    # at tick boundaries: an expired request retires with reason "deadline"
+    # and frees blocks/pins/spans exactly like cancel().
+    deadline_ms: Optional[float] = None
     # preemption lifecycle: how many times this request was evicted from a
     # decode slot under KV pressure, and the tick of the latest eviction —
     # age-based policies (lookahead fairness, the engine's preemption gate)
@@ -236,6 +240,17 @@ class Scheduler:
             self._tel.queue_depth.set(len(self.waiting))
         return chosen
 
+    def revert_admission(self, rs: RequestState) -> None:
+        """Undo the admission marks pick() stamped, without touching the
+        queue: the one shared implementation behind requeue_front/preempt
+        and the engine's fault-containment paths (a retirement that never
+        really admitted must not count as admitted in queue metrics)."""
+        if rs.admit_tick >= 0:
+            self._queue_tick_sum -= rs.queue_ticks
+            self.admitted -= 1
+            rs.admit_tick = -1
+            rs.admit_time = None
+
     def requeue_front(self, rs: RequestState) -> None:
         """Return a picked-but-unadmittable request to the queue head.
 
@@ -244,11 +259,7 @@ class Scheduler:
         later pick's reservation no longer fits after the earlier ones
         landed. The admission marks are reverted so queue metrics stay
         truthful."""
-        if rs.admit_tick >= 0:
-            self._queue_tick_sum -= rs.queue_ticks
-            self.admitted -= 1
-            rs.admit_tick = -1
-            rs.admit_time = None
+        self.revert_admission(rs)
         self.waiting.appendleft(rs)
         if self._tel is not None:
             self._tel.queue_depth.set(len(self.waiting))
@@ -265,11 +276,7 @@ class Scheduler:
         self.preempted += 1
         rs.preempt_count += 1
         rs.preempt_tick = tick
-        if rs.admit_tick >= 0:
-            self._queue_tick_sum -= rs.queue_ticks
-            self.admitted -= 1
-            rs.admit_tick = -1
-            rs.admit_time = None
+        self.revert_admission(rs)
         self.waiting.appendleft(rs)
         if self._tel is not None:
             self._tel.preemptions.inc()

@@ -400,12 +400,23 @@ class ServingMetrics:
         self.retired_eos = self._retired.labels(reason="eos")
         self.retired_max_tokens = self._retired.labels(reason="max_tokens")
         self.retired_cancelled = self._retired.labels(reason="cancelled")
+        self.retired_deadline = self._retired.labels(reason="deadline")
+        self.retired_numeric = self._retired.labels(reason="numeric_error")
+        self.retired_internal = self._retired.labels(reason="internal_error")
+        self.retired_resource = self._retired.labels(
+            reason="resource_exhausted")
+        self.retired_sink = self._retired.labels(reason="sink_error")
         # one dispatch table for every retire site (scheduler + engine):
         # an unknown reason KeyErrors loudly instead of silently miscounting
         self.retired_by_reason = {
             "eos": self.retired_eos,
             "max_tokens": self.retired_max_tokens,
             "cancelled": self.retired_cancelled,
+            "deadline": self.retired_deadline,
+            "numeric_error": self.retired_numeric,
+            "internal_error": self.retired_internal,
+            "resource_exhausted": self.retired_resource,
+            "sink_error": self.retired_sink,
         }
         self.preemptions = r.counter(
             "serve_preemptions_total",
@@ -435,6 +446,12 @@ class ServingMetrics:
         self.prefix_evictions = r.counter(
             "serve_prefix_cache_evictions_total",
             "Radix prefix-cache blocks evicted under pool pressure").labels()
+        self._faults_injected = r.counter(
+            "serve_faults_injected_total",
+            "Faults fired by an attached FaultPlan, by injection site "
+            "(always 0 in production: the plan is test/bench-only)",
+            labels=("site",))
+        self.faults_injected = self._faults_injected.labels  # site= handle
         # gauges
         self.slots_active = r.gauge(
             "serve_slots_active", "Slots generating or mid-prefill").labels()
@@ -460,6 +477,10 @@ class ServingMetrics:
         self.mesh_devices = r.gauge(
             "serve_mesh_devices",
             "Mesh axis sizes (1 when serving unsharded)", labels=("axis",))
+        self.health = r.gauge(
+            "serve_health",
+            "Engine health state: 0=healthy, 1=degraded, 2=draining "
+            "(docs/serving.md, Failure handling)").labels()
         # histograms
         self.ttft = r.histogram(
             "serve_ttft_seconds", "Submit -> first token",
@@ -487,30 +508,43 @@ class ServingMetrics:
 # ---------------------------------------------------------------------------
 
 def start_metrics_server(registry: MetricsRegistry, port: int,
-                         host: str = "127.0.0.1"):
-    """Serve ``/metrics`` (Prometheus text) and ``/metrics.json`` for
-    `registry` on a daemon thread. Returns the live ``HTTPServer`` — its
-    actual port is ``server.server_address[1]`` (pass port=0 for an
-    ephemeral port in tests). Call ``server.stop()`` to stop it: that ends
-    ``serve_forever`` *and* closes the listening socket (``shutdown()``
-    alone leaves the socket open until process exit — the leak long-lived
-    embedders must not inherit; ``ServeEngine.close()`` and the launcher go
-    through ``stop()``)."""
+                         host: str = "127.0.0.1",
+                         health_cb=None):
+    """Serve ``/metrics`` (Prometheus text), ``/metrics.json``, and — when
+    `health_cb` is given — ``/healthz`` for `registry` on a daemon thread.
+    `health_cb` returns the engine health string ("healthy"/"degraded"/
+    "draining"); ``/healthz`` answers 200 with a JSON body when healthy and
+    503 otherwise, so a load balancer can stop routing to a degraded or
+    draining engine while ``/metrics`` keeps working for the post-mortem.
+    Returns the live ``HTTPServer`` — its actual port is
+    ``server.server_address[1]`` (pass port=0 for an ephemeral port in
+    tests). Call ``server.stop()`` to stop it: that ends ``serve_forever``
+    *and* closes the listening socket (``shutdown()`` alone leaves the
+    socket open until process exit — the leak long-lived embedders must not
+    inherit; ``ServeEngine.close()`` and the launcher go through
+    ``stop()``)."""
     from http.server import BaseHTTPRequestHandler, HTTPServer
 
     class Handler(BaseHTTPRequestHandler):
         def do_GET(self):          # noqa: N802 (http.server API)
+            status = 200
             if self.path.split("?")[0] == "/metrics":
                 body = registry.to_prometheus_text().encode()
                 ctype = "text/plain; version=0.0.4; charset=utf-8"
             elif self.path.split("?")[0] == "/metrics.json":
                 body = registry.to_json().encode()
                 ctype = "application/json"
+            elif (self.path.split("?")[0] == "/healthz"
+                  and health_cb is not None):
+                state = str(health_cb())
+                body = json.dumps({"status": state}).encode()
+                ctype = "application/json"
+                status = 200 if state == "healthy" else 503
             else:
                 self.send_response(404)
                 self.end_headers()
                 return
-            self.send_response(200)
+            self.send_response(status)
             self.send_header("Content-Type", ctype)
             self.send_header("Content-Length", str(len(body)))
             self.end_headers()

@@ -36,8 +36,10 @@ tests/test_telemetry.py pins it):
   preempt:      slot, tokens_generated, blocks_freed   (the span stays open:
                  the request is requeued and later re-admitted — its next
                  admit/activate pair is the resume)
-  finish:       reason ("eos"|"max_tokens"|"cancelled"), tokens, decode_s,
-                 tpot_s
+  finish:       reason (a ServingMetrics.retired_by_reason key), tokens,
+                 decode_s, tpot_s
+  health:       state ("healthy"|"degraded"|"draining"), reason — engine
+                 health transitions (rid is -1: not a request event)
   epoch:        wall_time_s  (export-time header, not a ring event: one
                  ``time.time()`` <-> ``perf_counter`` pair anchoring every
                  monotonic ts to the wall clock, so traces correlate across
@@ -65,6 +67,7 @@ EVENT_FIELDS: Dict[str, tuple] = {
     "first_token": ("ttft_s",),
     "preempt": ("slot", "tokens_generated", "blocks_freed"),
     "finish": ("reason", "tokens", "decode_s", "tpot_s"),
+    "health": ("state", "reason"),
     "epoch": ("wall_time_s",),
 }
 

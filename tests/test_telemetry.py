@@ -147,6 +147,7 @@ GOLDEN_SCHEMA = {
     "serve_prefix_cache_hits_total": ("counter", ()),
     "serve_prefix_cache_misses_total": ("counter", ()),
     "serve_prefix_cache_evictions_total": ("counter", ()),
+    "serve_faults_injected_total": ("counter", ("site",)),
     "serve_slots_active": ("gauge", ()),
     "serve_queue_depth": ("gauge", ()),
     "serve_kv_pool_blocks_total": ("gauge", ()),
@@ -156,6 +157,7 @@ GOLDEN_SCHEMA = {
     "serve_kv_pool_blocks_leaked": ("gauge", ()),
     "serve_radix_nodes": ("gauge", ()),
     "serve_mesh_devices": ("gauge", ("axis",)),
+    "serve_health": ("gauge", ()),
     "serve_ttft_seconds": ("histogram", ()),
     "serve_tpot_seconds": ("histogram", ()),
     "serve_queue_wait_seconds": ("histogram", ()),
