@@ -642,6 +642,11 @@ def bench_faults(cfg, params, args):
            "sites": {}}
     leak_sites = ("radix_pin_leak", "block_leak")
     for site, plan, reason in faults_lib.fault_matrix(target):
+        if site == "process_crash":
+            # deliberate: a process crash is not containable by design —
+            # the recovery section (bench_recovery) exercises it end to
+            # end via journal replay in a fresh engine
+            continue
         publish = site in leak_sites
         engine, fin, streams, recompiles = run_batch(plan, publish)
         rep = engine.audit()
@@ -786,6 +791,243 @@ def bench_faults(cfg, params, args):
     return out
 
 
+def _recovery_requests(cfg, args):
+    """Deterministic mixed workload (even rids greedy, odd rids sampled) —
+    rebuilt per call so every run in the section sees identical inputs."""
+    rng = np.random.default_rng(args.seed + 31)
+    reqs = []
+    for i in range(args.recovery_requests):
+        reqs.append(Request(
+            rid=i,
+            prompt=rng.integers(2, cfg.vocab_size,
+                                size=int(rng.integers(4, 14))),
+            max_new_tokens=args.max_new,
+            sampling=SamplingParams(temperature=0.8 if i % 2 else 0.0,
+                                    top_k=50 if i % 2 else 0)))
+    return reqs
+
+
+def _journal_client_streams(path):
+    """The client-visible stream per rid, straight from the journal bytes:
+    token records in file order across every epoch. Duplicated or dropped
+    tokens in recovery would show up here — nowhere to hide."""
+    streams = {}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                continue                     # torn tail
+            if rec["kind"] == "submit":
+                streams[rec["rid"]] = []     # rid reuse opens fresh
+            elif rec["kind"] == "token":
+                streams[rec["rid"]].append(rec["tok"])
+    return streams
+
+
+def bench_recovery(cfg, params, args):
+    """Durability: crash-at-tick-N journal recovery, snapshot/restore, and
+    live handoff, every gate exact.
+
+    The contracts this section gates: after a process kill at each sampled
+    tick index, journal replay + ``ServeEngine.recover`` resumes every
+    in-flight request so the concatenated client-visible streams (read back
+    from the journal itself) are bit-identical to an uninterrupted run —
+    greedy and sampled, zero duplicated and zero dropped tokens; replay is
+    idempotent across the multi-epoch file; the recovered engine compiles
+    nothing after warmup (static-shape invariant holds through recovery);
+    a snapshot()/restore() round trip finishes mid-flight streams
+    bit-identically; and a live handoff (same config, and to a different
+    kv_bits config) finishes every transferred request.
+
+    ``--recovery-journal-out`` / ``--recovery-snapshot-dir`` keep the last
+    crash's journal and the mid-flight snapshot as CI artifacts.
+    """
+    import shutil
+    import tempfile
+
+    from repro.serve import faults as faults_lib
+    from repro.serve import journal as journal_lib
+
+    base = dict(slots=max(2, args.slots // 2), max_seq=128,
+                seed=args.seed)
+    workdir = tempfile.mkdtemp(prefix="recovery_bench_")
+
+    def drive(engine, reqs):
+        for r in reqs:
+            engine.submit(r)
+        try:
+            while (engine.scheduler.waiting
+                   or any(s is not None for s in engine.slot_req)):
+                engine.step()
+                engine.poll()
+        except faults_lib.ProcessCrash:
+            return False
+        engine.poll()
+        return True
+
+    # --- reference: the uninterrupted ground truth -----------------------
+    ref_eng = ServeEngine(cfg, params, EngineConfig(**base))
+    ref_eng.warmup()
+    drive(ref_eng, _recovery_requests(cfg, args))
+    ref = {rs.rid: list(rs.out_tokens) for rs in ref_eng.scheduler.finished}
+    ref_ticks = ref_eng.stats["ticks"]
+    ref_eng.close()
+
+    ks = sorted(set(
+        max(1, round(ref_ticks * (i + 1) / (args.recovery_crash_ticks + 1)))
+        for i in range(args.recovery_crash_ticks)))
+    out = {"requests": args.recovery_requests, "reference_ticks": ref_ticks,
+           "crash_ticks": ks, "crashes": {}}
+    dup_total = drop_total = rec_recompiles = 0
+    greedy_ok = sampled_ok = replay_ok = True
+    last_journal = None
+
+    for k in ks:
+        jpath = f"{workdir}/crash_{k}.journal"
+        plan = faults_lib.FaultPlan()
+        plan.arm("process_crash", tick=k)
+        eng = ServeEngine(cfg, params, EngineConfig(
+            journal=journal_lib.RequestJournal(jpath), faults=plan,
+            **base))
+        eng._owns_journal = True
+        finished_clean = drive(eng, _recovery_requests(cfg, args))
+        if finished_clean:                    # k past the end: no kill
+            eng.close()
+            continue
+        state = journal_lib.replay(jpath)
+        del eng                               # simulated death: no close()
+
+        eng2 = ServeEngine.recover(cfg, params, jpath,
+                                   ecfg=EngineConfig(**base))
+        warm = eng2.warmup()
+        drive(eng2, [])
+        recompiles = eng2.compile_count() - warm
+        eng2.close()
+        rec_recompiles += recompiles
+
+        final = journal_lib.replay(jpath)
+        idem = final == journal_lib.replay(jpath) and not final.live
+        replay_ok &= idem
+        streams = _journal_client_streams(jpath)
+        dup = drop = 0
+        identical = True
+        for rid, want in ref.items():
+            got = streams.get(rid, [])
+            if got != want:
+                identical = False
+                dup += max(0, len(got) - len(want))
+                drop += max(0, len(want) - len(got))
+                if rid % 2:
+                    sampled_ok = False
+                else:
+                    greedy_ok = False
+        dup_total += dup
+        drop_total += drop
+        out["crashes"][str(k)] = {
+            "live_at_kill": len(state.live),
+            "epochs": final.epochs,
+            "bit_identical": identical,
+            "duplicated_tokens": dup,
+            "dropped_tokens": drop,
+            "replay_idempotent": idem,
+            "recovered_recompiles": recompiles,
+        }
+        last_journal = jpath
+        print(f"recovery: kill@tick {k}: live={len(state.live)}, "
+              f"bit_identical={identical}, recompiles={recompiles}",
+              flush=True)
+
+    # --- snapshot round trip ---------------------------------------------
+    snapdir = args.recovery_snapshot_dir or f"{workdir}/snapshot"
+    eng = ServeEngine(cfg, params, EngineConfig(**base))
+    reqs = _recovery_requests(cfg, args)
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(max(1, ref_ticks // 2)):
+        eng.step()
+    eng.poll()
+    path = eng.snapshot(snapdir)
+    manifest = json.load(open(f"{path}/MANIFEST.json"))
+    pre = {rs.rid: list(rs.out_tokens) for rs in eng.scheduler.finished}
+    eng.close()
+    eng3 = ServeEngine.restore(cfg, params, snapdir)
+    restored_n = len(eng3._requests)
+    drive(eng3, [])
+    post = {rs.rid: list(rs.out_tokens) for rs in eng3.scheduler.finished}
+    eng3.close()
+    snap_streams = dict(pre)
+    snap_streams.update(post)
+    snap_ok = snap_streams == ref
+    out["snapshot"] = {
+        "restored_requests": restored_n,
+        "manifest_kind_ok": manifest["extra"]["kind"] == "serve_snapshot",
+        "roundtrip_bit_identical": snap_ok,
+    }
+    print(f"recovery: snapshot roundtrip restored={restored_n}, "
+          f"bit_identical={snap_ok}", flush=True)
+
+    # --- live handoff: same config, then a reconfiguring target ----------
+    hand = {}
+    for label, tgt_over in (("same_config", {}),
+                            ("diff_config", {"kv_bits": 8})):
+        src = ServeEngine(cfg, params, EngineConfig(**base))
+        reqs = _recovery_requests(cfg, args)
+        for r in reqs:
+            src.submit(r)
+        for _ in range(max(1, ref_ticks // 2)):
+            src.step()
+        src.poll()
+        pre = {rs.rid: list(rs.out_tokens)
+               for rs in src.scheduler.finished}
+        live = set(src._requests.keys())
+        tgt = ServeEngine(cfg, params, EngineConfig(**{**base, **tgt_over}))
+        summary = src.handoff(tgt)
+        drive(tgt, [])
+        post = {rs.rid: list(rs.out_tokens)
+                for rs in tgt.scheduler.finished}
+        failed = len(live - set(post.keys()))
+        full = dict(pre)
+        full.update(post)
+        hand[label] = {
+            "transferred": summary["transferred"],
+            "failed_in_flight": failed,
+            "streams_bit_identical": full == ref,
+        }
+        src.close()
+        tgt.close()
+        print(f"recovery: handoff {label}: "
+              f"transferred={summary['transferred']}, failed={failed}, "
+              f"bit_identical={full == ref}", flush=True)
+    out["handoff"] = {
+        "transferred": hand["same_config"]["transferred"],
+        "failed_in_flight": hand["same_config"]["failed_in_flight"],
+        "streams_bit_identical": hand["same_config"]
+                                     ["streams_bit_identical"],
+        "diff_config_failed_in_flight": hand["diff_config"]
+                                            ["failed_in_flight"],
+    }
+
+    out["streams_bit_identical_greedy"] = greedy_ok
+    out["streams_bit_identical_sampled"] = sampled_ok
+    out["duplicated_tokens_total"] = dup_total
+    out["dropped_tokens_total"] = drop_total
+    out["replay_idempotent_all"] = replay_ok
+    out["recovered_recompiles_total"] = rec_recompiles
+
+    if args.recovery_journal_out and last_journal is not None:
+        shutil.copyfile(last_journal, args.recovery_journal_out)
+        print(f"wrote {args.recovery_journal_out}")
+    print(f"recovery: greedy_identical={greedy_ok}, "
+          f"sampled_identical={sampled_ok}, dup={dup_total}, "
+          f"dropped={drop_total}, replay_idempotent={replay_ok}, "
+          f"recompiles={rec_recompiles}", flush=True)
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-3b")
@@ -828,9 +1070,20 @@ def main() -> None:
     ap.add_argument("--faults-trace-out", default=None,
                     help="write the chaos run's lifecycle-trace JSONL here "
                          "(the CI chaos artifact)")
+    ap.add_argument("--recovery-requests", type=int, default=6,
+                    help="requests in the durability (recovery) section")
+    ap.add_argument("--recovery-crash-ticks", type=int, default=4,
+                    help="number of kill points sampled across the "
+                         "reference run's tick range")
+    ap.add_argument("--recovery-journal-out", default=None,
+                    help="keep the last crash's multi-epoch journal here "
+                         "(the CI durability artifact)")
+    ap.add_argument("--recovery-snapshot-dir", default=None,
+                    help="write the mid-flight engine snapshot here "
+                         "(the CI durability artifact)")
     ap.add_argument("--sections", default="all",
                     help="comma list of sections to run: runs,decode_scaling,"
-                         "prefix,kv_quant,telemetry,overload,faults "
+                         "prefix,kv_quant,telemetry,overload,faults,recovery "
                          "(default all)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--quick", action="store_true",
@@ -851,17 +1104,20 @@ def main() -> None:
         args.kv_requests = 12
         args.kv_reps = 2
         args.overload_requests = 24
+        args.recovery_requests = 4
+        args.recovery_crash_ticks = 2
     for name in ("requests", "scaling_requests", "scaling_reps",
                  "prefix_requests", "prefix_reps", "kv_requests", "kv_reps",
                  "telemetry_requests", "telemetry_reps",
-                 "overload_requests", "overload_blocks", "faults_requests"):
+                 "overload_requests", "overload_blocks", "faults_requests",
+                 "recovery_requests", "recovery_crash_ticks"):
         if getattr(args, name) < 1:
             ap.error(f"--{name.replace('_', '-')} must be >= 1")
     if args.faults_requests < 2:
         ap.error("--faults-requests must be >= 2 (the fault matrix targets "
                  "rid 1)")
     sections = (("runs", "decode_scaling", "prefix", "kv_quant", "telemetry",
-                 "overload", "faults")
+                 "overload", "faults", "recovery")
                 if args.sections == "all"
                 else tuple(s.strip() for s in args.sections.split(",") if s))
 
@@ -924,6 +1180,8 @@ def main() -> None:
         report["overload"] = bench_overload(base_cfg, params, args)
     if "faults" in sections:
         report["faults"] = bench_faults(base_cfg, params, args)
+    if "recovery" in sections:
+        report["recovery"] = bench_recovery(base_cfg, params, args)
 
     if mesh_shape:
         # sharded vs single-device: same float/greedy trace, so the delta is

@@ -134,6 +134,20 @@ def restore(ckpt_dir: str | pathlib.Path, step: int, like_tree,
     return jax.tree_util.tree_unflatten(treedef, new_leaves)
 
 
+def load_flat(ckpt_dir: str | pathlib.Path,
+              step: int) -> Dict[str, np.ndarray]:
+    """Load a checkpoint's raw flat {key: np.ndarray} without a like_tree.
+
+    `restore` needs a template tree with matching shapes — fine for model
+    params, useless for consumers that discover the contents from the
+    checkpoint itself (the serving engine's snapshot/restore path, debug
+    tooling). Host arrays only; no device placement, no dtype coercion."""
+    root = pathlib.Path(ckpt_dir) / f"step_{step:08d}"
+    with open(root / "shard_00000.msgpack", "rb") as f:
+        payload = msgpack.unpackb(f.read())
+    return {key: _decode(rec) for key, rec in payload.items()}
+
+
 def read_manifest(ckpt_dir: str | pathlib.Path, step: int) -> dict:
     p = pathlib.Path(ckpt_dir) / f"step_{step:08d}" / "MANIFEST.json"
     return json.loads(p.read_text())

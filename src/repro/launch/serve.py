@@ -13,11 +13,18 @@ Example:
     (radix-tree shared-prefix KV reuse + chunked prefill; --shared-prefix
      makes the demo requests share a synthetic system prompt so the cache
      has something to hit)
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b \
+      --journal /tmp/serve.journal --snapshot-dir /tmp/serve-snap
+    (durable serving: write-ahead request journal + final snapshot;
+     SIGINT/SIGTERM drain in-flight streams and snapshot instead of dying
+     mid-tick; add --resume to recover the journaled requests after a
+     crash — see docs/serving.md, Durability and recovery)
 """
 from __future__ import annotations
 
 import argparse
 import json
+import signal
 
 import numpy as np
 
@@ -79,7 +86,25 @@ def main() -> None:
     ap.add_argument("--trace-out", default=None,
                     help="write per-request lifecycle traces as JSONL here "
                          "on exit (schema: docs/observability.md)")
+    ap.add_argument("--journal", default=None,
+                    help="write-ahead request journal (append-only JSONL "
+                         "of submits / delivered tokens / retires); after "
+                         "a crash, --resume replays it and finishes every "
+                         "in-flight request bit-exactly")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="write a final engine snapshot (config + live "
+                         "request records, ckpt manifest format) here on "
+                         "shutdown — including signal-driven shutdown")
+    ap.add_argument("--resume", action="store_true",
+                    help="recover from --journal instead of submitting "
+                         "synthetic requests (engine flags must match the "
+                         "original run — in particular --seed)")
+    ap.add_argument("--audit-interval", type=int, default=None,
+                    help="run the engine invariant audit automatically "
+                         "every N ticks (default: on demand only)")
     args = ap.parse_args()
+    if args.resume and not args.journal:
+        ap.error("--resume requires --journal")
 
     from repro.launch.mesh import ensure_host_devices, parse_mesh_spec
     mesh_shape = parse_mesh_spec(args.mesh) if args.mesh else None
@@ -103,20 +128,35 @@ def main() -> None:
         ap.error("--metrics-port requires telemetry (drop --no-telemetry)")
     if args.trace_out is not None and not telemetry:
         ap.error("--trace-out requires telemetry (drop --no-telemetry)")
-    engine = ServeEngine(
-        cfg, params,
-        EngineConfig(slots=args.slots, max_seq=args.max_seq, paged=paged,
-                     page_size=args.page_size, policy=args.policy,
-                     num_blocks=args.num_blocks,
-                     kv_bits=args.kv_bits if args.kv_bits != 16 else None,
-                     prefix_cache=args.prefix_cache,
-                     prefill_chunk=args.prefill_chunk,
-                     prefill_token_budget=args.prefill_budget,
-                     preemption=not args.no_preemption,
-                     preempt_after_ticks=args.preempt_after_ticks,
-                     telemetry=telemetry,
-                     seed=args.seed),
-        mesh=mesh)
+    ecfg = EngineConfig(slots=args.slots, max_seq=args.max_seq, paged=paged,
+                        page_size=args.page_size, policy=args.policy,
+                        num_blocks=args.num_blocks,
+                        kv_bits=args.kv_bits if args.kv_bits != 16 else None,
+                        prefix_cache=args.prefix_cache,
+                        prefill_chunk=args.prefill_chunk,
+                        prefill_token_budget=args.prefill_budget,
+                        preemption=not args.no_preemption,
+                        preempt_after_ticks=args.preempt_after_ticks,
+                        telemetry=telemetry,
+                        audit_interval=args.audit_interval,
+                        seed=args.seed)
+    if args.resume:
+        # crash recovery: replay the journal and resume every request that
+        # was live at the kill with exactly its undelivered suffix
+        engine = ServeEngine.recover(cfg, params, args.journal, ecfg=ecfg,
+                                     mesh=mesh)
+        print(f"resumed {len(engine.scheduler.waiting)} live requests "
+              f"from {args.journal}")
+    else:
+        if args.journal:
+            import dataclasses
+
+            from repro.serve.journal import RequestJournal
+            ecfg = dataclasses.replace(ecfg,
+                                       journal=RequestJournal(args.journal))
+        engine = ServeEngine(cfg, params, ecfg, mesh=mesh)
+        if args.journal:
+            engine._owns_journal = True   # launcher hands over the writer
 
     if args.metrics_port is not None:
         # engine-owned endpoint: engine.close() (the finally below) stops
@@ -155,16 +195,56 @@ def main() -> None:
            if cfg.encoder is not None else None)
     shared = (rng.integers(2, cfg.vocab_size, size=args.shared_prefix)
               if args.shared_prefix else np.zeros(0, np.int64))
-    reqs = [Request(rid=i,
-                    prompt=np.concatenate(
-                        [shared,
-                         rng.integers(2, cfg.vocab_size,
-                                      size=int(rng.integers(4, 12)))]),
-                    max_new_tokens=args.max_new, sampling=sampling,
-                    encoder_frames=enc, deadline_ms=args.deadline_ms)
-            for i in range(args.requests)]
+    reqs = ([] if args.resume else
+            [Request(rid=i,
+                     prompt=np.concatenate(
+                         [shared,
+                          rng.integers(2, cfg.vocab_size,
+                                       size=int(rng.integers(4, 12)))]),
+                     max_new_tokens=args.max_new, sampling=sampling,
+                     encoder_frames=enc, deadline_ms=args.deadline_ms)
+             for i in range(args.requests)])
+
+    # graceful shutdown: the first SIGINT/SIGTERM transitions the engine to
+    # DRAINING (in-flight streams finish; queued requests stay put for the
+    # final snapshot/journal), the second breaks out of the serve loop
+    # immediately. Either way the engine snapshots and closes instead of
+    # dying mid-tick.
+    signals = {"count": 0}
+
+    def _on_signal(signum, frame):
+        signals["count"] += 1
+
+    for sig in (signal.SIGINT, signal.SIGTERM):
+        signal.signal(sig, _on_signal)
+
     try:
-        done = engine.run(reqs)
+        for req in reqs:
+            engine.submit(req)
+        done = []
+        draining = False
+        ticks = 0
+        while (engine.scheduler.waiting
+               or any(r is not None for r in engine.slot_req)):
+            if signals["count"] and not draining:
+                engine.begin_draining("signal")
+                draining = True
+                print("draining: finishing in-flight streams "
+                      "(signal again to stop now)")
+            if signals["count"] > 1:
+                break
+            if draining and all(r is None for r in engine.slot_req):
+                break       # in-flight done; queued wait in the snapshot
+            made_progress = (engine.step() > 0
+                             or not engine.scheduler.waiting)
+            done.extend(engine.poll())
+            ticks += 1
+            if ticks >= 100000:
+                break
+            if not made_progress and not any(r is not None
+                                             for r in engine.slot_req):
+                break       # queue head can never admit — bail, don't spin
+        done.extend(engine.poll())
         for r in done:
             print(f"req {r.rid}: prompt={len(r.prompt)} toks -> "
                   f"generated {len(r.out_tokens or [])}: "
@@ -179,6 +259,11 @@ def main() -> None:
         if args.trace_out:
             n = engine.export_trace(args.trace_out)
             print(f"wrote {n} trace events to {args.trace_out}")
+        if args.snapshot_dir:
+            path = engine.snapshot(args.snapshot_dir)
+            live = len(engine.scheduler.waiting)
+            print(f"snapshot: {path} ({live} undelivered requests "
+                  "captured)")
     finally:
         engine.close()
 

@@ -81,6 +81,7 @@ Cache backends:
 from __future__ import annotations
 
 import dataclasses
+import json
 import time
 from collections import Counter, deque
 from typing import (Any, Callable, Dict, List, NamedTuple, Optional,
@@ -106,12 +107,16 @@ from repro.serve.scheduler import RequestState, Scheduler
 # Engine health states (docs/serving.md, Failure handling). HEALTHY serves
 # normally; DEGRADED keeps in-flight streams running but the front door
 # refuses new submits (watchdog trip, contained internal error); DRAINING is
-# the terminal close() state. Exported as the serve_health gauge (0/1/2) and
-# on /healthz (200 only when healthy).
+# terminal — no new admissions (begin_draining lets queued work wait out a
+# snapshot; close() drains and shuts down); HANDOFF is the transient state
+# while live requests transfer to another engine, ending in DRAINING.
+# Exported as the serve_health gauge (0/1/2/3) and on /healthz (200 only
+# when healthy).
 HEALTHY = "healthy"
 DEGRADED = "degraded"
 DRAINING = "draining"
-_HEALTH_CODE = {HEALTHY: 0, DEGRADED: 1, DRAINING: 2}
+HANDOFF = "handoff"
+_HEALTH_CODE = {HEALTHY: 0, DEGRADED: 1, DRAINING: 2, HANDOFF: 3}
 
 
 @dataclasses.dataclass
@@ -187,6 +192,15 @@ class EngineConfig:
     faults: Optional[Any] = None  # serve/faults.FaultPlan: deterministic
     # fault injection for chaos tests/benches. None (production) keeps every
     # injection site a single host-side None check
+    journal: Optional[Any] = None  # serve/journal.RequestJournal: write-
+    # ahead ledger of client-visible state (submits, delivered tokens,
+    # retirements). The engine appends an epoch header at attach and
+    # journals every submit / drained token / retire; ServeEngine.recover()
+    # replays the file after a crash and resumes every live request
+    # bit-exactly
+    audit_interval: Optional[int] = None  # run audit() automatically every
+    # N ticks (None = on-demand only); every run — automatic or on-demand —
+    # increments the serve_audit_runs_total counter
     telemetry: bool = True        # metrics registry + lifecycle traces +
     # tick-phase timing. Entirely host-side: enabling it adds zero jit
     # traces and zero device syncs (benchmarks/serving_bench.py gates the
@@ -194,6 +208,39 @@ class EngineConfig:
     # down to a dead branch / no-op recorder
     trace_capacity: int = 8192    # lifecycle-trace ring-buffer bound
     seed: int = 0
+
+
+# EngineConfig fields that hold live objects (or policies built from them)
+# and therefore cannot round-trip through a JSON snapshot; snapshot() lists
+# the non-None ones under "non_serializable" and restore() expects the
+# caller to re-supply them via `overrides` when needed.
+_ECFG_SKIP = ("faults", "journal", "attn_grau", "precision")
+
+
+def _ecfg_to_dict(ecfg: EngineConfig) -> Tuple[Dict[str, Any], List[str]]:
+    """(json-safe field dict, names of skipped non-serializable fields)."""
+    d: Dict[str, Any] = {}
+    skipped: List[str] = []
+    for f in dataclasses.fields(EngineConfig):
+        v = getattr(ecfg, f.name)
+        if f.name in _ECFG_SKIP:
+            if v is not None:
+                skipped.append(f.name)
+            continue
+        d[f.name] = list(v) if isinstance(v, tuple) else v
+    return d, skipped
+
+
+def _ecfg_from_dict(d: Dict[str, Any],
+                    overrides: Optional[Dict[str, Any]] = None
+                    ) -> EngineConfig:
+    kw = dict(d)
+    for k in ("prefill_buckets", "decode_buckets"):
+        if kw.get(k) is not None:
+            kw[k] = tuple(kw[k])
+    if overrides:
+        kw.update(overrides)
+    return EngineConfig(**kw)
 
 
 class _CountingJit:
@@ -471,6 +518,19 @@ class ServeEngine:
         self._metrics_server: Optional[Any] = None
         # fault containment (docs/serving.md, Failure handling)
         self.faults: Optional[faults_lib.FaultPlan] = ecfg.faults
+        # durability: the write-ahead request journal (serve/journal.py).
+        # Appends happen only at host-code points (submit, drain) — the
+        # journal can never add a jit trace or device sync.
+        self.journal = ecfg.journal
+        self._owns_journal = False   # recover() builds and owns its writer
+        if self.journal is not None:
+            # one epoch header per engine attach: replay counts restarts
+            self.journal.begin_epoch({"reason": "attach"})
+        if ecfg.audit_interval is not None and ecfg.audit_interval < 1:
+            raise ValueError("audit_interval must be >= 1, got "
+                             f"{ecfg.audit_interval}")
+        self._audit_interval = ecfg.audit_interval
+        self._last_audit_tick = 0
         self._health = HEALTHY
         self.health_reason = ""
         self._has_deadlines = False   # sticky: set by the first deadline
@@ -707,6 +767,15 @@ class ServeEngine:
             self._has_deadlines = True
         req.out_tokens = rs.out_tokens          # live alias
         self._requests[req.rid] = req
+        if self.journal is not None:
+            # WAL ordering: the submission is durable before the engine
+            # acts on it — a crash after this line recovers the request
+            self.journal.record_submit(
+                req.rid, rs.prompt, rs.max_new_tokens,
+                sampling={"temperature": req.sampling.temperature,
+                          "top_k": req.sampling.top_k,
+                          "top_p": req.sampling.top_p},
+                deadline_ms=req.deadline_ms)
         self.scheduler.submit(rs, self.stats["ticks"], time.perf_counter())
         self.trace.record(req.rid, "submit", prompt_len=plen,
                           max_new_tokens=int(req.max_new_tokens))
@@ -739,7 +808,7 @@ class ServeEngine:
 
     @property
     def health(self) -> str:
-        """Current health state: HEALTHY / DEGRADED / DRAINING."""
+        """Current health state: HEALTHY / DEGRADED / DRAINING / HANDOFF."""
         return self._health
 
     def _set_health(self, state: str, reason: str) -> None:
@@ -788,6 +857,8 @@ class ServeEngine:
         self.trace.record(rs.rid, "finish", reason=reason,
                           tokens=len(rs.out_tokens), decode_s=0.0,
                           tpot_s=0.0)
+        if self.journal is not None:
+            self.journal.record_retire(rs.rid, reason)
         self._finished_unpolled.append(rs)
         if self.retire_sink is not None:
             self.retire_sink(rs.rid, reason)
@@ -858,6 +929,8 @@ class ServeEngine:
         safely (freeing the other owner's reference would corrupt it) and
         is only reported. Returns the report dict; `leaked_after` == 0 is
         the bench-gated invariant."""
+        if self._tel is not None:
+            self._tel.audit_runs.inc()
         self._drain()
         report: Dict[str, Any] = {
             "reclaimed_blocks": 0, "reclaimed_refs": 0,
@@ -1266,6 +1339,8 @@ class ServeEngine:
                     self.radix.unpin(rs.radix_nodes)
                 rs.radix_nodes = []
             self.block_table[slot] = kvc.NULL_BLOCK
+        if self.journal is not None:
+            self.journal.record_retire(rs.rid, reason)
         self._finished_unpolled.append(rs)
         if self.retire_sink is not None:
             self.retire_sink(rs.rid, reason)
@@ -1300,17 +1375,7 @@ class ServeEngine:
         self.trace.record(rs.rid, "preempt", slot=slot,
                           tokens_generated=len(rs.out_tokens),
                           blocks_freed=freed)
-        self.slot_req[slot] = None
-        self._host_len[slot] = 0
-        self.allocator.free(rs.blocks)
-        rs.blocks = []
-        if rs.cached_blocks:
-            self.allocator.free(rs.cached_blocks)
-            rs.cached_blocks = []
-        if rs.radix_nodes:
-            self.radix.unpin(rs.radix_nodes)
-            rs.radix_nodes = []
-        self.block_table[slot] = kvc.NULL_BLOCK
+        self._release_slot_resources(slot, rs)
         new = rs.out_tokens[rs.folded_tokens:]
         if new:
             # tokens generated since the last fold become context; the
@@ -1322,6 +1387,28 @@ class ServeEngine:
                 [rs.prompt, np.asarray(new, np.int32)])
             rs.max_new_tokens -= len(new)
             rs.folded_tokens = len(rs.out_tokens)
+        self.scheduler.preempt(rs, self.stats["ticks"])
+
+    def _release_slot_resources(self, slot: int, rs: RequestState) -> None:
+        """Release a slotted request's pool holds (blocks, cached prefix
+        references, radix pins) and make its device slot ghost-active —
+        NULLed table row sends decode writes to trash, the remaining
+        countdown bounds the ghost ticks, and _activate fully re-arms the
+        state on reuse. Shared by preemption and handoff extraction; adds
+        no device ops and no jit traces. The request's delivered tokens,
+        sampling state, and fold bookkeeping are untouched."""
+        self.slot_req[slot] = None
+        self._host_len[slot] = 0
+        if self.paged:
+            self.allocator.free(rs.blocks)
+            rs.blocks = []
+            if rs.cached_blocks:
+                self.allocator.free(rs.cached_blocks)
+                rs.cached_blocks = []
+            if rs.radix_nodes:
+                self.radix.unpin(rs.radix_nodes)
+                rs.radix_nodes = []
+            self.block_table[slot] = kvc.NULL_BLOCK
         rs.slot = -1
         rs.table_row = None
         rs.prefill_pos = rs.prefill_ctx = 0
@@ -1330,7 +1417,6 @@ class ServeEngine:
         rs.cached_prefix_tokens = 0
         rs.published_blocks = 0
         rs.radix_tail = None
-        self.scheduler.preempt(rs, self.stats["ticks"])
 
     def _maybe_preempt(self) -> int:
         """Admit-or-preempt: when the blocked queue head has waited
@@ -1431,6 +1517,284 @@ class ServeEngine:
                 return True
         return False    # finished since the caller last polled
 
+    # --- durability: snapshot / restore / recovery / handoff --------------
+
+    def begin_draining(self, reason: str = "drain") -> None:
+        """Stop admitting new work: slotted requests run to completion,
+        waiting requests stay queued (preserved for a final snapshot).
+        DRAINING is terminal — used by the launcher's signal handlers and
+        as the handoff source's end state; close() still performs the
+        actual shutdown."""
+        self._set_health(DRAINING, reason)
+
+    def _live_records(self) -> List[dict]:
+        """Every live request (waiting or slotted, including mid-prefill)
+        as a durable record (RequestState.to_record: original submission +
+        delivered stream, folds undone), in arrival order — the one
+        extraction snapshot(), recover() cross-checks, and handoff() all
+        build on."""
+        recs = [rs.to_record() for rs in self.scheduler.waiting]
+        recs += [rs.to_record() for rs in self.slot_req if rs is not None]
+        recs.sort(key=lambda r: r["arrival_seq"])
+        return recs
+
+    def _readmit(self, records: List[dict],
+                 journal_known_rids=frozenset()) -> int:
+        """Re-admit durable request records through normal admission: each
+        becomes a fresh waiting RequestState with its delivered tokens
+        folded into the prompt (the preemption resume mechanism), so
+        chunked prefill recomputes the full context bit-exactly and
+        _activate re-arms sample_step at len(out_tokens) — greedy and
+        sampled streams continue exactly where they stopped.
+
+        Journaling: records whose rid is not in `journal_known_rids` are
+        written to the attached journal (submit + every delivered token)
+        so a fresh journal is a self-contained ledger; rids already live
+        in the journal (recovery replays the same file, handoff moves it)
+        are not re-journaled — a second submit for a live rid is, by
+        design, replay corruption.
+
+        A record whose budget is spent or whose last delivered token is
+        EOS had its retire record torn off the journal tail by the crash:
+        it is retired immediately (repairing the journal) instead of being
+        queued. Returns the number of records processed."""
+        now = time.perf_counter()
+        tick = self.stats["ticks"]
+        n = 0
+        for rec in sorted(records, key=lambda r: r.get("arrival_seq", 0)):
+            rid = int(rec["rid"])
+            if rid in self._requests:
+                raise ValueError(f"readmit of live rid {rid}")
+            prompt = np.asarray(rec["prompt"], np.int32)
+            budget = int(rec["max_new_tokens"])
+            delivered = [int(t) for t in rec.get("delivered") or ()]
+            if len(prompt) + budget > self.ecfg.max_seq:
+                raise ValueError(
+                    f"rid {rid}: prompt ({len(prompt)}) + max_new_tokens "
+                    f"({budget}) exceeds this engine's max_seq "
+                    f"({self.ecfg.max_seq})")
+            sd = rec.get("sampling") or {}
+            sp = SamplingParams(
+                temperature=float(sd.get("temperature", 0.0)),
+                top_k=int(sd.get("top_k", 0)),
+                top_p=float(sd.get("top_p", 1.0)))
+            deadline_ms = rec.get("deadline_ms")
+            if (self.journal is not None
+                    and rid not in journal_known_rids):
+                self.journal.record_submit(rid, prompt, budget,
+                                           sampling=dict(sd) or None,
+                                           deadline_ms=deadline_ms)
+                for tok in delivered:
+                    self.journal.record_token(rid, tok)
+            rs = RequestState(rid=rid, prompt=prompt,
+                              max_new_tokens=budget, sampling=sp,
+                              deadline_ms=deadline_ms)
+            rs.out_tokens.extend(delivered)
+            remaining = budget - len(delivered)
+            if delivered:
+                # the fold: delivered tokens become context to recompute
+                rs.prompt = np.concatenate(
+                    [prompt, np.asarray(delivered, np.int32)])
+                rs.max_new_tokens = remaining
+                rs.folded_tokens = len(delivered)
+            req = Request(rid=rid, prompt=prompt, max_new_tokens=budget,
+                          sampling=sp, deadline_ms=deadline_ms)
+            req.out_tokens = rs.out_tokens          # live alias
+            if deadline_ms is not None:
+                self._has_deadlines = True
+            self._requests[rid] = req
+            self.scheduler.submit(rs, tick, now)
+            self.trace.record(rid, "submit", prompt_len=len(prompt),
+                              max_new_tokens=budget)
+            self.trace.record(rid, "restore",
+                              delivered_tokens=len(delivered))
+            if self._tel is not None:
+                self._tel.restored_requests.inc()
+            n += 1
+            if remaining <= 0 or (delivered
+                                  and delivered[-1] == self.ecfg.eos_id):
+                # its retirement was lost with the journal tail — finish it
+                reason = ("eos" if delivered
+                          and delivered[-1] == self.ecfg.eos_id
+                          else "max_tokens")
+                self.scheduler.waiting.remove(rs)
+                self._retire_unslotted(rs, reason, now, tick)
+                continue
+            self.trace.record(rid, "queued",
+                              queue_depth=len(self.scheduler.waiting))
+        return n
+
+    def snapshot(self, ckpt_dir, step: Optional[int] = None,
+                 keep: int = 3):
+        """Write a durable engine snapshot through the ckpt manifest format
+        (staged dir + MANIFEST.json-last atomic commit): the EngineConfig,
+        every live request record (scheduler queue and slot states — prompt,
+        delivered/folded tokens, sampling), and the radix-cache pin summary.
+        KV pools are deliberately NOT persisted: restore re-admits every
+        request through absolute-grid chunked prefill, which recomputes
+        pool contents bit-exactly — persisting them would add gigabytes per
+        snapshot to save work recovery already does for free, exactly.
+        Returns the committed checkpoint path; `step` defaults to the
+        engine tick."""
+        self._drain()
+        if self.journal is not None:
+            self.journal.sync()
+        records = self._live_records()
+        ecfg_dict, skipped = _ecfg_to_dict(self.ecfg)
+        payload = {
+            "format": 1,
+            "tick": self.stats["ticks"],
+            "engine_config": ecfg_dict,
+            "non_serializable": skipped,
+            "requests": records,
+            "radix": (self.radix.pin_summary()
+                      if self.radix is not None else None),
+        }
+        blob = np.frombuffer(json.dumps(payload).encode(), np.uint8)
+        from repro.ckpt import checkpoint as ckpt
+        path = ckpt.save(ckpt_dir,
+                         self.stats["ticks"] if step is None else int(step),
+                         {"snapshot": blob}, keep=keep,
+                         extra={"kind": "serve_snapshot",
+                                "tick": self.stats["ticks"],
+                                "live_requests": len(records)})
+        if self._tel is not None:
+            self._tel.snapshots.inc()
+        return path
+
+    @staticmethod
+    def _load_snapshot(ckpt_dir, step: Optional[int]) -> dict:
+        from repro.ckpt import checkpoint as ckpt
+        if step is None:
+            step = ckpt.latest_step(ckpt_dir)
+            if step is None:
+                raise ValueError(f"no committed snapshot under {ckpt_dir}")
+        blob = ckpt.load_flat(ckpt_dir, int(step))["snapshot"]
+        return json.loads(blob.tobytes().decode())
+
+    @classmethod
+    def restore(cls, cfg: ModelConfig, params, ckpt_dir, *,
+                step: Optional[int] = None, dtype=jnp.float32, mesh=None,
+                overrides: Optional[Dict[str, Any]] = None,
+                journal=None) -> "ServeEngine":
+        """Build a fresh engine from a snapshot() checkpoint and re-admit
+        every captured request. `overrides` patches EngineConfig fields
+        (including the non-serializable ones the snapshot could not carry);
+        `journal` attaches a write-ahead journal to the restored engine.
+        ecfg.seed must survive the round trip unchanged for sampled streams
+        to resume bit-exactly — it does, as a plain serialized field."""
+        payload = cls._load_snapshot(ckpt_dir, step)
+        ecfg = _ecfg_from_dict(payload["engine_config"], overrides)
+        if journal is not None:
+            ecfg = dataclasses.replace(ecfg, journal=journal)
+        eng = cls(cfg, params, ecfg, dtype=dtype, mesh=mesh)
+        known = frozenset()
+        if journal is not None:
+            # resuming onto an existing journal: rids already live in it
+            # must not be re-journaled (and a fresh journal knows none)
+            from repro.serve import journal as journal_lib
+            known = frozenset(journal_lib.replay(journal.path).live.keys())
+        eng._readmit(payload["requests"], journal_known_rids=known)
+        return eng
+
+    @classmethod
+    def recover(cls, cfg: ModelConfig, params, journal_path, *,
+                ecfg: Optional[EngineConfig] = None, snapshot_dir=None,
+                snapshot_step: Optional[int] = None, dtype=jnp.float32,
+                mesh=None, overrides: Optional[Dict[str, Any]] = None,
+                fsync_every: int = 16) -> "ServeEngine":
+        """Crash recovery: replay the journal, build a fresh engine, and
+        resume every request that was live at the kill — each stream
+        continues with exactly its undelivered suffix (bit-identical to an
+        uninterrupted run, greedy and sampled), never a duplicate or
+        dropped token, because only drain-delivered tokens were journaled
+        and the fold recomputes everything else.
+
+        The engine config comes from `ecfg` or from a snapshot under
+        `snapshot_dir` (the launcher writes one on clean shutdown; either
+        source must preserve the original seed). The same journal file is
+        reopened for appending — recovery adds a new epoch header, so one
+        file spans every crash/recover cycle and replay stays idempotent.
+        The recovered engine owns the journal writer (close() closes it)."""
+        from repro.serve import journal as journal_lib
+        state = journal_lib.replay(journal_path)
+        if ecfg is None:
+            if snapshot_dir is None:
+                raise ValueError("recover() needs ecfg or snapshot_dir "
+                                 "for the engine config")
+            payload = cls._load_snapshot(snapshot_dir, snapshot_step)
+            ecfg = _ecfg_from_dict(payload["engine_config"], overrides)
+        jr = journal_lib.RequestJournal(journal_path,
+                                        fsync_every=fsync_every)
+        eng = cls(cfg, params, dataclasses.replace(ecfg, journal=jr),
+                  dtype=dtype, mesh=mesh)
+        eng._owns_journal = True
+        records = [{"rid": lr.rid, "prompt": lr.prompt,
+                    "max_new_tokens": lr.max_new_tokens,
+                    "sampling": lr.sampling, "deadline_ms": lr.deadline_ms,
+                    "delivered": lr.delivered, "arrival_seq": i}
+                   for i, lr in enumerate(state.live.values())]
+        eng._readmit(records,
+                     journal_known_rids=frozenset(state.live.keys()))
+        return eng
+
+    def handoff(self, target: "ServeEngine") -> Dict[str, Any]:
+        """Live handoff: drain pending ticks, extract every live request,
+        release this engine's pool holds, and re-admit them on `target` —
+        which may run a different config (kv_bits, mesh, slot count, pool
+        size). Zero-downtime reconfiguration: streams continue under the
+        same rids (the async front door rebinds its sinks), bit-exactly by
+        the preemption-fold construction — which is why eos_id and seed
+        must match (the engine seed is folded into every per-request
+        sampling key).
+
+        This engine passes through the HANDOFF health state (exported on
+        the gauge and /healthz, which turns 503) and ends DRAINING
+        (terminal). If this engine holds the journal and `target` has
+        none, the journal moves with the requests and a handoff epoch is
+        appended — one ledger spans both engines' lifetimes."""
+        if target is self:
+            raise ValueError("handoff target must be a different engine")
+        if target._health == DRAINING:
+            raise ValueError("handoff target is draining/closed")
+        if int(target.ecfg.eos_id) != int(self.ecfg.eos_id):
+            raise ValueError("handoff target must keep eos_id")
+        if int(target.ecfg.seed) != int(self.ecfg.seed):
+            raise ValueError("handoff target must keep seed: sampled "
+                             "resume folds it into every per-request key")
+        self._set_health(HANDOFF, "handoff")
+        self._drain()
+        records = self._live_records()
+        for slot, rs in enumerate(self.slot_req):
+            if rs is None:
+                continue
+            if slot in self._prefilling:
+                self._prefilling.remove(slot)
+            self._release_slot_resources(slot, rs)
+        self.scheduler.waiting.clear()
+        for rec in records:
+            # closes the span on this recorder (the request is no longer
+            # ours); the target opens a fresh one on readmission
+            self.trace.record(rec["rid"], "handoff",
+                              tokens_generated=len(rec["delivered"]))
+            self._requests.pop(rec["rid"], None)
+        known = frozenset()
+        if self.journal is not None and target.journal is None:
+            target.journal = self.journal
+            target._owns_journal = self._owns_journal
+            self.journal = None
+            self._owns_journal = False
+            target.journal.begin_epoch({"reason": "handoff"})
+            known = frozenset(rec["rid"] for rec in records)
+        target._readmit(records, journal_known_rids=known)
+        if self._tel is not None:
+            self._tel.handoffs.inc()
+        self._set_health(DRAINING, "handoff_complete")
+        self._publish_gauges()
+        return {"transferred": len(records),
+                "source_tick": self.stats["ticks"],
+                "target_tick": target.stats["ticks"]}
+
     # --- decode tick ------------------------------------------------------
 
     def _decode_bucket(self, active: List[int]) -> int:
@@ -1457,10 +1821,17 @@ class ServeEngine:
         process. Real exceptions still propagate: the front door's tick
         loop is the containment layer for those (it degrades the engine
         and keeps draining in-flight streams)."""
+        if (self.faults is not None
+                and self._fault("process_crash") is not None):
+            # simulated hard process death at a tick boundary: escapes
+            # every containment layer by design (recovery is journal
+            # replay in a fresh engine — ServeEngine.recover — not an
+            # except path in the dying one)
+            raise faults_lib.ProcessCrash(self.stats["ticks"])
         if self._has_deadlines:
             self._enforce_deadlines()
         try:
-            return self._step_impl()
+            n = self._step_impl()
         except faults_lib.InjectedFault as e:
             if e.rid is not None and self._retire_anywhere(
                     e.rid, "internal_error"):
@@ -1470,6 +1841,12 @@ class ServeEngine:
                 return 1
             self.mark_degraded(f"injected:{e.site}")
             return 1
+        if (self._audit_interval is not None
+                and self.stats["ticks"] - self._last_audit_tick
+                >= self._audit_interval):
+            self._last_audit_tick = self.stats["ticks"]
+            self.audit()
+        return n
 
     def _step_impl(self) -> int:
         # tick-phase timing brackets host code the tick already runs —
@@ -1485,8 +1862,10 @@ class ServeEngine:
                 # in step() operates on a consistent engine
                 raise faults_lib.InjectedFault("step_error", spec.rid,
                                                self.stats["ticks"])
-        if self.scheduler.waiting:
-            # admission decisions need an up-to-date view of free slots
+        if self.scheduler.waiting and self._health != DRAINING:
+            # admission decisions need an up-to-date view of free slots.
+            # (A DRAINING engine stops admitting: queued requests wait —
+            # preserved for the final snapshot — while slotted ones finish.)
             self._drain()
             if t is not None:
                 t0 = time.perf_counter()   # drain timed itself; restart
@@ -1594,6 +1973,13 @@ class ServeEngine:
                     continue
                 tok = int(toks[slot])
                 rs.out_tokens.append(tok)
+                if self.journal is not None:
+                    # WAL ordering: the token is durable before any client
+                    # can observe it, so recovery can never drop a token a
+                    # client saw — and tokens still in the pending device
+                    # buffer are never journaled, so it never replays one a
+                    # client didn't
+                    self.journal.record_token(rs.rid, tok)
                 if self.token_sink is not None:
                     try:
                         if (self.faults is not None
@@ -1878,6 +2264,10 @@ class ServeEngine:
             self._set_health(DRAINING, "close")
             self._drain()
         finally:
+            if self.journal is not None:
+                self.journal.sync()
+                if self._owns_journal:
+                    self.journal.close()
             server, self._metrics_server = self._metrics_server, None
             if server is not None:
                 server.stop()

@@ -26,6 +26,10 @@ site                      models
 ``chunk_error``           an exception inside ``_run_chunk``
 ``step_error``            an exception inside ``ServeEngine.step``
 ``sink_error``            a front-door token sink raising on delivery
+``process_crash``         the serving process dying at a tick boundary
+                          (raises :class:`ProcessCrash`, which deliberately
+                          escapes every containment layer — recovery is
+                          journal replay in a new engine, not an except)
 ========================  ====================================================
 """
 
@@ -44,6 +48,7 @@ SITES = (
     "chunk_error",
     "step_error",
     "sink_error",
+    "process_crash",
 )
 
 
@@ -54,6 +59,20 @@ class InjectedFault(RuntimeError):
         super().__init__(f"injected fault site={site} rid={rid} tick={tick}")
         self.site = site
         self.rid = rid
+        self.tick = tick
+
+
+class ProcessCrash(RuntimeError):
+    """Simulated hard process death (the ``process_crash`` site).
+
+    Deliberately NOT an :class:`InjectedFault`: the engine's step-level
+    containment (and the front door's tick-loop containment) must let it
+    propagate — a crashed process cannot handle its own crash.  Tests and
+    benches abandon the engine when this escapes and recover a fresh one
+    from the journal (``ServeEngine.recover``)."""
+
+    def __init__(self, tick: Optional[int] = None):
+        super().__init__(f"injected process crash at tick {tick}")
         self.tick = tick
 
 
@@ -108,6 +127,12 @@ class FaultPlan:
 
     def __init__(self, specs: Optional[List[FaultSpec]] = None):
         self._specs: List[FaultSpec] = list(specs or [])
+        for spec in self._specs:
+            # construction-time validation even for duck-typed spec objects:
+            # a typo'd site must raise here, not silently never fire
+            if spec.site not in SITES:
+                raise ValueError(
+                    f"unknown fault site {spec.site!r}; known: {SITES}")
         self.injected: Dict[str, int] = {}
         self.log: List[Tuple[str, Optional[int], Optional[int]]] = []
 
@@ -117,6 +142,11 @@ class FaultPlan:
         return spec
 
     def fire(self, site: str, rid: Optional[int] = None, tick: Optional[int] = None) -> Optional[FaultSpec]:
+        if site not in SITES:
+            # an engine-side typo'd call site would otherwise never match
+            # any spec and pass silently — fail loudly instead
+            raise ValueError(
+                f"unknown fault site {site!r}; known: {SITES}")
         for spec in self._specs:
             if spec.site != site or spec.spent:
                 continue
@@ -171,6 +201,10 @@ def fault_matrix(rid: int) -> List[Tuple[str, FaultPlan, str]]:
         ("chunk_error", "internal_error"),
         ("step_error", "internal_error"),
         ("sink_error", "sink_error"),
+        # no retire reason: the process dies and recovery is journal
+        # replay in a fresh engine (ServeEngine.recover), not containment —
+        # consumers that drive engine.run() directly must special-case it
+        ("process_crash", None),
     ]
     out = []
     for site, reason in rows:

@@ -36,6 +36,7 @@ from typing import AsyncIterator, List, Optional
 import numpy as np
 
 from repro.serve.engine import HEALTHY, Request, ServeEngine
+from repro.serve.faults import ProcessCrash
 from repro.serve.sampling import SamplingParams
 
 __all__ = ["FrontDoor", "TokenStream", "EngineUnhealthy"]
@@ -186,6 +187,54 @@ class FrontDoor:
         if health != HEALTHY:
             raise EngineUnhealthy(health, self.engine.health_reason)
 
+    def attach(self, rid: int, received: int = 0) -> TokenStream:
+        """Reconnect a client to a request that survived a crash recovery
+        or handoff: returns a fresh TokenStream for live request `rid`,
+        primed with exactly the tokens the client has not yet acknowledged
+        (``out_tokens[received:]``) — never a duplicate, never a gap. A
+        request that already finished (e.g. its retirement was replayed
+        from the journal) yields its undelivered suffix and terminates
+        with the real finish reason. Raises KeyError for an unknown rid."""
+        req = self.engine._requests.get(rid)
+        if req is None:
+            raise KeyError(f"rid {rid} is not live on this engine")
+        stream = TokenStream(rid, self, req.out_tokens)
+        for tok in req.out_tokens[received:]:
+            stream._push(tok)
+        done = next((rs for rs in self.engine._finished_unpolled
+                     if rs.rid == rid), None)
+        if done is not None:
+            stream._finish(done.finish_reason)
+        else:
+            self._streams[rid] = stream
+            self._wake.set()
+        return stream
+
+    async def handoff(self, target: ServeEngine) -> dict:
+        """Swap the owned engine for `target` with zero downtime: drains
+        the old engine, transfers every live request (ServeEngine.handoff),
+        rebinds the token/retire sinks, and points the tick loop at the new
+        engine — open TokenStreams keep yielding across the swap because
+        sinks route by rid and rids carry over. The old engine ends
+        DRAINING and stays with the caller (close it when done with its
+        metrics/traces); stop()/the context manager close the new one."""
+        old = self.engine
+        summary = old.handoff(target)
+        target.token_sink = self._on_token
+        target.retire_sink = self._on_retire
+        old.token_sink = None
+        old.retire_sink = None
+        for rid, stream in self._streams.items():
+            req = target._requests.get(rid)
+            if req is not None:
+                # re-alias: readmission built a fresh out_tokens list (the
+                # delivered prefix included); the old engine's list is dead
+                stream.tokens = req.out_tokens
+        self.engine = target
+        self._wake.set()
+        self._space.set()
+        return summary
+
     async def cancel(self, rid: int) -> bool:
         """Cancel a live request; see ServeEngine.cancel for semantics.
         The request's stream ends with finish_reason "cancelled" (or its
@@ -240,8 +289,10 @@ class FrontDoor:
                     or any(r is not None for r in eng.slot_req))
 
     async def _run(self) -> None:
-        eng = self.engine
         while self._running:
+            # re-read per iteration: handoff() swaps the owned engine while
+            # the loop runs, and the next tick must drive the new one
+            eng = self.engine
             if not self._has_work():
                 self._wake.clear()
                 self._space.set()           # empty queue: admit freely
@@ -254,6 +305,11 @@ class FrontDoor:
                 eng.step()
                 eng.drain(keep=1)
                 eng.reap()
+            except ProcessCrash:
+                # simulated hard process death: a crashed process cannot
+                # contain its own crash — the tick task dies with it, and
+                # recovery is journal replay in a fresh engine/door
+                raise
             except Exception as e:
                 # tick-level containment: a step/drain failure the engine
                 # could not attribute to one request degrades the engine
@@ -271,5 +327,5 @@ class FrontDoor:
                 self._space.set()
             # hand the loop to submitters/consumers once per tick
             await asyncio.sleep(0)
-        eng.drain()                         # deliver any still-pending ticks
-        eng.reap()
+        self.engine.drain()                 # deliver any still-pending ticks
+        self.engine.reap()

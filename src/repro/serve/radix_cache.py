@@ -144,6 +144,23 @@ class RadixCache:
                 stack.append(c)
         return out
 
+    def pin_summary(self) -> dict:
+        """Snapshot-manifest view of the trie: resident/pinned node and
+        block counts plus the pinned block ids. Diagnostic only — KV pools
+        are not persisted, so a restored engine rebuilds the trie from
+        recomputed prefills; the summary lets a snapshot reader see what
+        reuse state existed at capture time (and audits can cross-check the
+        pinned set against the live slots recorded alongside it)."""
+        nodes = self.nodes()
+        pinned = [n for n in nodes if n.pins > 0]
+        return {
+            "nodes": len(nodes),
+            "pinned_nodes": len(pinned),
+            "blocks": len(nodes),
+            "pinned_blocks": sorted(n.block for n in pinned),
+            "total_pins": sum(n.pins for n in pinned),
+        }
+
     # --- lookup ----------------------------------------------------------
 
     def match(self, tokens: np.ndarray) -> PrefixMatch:

@@ -92,6 +92,35 @@ class RequestState:
     def prompt_len(self) -> int:
         return int(len(self.prompt))
 
+    def to_record(self) -> dict:
+        """Serialize the *client-visible* request state for durability
+        (snapshot manifests, live handoff, journal cross-checks).
+
+        Preemption may already have folded delivered tokens into `prompt`
+        and shrunk `max_new_tokens`; the record undoes the fold so it always
+        holds the original submission plus the delivered stream — exactly
+        what a fresh engine needs to resume bit-exactly through the same
+        fold/recompute path (and exactly what journal replay reconstructs).
+        Device/slot state (blocks, radix pins, prefill cursors) is
+        deliberately absent: recovery recomputes it."""
+        orig_prompt = (self.prompt[:len(self.prompt) - self.folded_tokens]
+                       if self.folded_tokens else self.prompt)
+        return {
+            "rid": int(self.rid),
+            "prompt": [int(t) for t in orig_prompt],
+            # original budget: the fold decrements max_new_tokens as tokens
+            # move into the prompt, so undoing it is a plain add
+            "max_new_tokens": int(self.max_new_tokens + self.folded_tokens),
+            "sampling": {
+                "temperature": float(self.sampling.temperature),
+                "top_k": int(self.sampling.top_k),
+                "top_p": float(self.sampling.top_p),
+            },
+            "deadline_ms": self.deadline_ms,
+            "delivered": [int(t) for t in self.out_tokens],
+            "arrival_seq": int(self.arrival_seq),
+        }
+
     def wait_age(self, tick: int) -> int:
         """Ticks spent waiting since the last queue entry (submit, or the
         most recent preemption)."""

@@ -446,6 +446,21 @@ class ServingMetrics:
         self.prefix_evictions = r.counter(
             "serve_prefix_cache_evictions_total",
             "Radix prefix-cache blocks evicted under pool pressure").labels()
+        self.audit_runs = r.counter(
+            "serve_audit_runs_total",
+            "Invariant audits executed (on-demand audit() calls plus the "
+            "automatic every-audit_interval-ticks runs)").labels()
+        self.snapshots = r.counter(
+            "serve_snapshots_total",
+            "Engine snapshots written (ServeEngine.snapshot)").labels()
+        self.restored_requests = r.counter(
+            "serve_restored_requests_total",
+            "Requests re-admitted from a journal/snapshot/handoff (resumed "
+            "bit-exactly via the preemption fold mechanism)").labels()
+        self.handoffs = r.counter(
+            "serve_handoffs_total",
+            "Live handoffs completed (in-flight requests transferred to "
+            "another engine; this engine ends DRAINING)").labels()
         self._faults_injected = r.counter(
             "serve_faults_injected_total",
             "Faults fired by an attached FaultPlan, by injection site "
@@ -479,8 +494,8 @@ class ServingMetrics:
             "Mesh axis sizes (1 when serving unsharded)", labels=("axis",))
         self.health = r.gauge(
             "serve_health",
-            "Engine health state: 0=healthy, 1=degraded, 2=draining "
-            "(docs/serving.md, Failure handling)").labels()
+            "Engine health state: 0=healthy, 1=degraded, 2=draining, "
+            "3=handoff (docs/serving.md, Failure handling)").labels()
         # histograms
         self.ttft = r.histogram(
             "serve_ttft_seconds", "Submit -> first token",

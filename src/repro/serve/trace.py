@@ -38,8 +38,14 @@ tests/test_telemetry.py pins it):
                  admit/activate pair is the resume)
   finish:       reason (a ServingMetrics.retired_by_reason key), tokens,
                  decode_s, tpot_s
-  health:       state ("healthy"|"degraded"|"draining"), reason — engine
-                 health transitions (rid is -1: not a request event)
+  handoff:      tokens_generated — the request was transferred to another
+                 engine (live handoff / snapshot extraction); closes the
+                 span on THIS recorder like finish (the request is no
+                 longer this engine's), the target engine opens a new one
+  restore:      delivered_tokens — a request re-admitted from a journal/
+                 snapshot (follows its submit event on the new engine)
+  health:       state ("healthy"|"degraded"|"draining"|"handoff"), reason —
+                 engine health transitions (rid is -1: not a request event)
   epoch:        wall_time_s  (export-time header, not a ring event: one
                  ``time.time()`` <-> ``perf_counter`` pair anchoring every
                  monotonic ts to the wall clock, so traces correlate across
@@ -67,12 +73,16 @@ EVENT_FIELDS: Dict[str, tuple] = {
     "first_token": ("ttft_s",),
     "preempt": ("slot", "tokens_generated", "blocks_freed"),
     "finish": ("reason", "tokens", "decode_s", "tpot_s"),
+    "handoff": ("tokens_generated",),
+    "restore": ("delivered_tokens",),
     "health": ("state", "reason"),
     "epoch": ("wall_time_s",),
 }
 
 _OPENING = "submit"
-_CLOSING = "finish"
+# both close a span: finish retires the request; handoff transfers it to
+# another engine (whose recorder opens a fresh span on readmission)
+_CLOSING = ("finish", "handoff")
 
 # every recorder constructed in this process since the last drain — the
 # conftest span-leak fixture validates and clears this after each test.
@@ -148,7 +158,7 @@ class TraceRecorder:
         self.recorded += 1
         if event == _OPENING:
             self._open.add(rid)
-        elif event == _CLOSING:
+        elif event in _CLOSING:
             self._open.discard(rid)
             self._slot_owner = {s: r for s, r in self._slot_owner.items()
                                 if r != rid}
@@ -202,7 +212,7 @@ class TraceRecorder:
                 finished.discard(ev["rid"])
             elif ev["rid"] in finished:
                 errs.append(f"event after finish for rid {ev['rid']}: {ev!r}")
-            if ev["event"] == _CLOSING:
+            if ev["event"] in _CLOSING:
                 finished.add(ev["rid"])
         return errs + list(self._leaks)
 

@@ -1,0 +1,666 @@
+"""Durable serving: the write-ahead request journal, engine snapshot /
+restore, crash recovery with bit-exact resume, and live engine handoff.
+
+The contracts under test: the journal is an exact ledger of client-visible
+state (submits, drain-delivered tokens, retirements) whose replay is a pure
+idempotent function of the file bytes, tolerant of a torn final line and
+loud about corruption anywhere else; ``ServeEngine.recover`` resumes every
+request that was live at a kill with exactly its undelivered suffix —
+bit-identical concatenated streams, greedy AND sampled, for a crash at
+*every* tick index — because recovery rides the preemption fold/recompute
+mechanism; ``snapshot()``/``restore()`` round-trip the engine config and
+live request set through the atomic ckpt manifest format without persisting
+KV pools; and ``handoff()`` transfers in-flight requests to a second engine
+(same or different config) with zero failures, closing source spans with
+``handoff`` events and passing through the HANDOFF health state.
+"""
+import asyncio
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.archs import get_config
+from repro.models import lm
+from repro.serve import faults as fl
+from repro.serve import journal as jl
+from repro.serve.engine import (DRAINING, HANDOFF, HEALTHY, EngineConfig,
+                                Request, ServeEngine)
+from repro.serve.frontdoor import FrontDoor
+from repro.serve.sampling import SamplingParams
+
+
+@pytest.fixture(scope="module")
+def small_lm():
+    cfg = get_config("llama3.2-3b", smoke=True)
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+    return cfg, params
+
+
+def make_requests(cfg, n=4, max_new=4, seed=7):
+    """Deterministic mixed workload: even rids greedy, odd rids sampled."""
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(2, cfg.vocab_size,
+                                        size=int(rng.integers(3, 9))),
+                    max_new_tokens=max_new,
+                    sampling=SamplingParams(
+                        temperature=0.8 if i % 2 else 0.0,
+                        top_k=8 if i % 2 else 0))
+            for i in range(n)]
+
+
+def ecfg_base(**kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("seed", 11)
+    return EngineConfig(**kw)
+
+
+def run_reference(cfg, params, **ecfg_kw):
+    """Uninterrupted run: the ground-truth streams and tick count."""
+    eng = ServeEngine(cfg, params, ecfg_base(**ecfg_kw))
+    done = eng.run(make_requests(cfg))
+    ref = {r.rid: list(r.out_tokens) for r in done}
+    ticks = eng.stats["ticks"]
+    eng.close()
+    return ref, ticks
+
+
+def drive_until_crash(eng, reqs):
+    """Submit and tick until completion or an injected process crash.
+    Returns the crash tick, or None if the engine finished cleanly."""
+    for r in reqs:
+        eng.submit(r)
+    guard = 0
+    try:
+        while (eng.scheduler.waiting
+               or any(s is not None for s in eng.slot_req)):
+            eng.step()
+            eng.poll()
+            guard += 1
+            assert guard < 500, "serve loop did not terminate"
+    except fl.ProcessCrash as e:
+        return e.tick
+    eng.poll()
+    return None
+
+
+def finish_reasons(eng):
+    return {rs.rid: rs.finish_reason for rs in eng.scheduler.finished}
+
+
+# ---------------------------------------------------------------------------
+# Journal: append / replay round trip (pure host-side, no engine)
+# ---------------------------------------------------------------------------
+
+def test_journal_roundtrip(tmp_path):
+    p = tmp_path / "serve.journal"
+    with jl.RequestJournal(p) as j:
+        assert j.begin_epoch({"reason": "attach"}) == 0
+        j.record_submit(0, [5, 6, 7], 4,
+                        sampling={"temperature": 0.5, "top_k": 4,
+                                  "top_p": 1.0}, deadline_ms=250.0)
+        j.record_submit(1, [9], 2)
+        j.record_token(0, 42)
+        j.record_token(1, 43)
+        j.record_token(0, 44)
+        j.record_retire(1, "eos")
+    st = jl.replay(p)
+    assert (st.epochs, st.last_seq, st.truncated_tail) == (1, 0, False)
+    assert set(st.live) == {0} and st.retired == {1: "eos"}
+    lr = st.live[0]
+    assert lr.prompt == [5, 6, 7] and lr.delivered == [42, 44]
+    assert lr.max_new_tokens == 4 and lr.deadline_ms == 250.0
+    assert lr.sampling["temperature"] == 0.5
+
+
+def test_journal_replay_is_idempotent_and_missing_file_empty(tmp_path):
+    p = tmp_path / "serve.journal"
+    empty = jl.replay(p)                      # missing file -> empty state
+    assert empty.live == {} and empty.records == 0
+    with jl.RequestJournal(p) as j:
+        j.begin_epoch()
+        j.record_submit(3, [1, 2], 5)
+        j.record_token(3, 8)
+    a, b = jl.replay(p), jl.replay(p)         # pure function of file bytes
+    assert a == b
+    assert a.live[3].delivered == [8]
+
+
+def test_journal_tolerates_torn_tail(tmp_path):
+    p = tmp_path / "serve.journal"
+    with jl.RequestJournal(p) as j:
+        j.begin_epoch()
+        j.record_submit(0, [1], 4)
+        j.record_token(0, 7)
+    with open(p, "ab") as f:                  # a record torn mid-write
+        f.write(b'{"kind": "token", "rid": 0, "to')
+    st = jl.replay(p)
+    assert st.truncated_tail and st.live[0].delivered == [7]
+
+
+def test_journal_mid_file_corruption_raises(tmp_path):
+    p = tmp_path / "serve.journal"
+    with jl.RequestJournal(p) as j:
+        j.begin_epoch()
+        j.record_submit(0, [1], 4)
+    raw = p.read_bytes().split(b"\n")
+    raw[0] = b'{"kind": "epo'                 # corrupt a NON-final line
+    p.write_bytes(b"\n".join(raw))
+    with pytest.raises(jl.JournalCorrupt):
+        jl.replay(p)
+
+
+def test_journal_impossible_sequences_raise(tmp_path):
+    for i, write in enumerate([
+            lambda j: j.record_token(9, 1),       # token for unknown rid
+            lambda j: j.record_retire(9, "eos"),  # retire for unknown rid
+    ]):
+        p = tmp_path / f"serve_{i}.journal"
+        with jl.RequestJournal(p) as j:
+            j.begin_epoch()
+            write(j)
+        with pytest.raises(jl.JournalCorrupt):
+            jl.replay(p)
+
+
+def test_journal_submit_for_live_rid_is_corruption(tmp_path):
+    p = tmp_path / "serve.journal"
+    with jl.RequestJournal(p) as j:
+        j.begin_epoch()
+        j.record_submit(0, [1], 4)
+        j.record_submit(0, [2], 4)            # rid 0 is still live
+    with pytest.raises(jl.JournalCorrupt):
+        jl.replay(p)
+
+
+def test_journal_rid_reuse_after_retire(tmp_path):
+    p = tmp_path / "serve.journal"
+    with jl.RequestJournal(p) as j:
+        j.begin_epoch()
+        j.record_submit(0, [1], 4)
+        j.record_token(0, 5)
+        j.record_retire(0, "max_tokens")
+        j.record_submit(0, [2, 3], 6)         # reuse opens a fresh request
+        j.record_token(0, 9)
+    st = jl.replay(p)
+    assert st.live[0].prompt == [2, 3] and st.live[0].delivered == [9]
+    assert 0 not in st.retired                # superseded by the new submit
+
+
+def test_journal_epoch_seq_monotone_across_attaches(tmp_path):
+    p = tmp_path / "serve.journal"
+    for i in range(3):                        # attach / crash / re-attach
+        j = jl.RequestJournal(p)
+        assert j.begin_epoch({"attach": i}) == i
+        j.close()
+    st = jl.replay(p)
+    assert st.epochs == 3 and st.last_seq == 2
+    # regression direction: an epoch seq going backwards is corruption
+    with open(p, "ab") as f:
+        f.write(b'{"kind": "epoch", "seq": 0, "wall_time_s": 0, '
+                b'"meta": {}}\n')
+    with pytest.raises(jl.JournalCorrupt):
+        jl.replay(p)
+
+
+def test_journal_fsync_batching_and_close(tmp_path):
+    p = tmp_path / "serve.journal"
+    j = jl.RequestJournal(p, fsync_every=4)
+    j.begin_epoch()
+    for i in range(6):
+        j.record_submit(i, [1], 1)
+    assert j.syncs == 1                       # 7 records -> one batched fsync
+    j.sync()
+    assert j.syncs == 2                       # explicit barrier forces one
+    j.sync()
+    assert j.syncs == 2                       # nothing unsynced -> no-op
+    j.close()
+    j.close()                                 # idempotent
+    with pytest.raises(ValueError):
+        j.record_retire(0, "eos")             # closed journal refuses writes
+    with pytest.raises(ValueError):
+        jl.RequestJournal(p, fsync_every=0)
+
+
+# ---------------------------------------------------------------------------
+# Fault-site validation + process_crash escapes every containment layer
+# ---------------------------------------------------------------------------
+
+def _bad_spec():
+    spec = object.__new__(fl.FaultSpec)       # dodge __post_init__ on purpose
+    spec.site = "not_a_site"
+    spec.rid = spec.tick = spec.nth = None
+    spec.once = True
+    spec.fired = 0
+    return spec
+
+
+def test_fault_plan_validates_sites_at_construction():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        fl.FaultSpec("segfault_lol")
+    with pytest.raises(ValueError, match="unknown fault site"):
+        fl.FaultPlan([_bad_spec()])           # ctor re-checks duck-typed specs
+    with pytest.raises(ValueError, match="unknown fault site"):
+        fl.FaultPlan().arm("not_a_site")
+    with pytest.raises(ValueError, match="unknown fault site"):
+        fl.FaultPlan().fire("not_a_site", rid=0, tick=0)
+    assert "process_crash" in fl.SITES
+
+
+def test_fault_matrix_includes_process_crash():
+    sites = [site for site, _, _ in fl.fault_matrix(0)]
+    assert "process_crash" in sites
+
+
+def test_process_crash_escapes_step_containment(small_lm):
+    """ProcessCrash is not an InjectedFault: step()'s containment (which
+    retires the target request) must NOT catch it — a crashed process
+    cannot contain its own death."""
+    cfg, params = small_lm
+    plan = fl.FaultPlan()
+    plan.arm("process_crash", tick=1)
+    eng = ServeEngine(cfg, params, ecfg_base(faults=plan))
+    tick = drive_until_crash(eng, make_requests(cfg, n=2))
+    assert tick == 1
+    assert eng.health == HEALTHY              # death, not degradation
+    assert not isinstance(fl.ProcessCrash(0), fl.InjectedFault)
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# audit_interval: automatic invariant audits
+# ---------------------------------------------------------------------------
+
+def test_audit_interval_autoruns_and_counts(small_lm):
+    cfg, params = small_lm
+    eng = ServeEngine(cfg, params, ecfg_base(audit_interval=3))
+    eng.run(make_requests(cfg))
+    ticks = eng.stats["ticks"]
+    auto = eng._tel.audit_runs.value
+    assert auto >= ticks // 3 >= 1            # ran roughly every 3 ticks
+    eng.audit()                               # on-demand audits also count
+    assert eng._tel.audit_runs.value == auto + 1
+    assert eng.registry.snapshot()["serve_audit_runs_total"] == auto + 1
+    eng.close()
+
+
+def test_audit_interval_validation(small_lm):
+    cfg, params = small_lm
+    with pytest.raises(ValueError, match="audit_interval"):
+        ServeEngine(cfg, params, ecfg_base(audit_interval=0))
+
+
+# ---------------------------------------------------------------------------
+# Snapshot / restore round trip
+# ---------------------------------------------------------------------------
+
+def test_snapshot_restore_bit_identical(small_lm, tmp_path):
+    """Stop an engine mid-flight via snapshot + close; the restored engine
+    finishes every stream bit-identically (greedy and sampled), because
+    restore re-admits through the fold and recomputes context — KV pools
+    are never persisted."""
+    cfg, params = small_lm
+    ref, _ = run_reference(cfg, params)
+
+    eng = ServeEngine(cfg, params, ecfg_base())
+    for r in make_requests(cfg):
+        eng.submit(r)
+    for _ in range(4):
+        eng.step()
+    eng.poll()
+    path = eng.snapshot(tmp_path / "snap")
+    manifest = json.loads((path / "MANIFEST.json").read_text())
+    assert manifest["extra"]["kind"] == "serve_snapshot"
+    assert eng._tel.snapshots.value == 1
+    eng.close()
+
+    eng2 = ServeEngine.restore(cfg, params, tmp_path / "snap")
+    assert eng2.ecfg.seed == 11               # seed survives the round trip
+    assert eng2._tel.restored_requests.value > 0
+    done = eng2.run([])
+    got = {r.rid: list(r.out_tokens) for r in done}
+    eng2.close()
+    for rid, toks in got.items():
+        assert toks == ref[rid], f"rid {rid} diverged after restore"
+
+
+def test_snapshot_payload_contract(small_lm, tmp_path):
+    """What the snapshot carries — and what it deliberately does not."""
+    cfg, params = small_lm
+    plan = fl.FaultPlan()
+    eng = ServeEngine(cfg, params, ecfg_base(faults=plan))
+    for r in make_requests(cfg, n=2):
+        eng.submit(r)
+    eng.step()
+    eng.poll()
+    eng.snapshot(tmp_path / "snap", step=123)
+    payload = ServeEngine._load_snapshot(tmp_path / "snap", 123)
+    assert payload["format"] == 1
+    assert "faults" in payload["non_serializable"]     # not round-trippable
+    assert payload["engine_config"]["seed"] == 11
+    rids = [rec["rid"] for rec in payload["requests"]]
+    assert rids == sorted(rids)               # arrival order
+    for rec in payload["requests"]:
+        # records undo the fold: original budget + full delivered stream
+        assert rec["max_new_tokens"] == 4
+    if payload["radix"] is not None:
+        assert "pinned_blocks" in payload["radix"]
+    eng.close()
+    # overrides patch what the snapshot could not serialize
+    eng2 = ServeEngine.restore(cfg, params, tmp_path / "snap", step=123,
+                               overrides={"slots": 4})
+    assert eng2.ecfg.slots == 4 and eng2.ecfg.faults is None
+    eng2.run([])
+    eng2.close()
+
+
+# ---------------------------------------------------------------------------
+# Crash recovery: the seeded chaos sweep (the tentpole acceptance test)
+# ---------------------------------------------------------------------------
+
+def test_chaos_crash_at_every_tick_bit_identical(small_lm, tmp_path):
+    """Kill the serving process at EVERY tick index; recover from the
+    journal (alternating config source: explicit ecfg / snapshot); the
+    concatenated delivered streams must be bit-identical to an
+    uninterrupted run — greedy and sampled, never a duplicated or dropped
+    token. Tokens still in the pending device buffer at the kill were
+    never journaled, so recovery recomputes them instead of replaying
+    them: exactness is by construction, and this sweep proves it at every
+    possible kill point."""
+    cfg, params = small_lm
+    ref, ref_ticks = run_reference(cfg, params)
+    assert ref_ticks >= 4
+
+    for k in range(ref_ticks + 1):
+        jpath = tmp_path / f"crash_{k}.journal"
+        snapdir = tmp_path / f"snap_{k}"
+        plan = fl.FaultPlan()
+        plan.arm("process_crash", tick=k)
+        eng = ServeEngine(cfg, params, ecfg_base(
+            journal=jl.RequestJournal(jpath), faults=plan))
+        eng._owns_journal = True
+        if k % 2 == 1:
+            # config-from-snapshot recovery path: the launcher writes one
+            # at startup; it carries the EngineConfig (seed included)
+            eng.snapshot(snapdir, step=0)
+        reqs = make_requests(cfg)
+        crash_tick = drive_until_crash(eng, reqs)
+        delivered_pre = {r.rid: list(r.out_tokens) for r in reqs}
+        if crash_tick is None:                # k past the last tick: no kill
+            assert delivered_pre == ref
+            eng.close()
+            continue
+        del eng                               # simulated death: no close()
+
+        state = jl.replay(jpath)
+        if k % 2 == 1:
+            eng2 = ServeEngine.recover(cfg, params, jpath,
+                                       snapshot_dir=snapdir)
+        else:
+            eng2 = ServeEngine.recover(cfg, params, jpath,
+                                       ecfg=ecfg_base())
+        done = eng2.run([])
+        resumed = {r.rid: list(r.out_tokens) for r in done}
+        eng2.close()
+
+        # replay of the repaired multi-epoch journal stays idempotent and
+        # now proves the complete streams
+        final = jl.replay(jpath)
+        assert final == jl.replay(jpath)
+        assert final.epochs == state.epochs + 1
+        assert not final.live                 # everything retired
+
+        for rid, want in ref.items():
+            if rid in resumed:                # was live at the kill
+                got = resumed[rid]
+                # the pre-kill delivered prefix was preserved verbatim
+                pre = state.live[rid].delivered
+                assert got[:len(pre)] == pre
+            else:                             # finished before the kill
+                got = delivered_pre[rid]
+            assert got == want, (
+                f"kill at tick {k}: rid {rid} stream diverged\n"
+                f"  got  {got}\n  want {want}")
+
+
+def test_recovery_synthesizes_torn_retire(small_lm, tmp_path):
+    """A crash can tear the retire record off the journal tail after the
+    final token was delivered. Recovery must retire such a request
+    immediately (budget spent / EOS delivered), repairing the ledger
+    instead of queueing an empty resume."""
+    cfg, params = small_lm
+    jpath = tmp_path / "torn.journal"
+    eos = int(ecfg_base().eos_id)
+    with jl.RequestJournal(jpath) as j:
+        j.begin_epoch()
+        j.record_submit(0, [5, 6, 7], 2)      # budget 2 ...
+        j.record_token(0, 30)
+        j.record_token(0, 31)                 # ... fully delivered, no retire
+        j.record_submit(1, [5, 6], 4)
+        j.record_token(1, eos)                # EOS delivered, retire torn off
+    eng = ServeEngine.recover(cfg, params, jpath, ecfg=ecfg_base())
+    assert all(s is None for s in eng.slot_req)
+    assert not eng.scheduler.waiting          # nothing queued
+    assert {r.rid for r in eng.poll()} == {0, 1}
+    assert finish_reasons(eng) == {0: "max_tokens", 1: "eos"}
+    st = jl.replay(jpath)                     # ledger repaired
+    assert st.retired == {0: "max_tokens", 1: "eos"} and not st.live
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# Live handoff
+# ---------------------------------------------------------------------------
+
+def test_handoff_same_config_bit_identical(small_lm, tmp_path):
+    cfg, params = small_lm
+    ref, _ = run_reference(cfg, params)
+    src = ServeEngine(cfg, params, ecfg_base(
+        journal=jl.RequestJournal(tmp_path / "h.journal")))
+    src._owns_journal = True
+    for r in make_requests(cfg):
+        src.submit(r)
+    for _ in range(3):
+        src.step()
+    src.poll()
+    ledger = src.journal
+    tgt = ServeEngine(cfg, params, ecfg_base())
+    summary = src.handoff(tgt)
+    assert summary["transferred"] + len(src.scheduler.finished) == 4
+    assert src.health == DRAINING             # source ends terminal
+    health_path = [e["state"] for e in src.trace.events(-1)
+                   if e["event"] == "health"]
+    assert health_path == [HANDOFF, DRAINING]
+    assert tgt.journal is ledger              # the ledger moved with them
+    assert src.journal is None
+    assert tgt._owns_journal and not src._owns_journal
+    # source spans closed with handoff events; target reopened them
+    handoff_evs = [e for e in src.trace.events()
+                   if e["event"] == "handoff"]
+    assert len(handoff_evs) == summary["transferred"]
+    assert src.trace.open_rids() == set()
+    restore_evs = [e for e in tgt.trace.events()
+                   if e["event"] == "restore"]
+    assert len(restore_evs) == summary["transferred"]
+    assert src._tel.handoffs.value == 1 and tgt._tel.handoffs.value == 0
+    done = tgt.run([])
+    got = {r.rid: list(r.out_tokens) for r in done}
+    for rid, toks in got.items():
+        assert toks == ref[rid], f"rid {rid} diverged across handoff"
+    # one journal spans both engines: a handoff epoch and full streams
+    st = jl.replay(tmp_path / "h.journal")
+    assert st.epochs == 2 and not st.live
+    src.close()
+    tgt.close()
+
+
+def test_handoff_to_different_config_none_failed(small_lm):
+    """Reconfiguration via handoff: the target may run different kv_bits /
+    slot count. Every in-flight request must finish — zero failed."""
+    cfg, params = small_lm
+    src = ServeEngine(cfg, params, ecfg_base())
+    for r in make_requests(cfg):
+        src.submit(r)
+    for _ in range(3):
+        src.step()
+    src.poll()
+    live_before = set(src._requests.keys())
+    assert live_before
+    tgt = ServeEngine(cfg, params, ecfg_base(kv_bits=8, slots=4))
+    summary = src.handoff(tgt)
+    assert summary["transferred"] == len(live_before)
+    done = tgt.run([])
+    assert {r.rid for r in done} == live_before   # zero failed in-flight
+    assert all(reason in ("eos", "max_tokens")
+               for reason in finish_reasons(tgt).values())
+    src.close()
+    tgt.close()
+
+
+def test_handoff_guards(small_lm):
+    cfg, params = small_lm
+    src = ServeEngine(cfg, params, ecfg_base())
+    with pytest.raises(ValueError, match="different engine"):
+        src.handoff(src)
+    other_seed = ServeEngine(cfg, params, ecfg_base(seed=99))
+    with pytest.raises(ValueError, match="seed"):
+        src.handoff(other_seed)               # sampled streams would fork
+    draining = ServeEngine(cfg, params, ecfg_base())
+    draining.begin_draining()
+    with pytest.raises(ValueError, match="draining"):
+        src.handoff(draining)
+    for e in (src, other_seed, draining):
+        e.close()
+
+
+def test_begin_draining_stops_admissions(small_lm):
+    cfg, params = small_lm
+    eng = ServeEngine(cfg, params, ecfg_base(slots=2))
+    reqs = make_requests(cfg, n=4)
+    for r in reqs:
+        eng.submit(r)
+    eng.step()                                # admits into both slots
+    eng.begin_draining("signal")
+    assert eng.health == DRAINING
+    guard = 0
+    while any(s is not None for s in eng.slot_req):
+        eng.step()
+        eng.poll()
+        guard += 1
+        assert guard < 200
+    eng.poll()
+    done = set(finish_reasons(eng))
+    waiting = {rs.rid for rs in eng.scheduler.waiting}
+    assert done and waiting                   # in-flight finished ...
+    assert done | waiting == {0, 1, 2, 3}     # ... queued stayed queued
+    assert not done & waiting
+    # the preserved queue is exactly what a final snapshot would capture
+    assert {rec["rid"] for rec in eng._live_records()} == waiting
+    eng.close()
+
+
+# ---------------------------------------------------------------------------
+# FrontDoor: reconnect after recovery, live handoff under open streams
+# ---------------------------------------------------------------------------
+
+def test_frontdoor_attach_delivers_exact_suffix(small_lm, tmp_path):
+    """A reconnecting client that acknowledged n tokens receives exactly
+    out_tokens[n:] — never a duplicate, never a gap."""
+    cfg, params = small_lm
+    ref, _ = run_reference(cfg, params)
+    jpath = tmp_path / "fd.journal"
+    plan = fl.FaultPlan()
+    plan.arm("process_crash", tick=3)
+    eng = ServeEngine(cfg, params, ecfg_base(
+        journal=jl.RequestJournal(jpath), faults=plan))
+    eng._owns_journal = True
+    assert drive_until_crash(eng, make_requests(cfg)) == 3
+    del eng
+
+    state = jl.replay(jpath)
+    assert state.live                         # something was in flight
+    eng2 = ServeEngine.recover(cfg, params, jpath, ecfg=ecfg_base())
+
+    async def reconnect():
+        outs = {}
+        async with FrontDoor(eng2) as door:
+            with pytest.raises(KeyError):
+                door.attach(10_000)           # unknown rid
+            streams = {rid: door.attach(rid, received=len(lr.delivered))
+                       for rid, lr in state.live.items()}
+            for rid, s in streams.items():
+                suffix = [t async for t in s]
+                outs[rid] = state.live[rid].delivered + suffix
+                # the full stream the client assembled is exactly what the
+                # engine holds — nothing duplicated, nothing dropped
+                assert outs[rid] == list(s.tokens)
+        return outs
+
+    got = asyncio.run(reconnect())
+    for rid, toks in got.items():
+        assert toks == ref[rid], f"rid {rid} reconnect stream diverged"
+
+
+def test_frontdoor_live_handoff_streams_survive(small_lm):
+    """Open TokenStreams keep yielding across a FrontDoor.handoff: sinks
+    route by rid and rids carry to the target engine."""
+    cfg, params = small_lm
+    ref, _ = run_reference(cfg, params)
+    src = ServeEngine(cfg, params, ecfg_base())
+    tgt = ServeEngine(cfg, params, ecfg_base())
+
+    async def serve():
+        door = FrontDoor(src)
+        async with door:
+            reqs = make_requests(cfg)
+            streams = [await door.submit(r.prompt, r.max_new_tokens,
+                                         sampling=r.sampling, rid=r.rid)
+                       for r in reqs]
+            guard = 0
+            while sum(len(s.tokens) for s in streams) < 3:
+                await asyncio.sleep(0)
+                guard += 1
+                assert guard < 100000
+            summary = await door.handoff(tgt)
+            assert door.engine is tgt
+            outs = [await s.drain() for s in streams]
+            return summary, {s.rid: list(o)
+                             for s, o in zip(streams, outs)}
+
+    summary, got = asyncio.run(serve())
+    assert summary["transferred"] >= 1
+    assert src.health == DRAINING
+    for rid, toks in got.items():
+        assert toks == ref[rid], f"rid {rid} stream diverged across handoff"
+    src.close()                               # old engine stays with caller
+
+
+def test_frontdoor_process_crash_kills_tick_task(small_lm):
+    """The front door's tick-loop containment must NOT swallow a process
+    crash: the tick task dies with it and stop() surfaces ProcessCrash —
+    recovery is a fresh engine + door, not an except path in the dying
+    one."""
+    cfg, params = small_lm
+    plan = fl.FaultPlan()
+    plan.arm("process_crash", tick=2)
+    eng = ServeEngine(cfg, params, ecfg_base(faults=plan))
+
+    async def serve():
+        door = FrontDoor(eng)
+        door.start()
+        await door.submit(np.array([5, 6, 7]), 4)
+        guard = 0
+        while not door._task.done():
+            await asyncio.sleep(0)
+            guard += 1
+            assert guard < 100000
+        with pytest.raises(fl.ProcessCrash):
+            await door.stop()
+
+    asyncio.run(serve())
+    assert eng.health == HEALTHY              # death, not degradation
+    eng.close()

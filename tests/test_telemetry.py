@@ -147,6 +147,10 @@ GOLDEN_SCHEMA = {
     "serve_prefix_cache_hits_total": ("counter", ()),
     "serve_prefix_cache_misses_total": ("counter", ()),
     "serve_prefix_cache_evictions_total": ("counter", ()),
+    "serve_audit_runs_total": ("counter", ()),
+    "serve_snapshots_total": ("counter", ()),
+    "serve_restored_requests_total": ("counter", ()),
+    "serve_handoffs_total": ("counter", ()),
     "serve_faults_injected_total": ("counter", ("site",)),
     "serve_slots_active": ("gauge", ()),
     "serve_queue_depth": ("gauge", ()),
