@@ -1538,6 +1538,28 @@ class ServeEngine:
         recs.sort(key=lambda r: r["arrival_seq"])
         return recs
 
+    def _validate_readmit(self, records: List[dict]) -> None:
+        """Check every record could be admitted on THIS engine without
+        touching any state: no collision with a live rid (or a duplicate
+        within the batch), and prompt + original budget fits max_seq.
+        handoff() runs this on the target BEFORE the source releases
+        anything, so a doomed handoff fails atomically with the source
+        intact; _readmit shares it so the error surfaces before any record
+        of the batch has been journaled or queued."""
+        seen = set()
+        for rec in records:
+            rid = int(rec["rid"])
+            if rid in self._requests or rid in seen:
+                raise ValueError(f"readmit of live rid {rid}")
+            seen.add(rid)
+            plen = len(rec["prompt"])
+            budget = int(rec["max_new_tokens"])
+            if plen + budget > self.ecfg.max_seq:
+                raise ValueError(
+                    f"rid {rid}: prompt ({plen}) + max_new_tokens "
+                    f"({budget}) exceeds this engine's max_seq "
+                    f"({self.ecfg.max_seq})")
+
     def _readmit(self, records: List[dict],
                  journal_known_rids=frozenset()) -> int:
         """Re-admit durable request records through normal admission: each
@@ -1557,28 +1579,31 @@ class ServeEngine:
         A record whose budget is spent or whose last delivered token is
         EOS had its retire record torn off the journal tail by the crash:
         it is retired immediately (repairing the journal) instead of being
-        queued. Returns the number of records processed."""
+        queued. Deadlines carry over as the RESIDUAL budget (the record's
+        deadline_elapsed_ms is subtracted; an already-expired request
+        retires with reason "deadline") — a request nearly out of deadline
+        at the crash or handoff never gets its clock restarted. Returns
+        the number of records processed."""
+        self._validate_readmit(records)
         now = time.perf_counter()
         tick = self.stats["ticks"]
         n = 0
         for rec in sorted(records, key=lambda r: r.get("arrival_seq", 0)):
             rid = int(rec["rid"])
-            if rid in self._requests:
-                raise ValueError(f"readmit of live rid {rid}")
             prompt = np.asarray(rec["prompt"], np.int32)
             budget = int(rec["max_new_tokens"])
             delivered = [int(t) for t in rec.get("delivered") or ()]
-            if len(prompt) + budget > self.ecfg.max_seq:
-                raise ValueError(
-                    f"rid {rid}: prompt ({len(prompt)}) + max_new_tokens "
-                    f"({budget}) exceeds this engine's max_seq "
-                    f"({self.ecfg.max_seq})")
             sd = rec.get("sampling") or {}
             sp = SamplingParams(
                 temperature=float(sd.get("temperature", 0.0)),
                 top_k=int(sd.get("top_k", 0)),
                 top_p=float(sd.get("top_p", 1.0)))
             deadline_ms = rec.get("deadline_ms")
+            elapsed_ms = rec.get("deadline_elapsed_ms")
+            if deadline_ms is not None and elapsed_ms:
+                # residual deadline: time already consumed before the
+                # snapshot/handoff/crash (downtime included) stays charged
+                deadline_ms = float(deadline_ms) - float(elapsed_ms)
             if (self.journal is not None
                     and rid not in journal_known_rids):
                 self.journal.record_submit(rid, prompt, budget,
@@ -1619,6 +1644,13 @@ class ServeEngine:
                           else "max_tokens")
                 self.scheduler.waiting.remove(rs)
                 self._retire_unslotted(rs, reason, now, tick)
+                continue
+            if deadline_ms is not None and deadline_ms <= 0:
+                # the residual ran out while the request was down or in
+                # transit — same reason _enforce_deadlines would assign at
+                # the next tick, without a pointless prefill first
+                self.scheduler.waiting.remove(rs)
+                self._retire_unslotted(rs, "deadline", now, tick)
                 continue
             self.trace.record(rid, "queued",
                               queue_depth=len(self.scheduler.waiting))
@@ -1729,9 +1761,18 @@ class ServeEngine:
         eng = cls(cfg, params, dataclasses.replace(ecfg, journal=jr),
                   dtype=dtype, mesh=mesh)
         eng._owns_journal = True
+        now_wall = time.time()
         records = [{"rid": lr.rid, "prompt": lr.prompt,
                     "max_new_tokens": lr.max_new_tokens,
                     "sampling": lr.sampling, "deadline_ms": lr.deadline_ms,
+                    # wall-clock elapsed since the journaled submit: the
+                    # deadline keeps ticking through the outage, so readmit
+                    # resumes with the residual budget, never a fresh one
+                    "deadline_elapsed_ms": (
+                        max(0.0, (now_wall - lr.submit_wall_time_s) * 1e3)
+                        if (lr.deadline_ms is not None
+                            and lr.submit_wall_time_s is not None)
+                        else None),
                     "delivered": lr.delivered, "arrival_seq": i}
                    for i, lr in enumerate(state.live.values())]
         eng._readmit(records,
@@ -1746,7 +1787,10 @@ class ServeEngine:
         same rids (the async front door rebinds its sinks), bit-exactly by
         the preemption-fold construction — which is why eos_id and seed
         must match (the engine seed is folded into every per-request
-        sampling key).
+        sampling key). Atomic on failure: every record is validated
+        against the target (max_seq fit, live-rid collisions) before the
+        source releases anything, so a refused handoff raises with the
+        source untouched and still serving.
 
         This engine passes through the HANDOFF health state (exported on
         the gauge and /healthz, which turns 503) and ends DRAINING
@@ -1762,9 +1806,15 @@ class ServeEngine:
         if int(target.ecfg.seed) != int(self.ecfg.seed):
             raise ValueError("handoff target must keep seed: sampled "
                              "resume folds it into every per-request key")
-        self._set_health(HANDOFF, "handoff")
         self._drain()
         records = self._live_records()
+        # every record must be admissible on the target (max_seq fit, no
+        # live-rid collision) BEFORE this engine releases anything — a
+        # doomed handoff must fail here, atomically, with the source still
+        # RUNNING and every request intact, not mid-release with requests
+        # split across two engines
+        target._validate_readmit(records)
+        self._set_health(HANDOFF, "handoff")
         for slot, rs in enumerate(self.slot_req):
             if rs is None:
                 continue

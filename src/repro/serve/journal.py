@@ -21,7 +21,10 @@ Record schema (one JSON object per line; ``kind`` discriminates):
            handoff). ``seq`` increments across epochs in the same file, so
            a replay can tell how many times the serving process restarted.
   submit:  {"kind": "submit", "rid", "prompt": [int], "max_new_tokens",
-            "sampling": {"temperature", "top_k", "top_p"}, "deadline_ms"}
+            "sampling": {"temperature", "top_k", "top_p"}, "deadline_ms",
+            "wall_time_s"} — deadline_ms counts from wall_time_s, so
+           recovery re-admits with the residual budget (downtime included),
+           never a restarted deadline.
   token:   {"kind": "token", "rid", "tok"}   — recorded when the token is
            delivered at drain (client-visible), never for tokens still in
            the pending device buffer: a crash loses undelivered ticks, and
@@ -70,6 +73,10 @@ class LiveRecord:
     max_new_tokens: int          # original budget at submit
     sampling: Dict[str, Any]
     deadline_ms: Optional[float]
+    # wall clock at the submit record (time.time); lets recovery charge a
+    # deadline for the time already consumed — including downtime — instead
+    # of silently restarting the full budget. None on pre-field journals.
+    submit_wall_time_s: Optional[float] = None
     delivered: List[int] = dataclasses.field(default_factory=list)
 
 
@@ -80,12 +87,19 @@ class JournalState:
     epochs: int = 0
     records: int = 0                       # parsed records (all kinds)
     truncated_tail: bool = False
+    # byte length of the valid prefix: everything up to and including the
+    # last fully parsed record. A reopening writer truncates the file here
+    # so appended records never merge onto a torn tail.
+    valid_bytes: int = 0
     live: Dict[int, LiveRecord] = dataclasses.field(default_factory=dict)
     retired: Dict[int, str] = dataclasses.field(default_factory=dict)
 
 
 def _parse_lines(raw: bytes):
-    """Yield (parsed dict | None) per line; None only for a truncated tail.
+    """Yield (parsed dict | None, torn, end_offset) per line; the dict is
+    None only for a truncated tail. ``end_offset`` is the byte offset just
+    past the record (including its newline) — for a torn tail it is the
+    offset where the torn bytes START, i.e. the length of the valid prefix.
 
     A trailing line without a newline, or one that fails to parse, is the
     torn tail of a crashed write and is dropped; the same defect on any
@@ -94,23 +108,29 @@ def _parse_lines(raw: bytes):
     lines = raw.split(b"\n")
     # a cleanly-terminated file ends with b"" after the final newline
     complete, tail = lines[:-1], lines[-1]
+    offset = 0
     for i, line in enumerate(complete):
+        end = offset + len(line) + 1           # +1 for the newline
         if not line.strip():
+            offset = end
             continue
         try:
-            yield json.loads(line), False
+            yield json.loads(line), False, end
         except json.JSONDecodeError as e:
             if i == len(complete) - 1 and not tail.strip():
                 # torn final record that still got its newline out
-                yield None, True
+                yield None, True, offset
                 return
             raise JournalCorrupt(
                 f"malformed journal line {i}: {line[:80]!r}") from e
+        offset = end
     if tail.strip():
         try:
-            yield json.loads(tail), False
+            # parseable but newline-less: valid, yet a reopening writer
+            # must restore the separator before appending (__init__ does)
+            yield json.loads(tail), False, offset + len(tail)
         except json.JSONDecodeError:
-            yield None, True
+            yield None, True, offset
 
 
 def replay(path: Union[str, pathlib.Path]) -> JournalState:
@@ -123,12 +143,14 @@ def replay(path: Union[str, pathlib.Path]) -> JournalState:
     if not p.exists():
         return state
     raw = p.read_bytes()
-    for rec, torn in _parse_lines(raw):
+    for rec, torn, end in _parse_lines(raw):
         if torn:
             state.truncated_tail = True
+            state.valid_bytes = end
             break
         kind = rec.get("kind")
         state.records += 1
+        state.valid_bytes = end
         if kind == "epoch":
             seq = int(rec["seq"])
             if seq <= state.last_seq:
@@ -147,7 +169,8 @@ def replay(path: Union[str, pathlib.Path]) -> JournalState:
                 rid=rid, prompt=[int(t) for t in rec["prompt"]],
                 max_new_tokens=int(rec["max_new_tokens"]),
                 sampling=dict(rec.get("sampling") or {}),
-                deadline_ms=rec.get("deadline_ms"))
+                deadline_ms=rec.get("deadline_ms"),
+                submit_wall_time_s=rec.get("wall_time_s"))
         elif kind == "token":
             rid = int(rec["rid"])
             live = state.live.get(rid)
@@ -170,8 +193,10 @@ class RequestJournal:
 
     One writer per file at a time (the serving process). Construction scans
     any existing contents for the newest epoch seq so recovery epochs keep
-    the sequence monotone; it does not hold the replayed state — call
-    :func:`replay` for that.
+    the sequence monotone, and truncates the torn tail of a crashed write
+    (replay tolerates the tail, but appending onto it would strand a
+    malformed line mid-file and poison every later replay); it does not
+    hold the replayed state — call :func:`replay` for that.
     """
 
     def __init__(self, path: Union[str, pathlib.Path],
@@ -181,10 +206,31 @@ class RequestJournal:
         self.path = pathlib.Path(path)
         self.fsync_every = int(fsync_every)
         self._last_seq = -1
-        if self.path.exists():
-            self._last_seq = replay(self.path).last_seq
+        needs_newline = False
+        if self.path.exists() and self.path.stat().st_size > 0:
+            state = replay(self.path)
+            self._last_seq = state.last_seq
+            size = self.path.stat().st_size
+            if state.valid_bytes < size:
+                # torn tail of a crashed write: cut it BEFORE appending, or
+                # the new epoch record would merge onto the partial line and
+                # turn a tolerated tail into mid-file corruption — making a
+                # second crash unrecoverable. Replay already proved nothing
+                # client-visible lives in those bytes.
+                with open(self.path, "r+b") as f:
+                    f.truncate(state.valid_bytes)
+                    os.fsync(f.fileno())
+            if state.valid_bytes > 0:
+                # a parseable final record that lost only its newline:
+                # restore the separator so the next append starts a line
+                with open(self.path, "rb") as f:
+                    f.seek(state.valid_bytes - 1)
+                    needs_newline = f.read(1) != b"\n"
         self.path.parent.mkdir(parents=True, exist_ok=True)
         self._f = open(self.path, "ab")
+        if needs_newline:
+            self._f.write(b"\n")
+            self._f.flush()
         self._unsynced = 0
         self.records = 0
         self.syncs = 0
@@ -218,7 +264,8 @@ class RequestJournal:
                       "prompt": [int(t) for t in prompt],
                       "max_new_tokens": int(max_new_tokens),
                       "sampling": sampling or {},
-                      "deadline_ms": deadline_ms})
+                      "deadline_ms": deadline_ms,
+                      "wall_time_s": time.time()})
 
     def record_token(self, rid: int, tok: int) -> None:
         self._append({"kind": "token", "rid": int(rid), "tok": int(tok)})

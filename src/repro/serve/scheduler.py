@@ -117,6 +117,13 @@ class RequestState:
                 "top_p": float(self.sampling.top_p),
             },
             "deadline_ms": self.deadline_ms,
+            # deadline time already consumed at record time: restore and
+            # handoff re-admit with the residual budget (deadline_ms minus
+            # this), so the clock never restarts across engines. perf_counter
+            # durations stay valid across processes as a captured elapsed.
+            "deadline_elapsed_ms": (
+                (time.perf_counter() - self.submit_time) * 1e3
+                if self.deadline_ms is not None else None),
             "delivered": [int(t) for t in self.out_tokens],
             "arrival_seq": int(self.arrival_seq),
         }

@@ -142,6 +142,56 @@ def test_journal_tolerates_torn_tail(tmp_path):
     assert st.truncated_tail and st.live[0].delivered == [7]
 
 
+def test_journal_reopen_after_torn_tail_stays_replayable(tmp_path):
+    """Reopening a torn journal must truncate the tail BEFORE appending —
+    otherwise the recovery epoch merges onto the partial line, replay of
+    the repaired file raises mid-file corruption, and a second crash is
+    unrecoverable. This is the full crash -> recover -> crash -> recover
+    cycle at the file level."""
+    p = tmp_path / "serve.journal"
+    with jl.RequestJournal(p) as j:
+        j.begin_epoch()
+        j.record_submit(0, [1], 4)
+        j.record_token(0, 7)
+    with open(p, "ab") as f:                  # crash #1 tears a record
+        f.write(b'{"kind": "token", "rid": 0, "to')
+    j2 = jl.RequestJournal(p)                 # recovery reopens the file
+    j2.begin_epoch({"reason": "recover"})
+    j2.record_token(0, 8)
+    j2.close()
+    st = jl.replay(p)                         # replayable, torn bytes gone
+    assert not st.truncated_tail and st.epochs == 2
+    assert st.live[0].delivered == [7, 8]
+    with open(p, "ab") as f:                  # crash #2 tears again
+        f.write(b'{"kind": "ret')
+    j3 = jl.RequestJournal(p)
+    assert j3.begin_epoch({"reason": "recover"}) == 2
+    j3.record_retire(0, "max_tokens")
+    j3.close()
+    final = jl.replay(p)
+    assert final == jl.replay(p)              # idempotent across 3 epochs
+    assert final.retired == {0: "max_tokens"} and not final.live
+
+
+def test_journal_reopen_repairs_missing_final_newline(tmp_path):
+    """A final record that parsed but lost only its newline: the reopened
+    writer restores the separator so the next append starts a fresh line
+    instead of merging two valid records into one malformed one."""
+    p = tmp_path / "serve.journal"
+    with jl.RequestJournal(p) as j:
+        j.begin_epoch()
+        j.record_submit(0, [1], 4)
+    raw = p.read_bytes()
+    assert raw.endswith(b"\n")
+    p.write_bytes(raw[:-1])                   # strip just the newline
+    j2 = jl.RequestJournal(p)
+    j2.record_token(0, 5)
+    j2.close()
+    st = jl.replay(p)
+    assert not st.truncated_tail              # nothing was lost ...
+    assert st.live[0].delivered == [5]        # ... and nothing merged
+
+
 def test_journal_mid_file_corruption_raises(tmp_path):
     p = tmp_path / "serve.journal"
     with jl.RequestJournal(p) as j:
@@ -452,6 +502,36 @@ def test_recovery_synthesizes_torn_retire(small_lm, tmp_path):
     eng.close()
 
 
+def test_recover_charges_deadline_for_downtime(small_lm, tmp_path):
+    """Deadlines keep ticking through the outage: the journaled submit
+    wall time dates the budget, so recovery re-admits with the residual
+    deadline — and a request already out of budget retires immediately
+    with reason "deadline", never a silently restarted clock."""
+    cfg, params = small_lm
+    jpath = tmp_path / "deadline.journal"
+    with jl.RequestJournal(jpath) as j:
+        j.begin_epoch()
+        j.record_submit(0, [5, 6, 7], 4, deadline_ms=250.0)
+        j.record_submit(1, [5, 6], 4, deadline_ms=1e7)
+    # backdate both submits: the process was "down" for ~10 wall seconds
+    recs = [json.loads(line) for line in jpath.read_text().splitlines()]
+    for rec in recs:
+        if rec["kind"] == "submit":
+            rec["wall_time_s"] -= 10.0
+    jpath.write_text("".join(json.dumps(r) + "\n" for r in recs))
+    eng = ServeEngine.recover(cfg, params, jpath, ecfg=ecfg_base())
+    # rid 0: 250ms budget, ~10s already gone -> expired while down
+    assert {r.rid for r in eng.poll()} == {0}
+    assert finish_reasons(eng) == {0: "deadline"}
+    # rid 1: generous budget resumes with the residual, not a fresh one
+    (rs,) = eng.scheduler.waiting
+    assert rs.rid == 1 and 0 < rs.deadline_ms < 1e7
+    eng.run([])
+    eng.close()
+    st = jl.replay(jpath)                     # ledger shows the repair
+    assert st.retired[0] == "deadline" and not st.live
+
+
 # ---------------------------------------------------------------------------
 # Live handoff
 # ---------------------------------------------------------------------------
@@ -535,6 +615,63 @@ def test_handoff_guards(small_lm):
         src.handoff(draining)
     for e in (src, other_seed, draining):
         e.close()
+
+
+def test_handoff_validation_failure_is_atomic(small_lm):
+    """A doomed handoff must fail BEFORE the source releases anything:
+    records that cannot be admitted on the target (max_seq too small, or
+    a live-rid collision) raise with the source untouched, still HEALTHY,
+    and able to finish every stream itself."""
+    cfg, params = small_lm
+    src = ServeEngine(cfg, params, ecfg_base())
+    for r in make_requests(cfg, max_new=8):
+        src.submit(r)
+    for _ in range(2):
+        src.step()
+    src.poll()
+    live_before = set(src._requests)
+    assert live_before
+    # target too small: every record's prompt + original budget > max_seq
+    tgt_small = ServeEngine(cfg, params, ecfg_base(max_seq=8))
+    with pytest.raises(ValueError, match="max_seq"):
+        src.handoff(tgt_small)
+    # target already serving one of the rids
+    tgt_busy = ServeEngine(cfg, params, ecfg_base())
+    tgt_busy.submit(Request(rid=min(live_before), prompt=np.array([5, 6]),
+                            max_new_tokens=2))
+    with pytest.raises(ValueError, match="live rid"):
+        src.handoff(tgt_busy)
+    # both refusals left the source intact: health, requests, queue
+    assert src.health == HEALTHY
+    assert set(src._requests) == live_before
+    assert not [e for e in src.trace.events(-1) if e["event"] == "health"]
+    done = src.run([])                        # and it still serves them all
+    assert {r.rid for r in done} == live_before
+    assert all(reason in ("eos", "max_tokens")
+               for reason in finish_reasons(src).values())
+    for e in (src, tgt_small, tgt_busy):
+        e.close()
+
+
+def test_handoff_carries_residual_deadline(small_lm):
+    """A deadline transfers as its residual budget: the elapsed time on
+    the source is charged before the target re-admits."""
+    cfg, params = small_lm
+    src = ServeEngine(cfg, params, ecfg_base())
+    src.submit(Request(rid=0, prompt=np.array([5, 6, 7]),
+                       max_new_tokens=6, deadline_ms=1e7))
+    src.step()
+    src.poll()
+    (rec,) = src._live_records()
+    assert rec["deadline_elapsed_ms"] > 0     # time on the source counts
+    tgt = ServeEngine(cfg, params, ecfg_base())
+    src.handoff(tgt)
+    (rs,) = [rs for rs in list(tgt.scheduler.waiting)
+             + [s for s in tgt.slot_req if s is not None]]
+    assert 0 < rs.deadline_ms < 1e7
+    tgt.run([])
+    src.close()
+    tgt.close()
 
 
 def test_begin_draining_stops_admissions(small_lm):
