@@ -28,7 +28,9 @@ from repro.core.build import build_grau
 from repro.core.folding import fold
 from repro.kernels import ops
 from repro.kernels.paged_attention import decode_grid, paged_attention
-from repro.kernels.ref import grau_ref, matmul_grau_ref, paged_attention_ref
+from repro.kernels.ref import (grau_ref, matmul_grau_ref, matmul_wq_ref,
+                               paged_attention_ref)
+from repro.quant import weights as wq_lib
 
 
 def traffic_model(m, k, n):
@@ -102,6 +104,55 @@ def bench_matmul_grau(quick: bool):
     return rows
 
 
+def wq_traffic_model(m, k, n, bits, k_tiles):
+    """Weight bytes to/from HBM for one decode-shaped GEMM: packed
+    power-of-two planes (bits/8 bytes per element + one exponent byte per
+    (tile, column)) vs the f32 weight matrix.  Activations and outputs are
+    identical on both sides, so the saving is the pure weight-stream term —
+    the model-bytes/step quantity serving_bench's weight_quant section
+    measures end-to-end from the compiled HLO."""
+    packed = k * n * bits / 8 + k_tiles * n
+    dense = 4 * k * n
+    return packed, dense
+
+
+def bench_matmul_wq(quick: bool):
+    rows = []
+    spec = _grau_spec()
+    shapes = [(8, 512, 256)] if quick else [(8, 512, 256), (256, 1024, 512)]
+    for m, k, n in shapes:
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (m, k), jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.float32)
+        for bits in (8, 4):
+            qw = wq_lib.pack_tensor(w, bits, caxis=-2)
+            us = _time(lambda: ops.matmul_wq(x, qw, tiles=(8, 128),
+                                             interpret=True))
+            us_ref = _time(lambda: matmul_wq_ref(x, qw))
+            ok = bool(jnp.all(ops.matmul_wq(x, qw, tiles=(8, 128),
+                                            interpret=True)
+                              == matmul_wq_ref(x, qw)))
+            # fused GRAU epilogue: the kernel's int8 activation bus must be
+            # bit-identical to dequant-matmul -> attn_output_quant
+            gok = bool(jnp.all(
+                ops.matmul_wq(x, qw, spec, s_in=2**-8, tiles=(8, 128),
+                              interpret=True)
+                == matmul_wq_ref(x, qw, spec, s_in=2**-8)))
+            packed_b, dense_b = wq_traffic_model(m, k, n, bits, qw.e.shape[0])
+            rows.append({"kernel": "matmul_wq", "shape": (m, k, n),
+                         "bits": bits, "us_kernel_interp": us,
+                         "us_ref": us_ref, "bitexact": ok,
+                         "grau_epilogue_bitexact": gok,
+                         "weight_bytes_packed": packed_b,
+                         "weight_bytes_f32": dense_b,
+                         "weight_traffic_saving": 1 - packed_b / dense_b})
+            print(f"kernel,matmul_wq,{m}x{k}x{n},bits={bits},"
+                  f"us_interp={us:.0f},us_ref={us_ref:.0f},bitexact={ok},"
+                  f"grau_bitexact={gok},weight_traffic_saving="
+                  f"{100 * (1 - packed_b / dense_b):.1f}%", flush=True)
+    return rows
+
+
 def bench_paged_attention(quick: bool):
     rows = []
     rng = np.random.default_rng(0)
@@ -171,7 +222,8 @@ def bench_paged_attention(quick: bool):
 
 
 def run(quick: bool = False, out: str | None = None):
-    rows = bench_matmul_grau(quick) + bench_paged_attention(quick)
+    rows = (bench_matmul_grau(quick) + bench_matmul_wq(quick)
+            + bench_paged_attention(quick))
     if out:
         with open(out, "w") as f:
             json.dump({"rows": rows}, f, indent=2, default=str)

@@ -365,6 +365,103 @@ def bench_kv_quant(cfg, params, args):
     return out
 
 
+def bench_weight_quant(cfg, params, args):
+    """Weight-only quantized serving: 16/8/4-bit matmul weights, one trace.
+
+    Reports, per weight_bits: tokens/sec on the same Poisson trace (packing
+    changes leaf types once at construction, never programs — the recompile
+    column must stay zero), resident weight bytes from the packed tree
+    (engine.decode_cost's ``weight_bytes`` — the floor-gated shrink ratios),
+    the compiled step's parameter bytes by dtype (the f32 -> s8 shift is the
+    model-bytes/step roofline term), and teacher-forced logit error / top-1
+    agreement vs the raw-f32 engine.  The probe reuses kv_logit_probe with a
+    pre-packed tree: identical datapath, so the delta is purely weight
+    storage error.  Closes with the full composition — int4 weights + int4
+    KV pools + GRAU attention activations — which must complete with bounded
+    error against its own f32 reference: the fully shift-based decode
+    datapath.
+    """
+    from repro.quant import weights as wq_lib
+    from repro.quant.policy import weight_policy
+
+    trace = synth_trace(args.wq_requests, args.interarrival, cfg.vocab_size,
+                        max(args.max_new, 8), args.seed)
+    base = dict(slots=max(args.slots, 4), max_seq=128, page_size=16,
+                seed=args.seed)
+    out = {"requests": args.wq_requests, "slots": base["slots"],
+           "max_seq": base["max_seq"]}
+
+    def probe(pcfg, p, bits, kv_bits=16):
+        packed = (p if bits == 16
+                  else wq_lib.pack_params(p, pcfg, weight_policy(bits)))
+        return kv_logit_probe(pcfg, packed, kv_bits, seed=args.seed)
+
+    logits = {}
+    for name, bits in (("wq16", 16), ("wq8", 8), ("wq4", 4)):
+        reps = []
+        for _ in range(args.wq_reps):
+            engine = ServeEngine(
+                cfg, params,
+                EngineConfig(weight_bits=bits if bits != 16 else None,
+                             **base))
+            warm = engine.warmup()
+            stats = run_trace(engine, trace, SamplingParams())
+            stats["recompiles_after_warmup"] = (engine.compile_count()
+                                                - warm)
+            reps.append(stats)
+        stats = sorted(reps, key=lambda s: s["tokens_per_s"])[len(reps) // 2]
+        stats["tokens_per_s_reps"] = [r["tokens_per_s"] for r in reps]
+        cost = engine.decode_cost(engine.decode_buckets[-1])
+        stats["weight_bytes"] = cost["weight_bytes"]
+        stats["param_bytes_by_dtype"] = cost["param_bytes_by_dtype"]
+        stats["weight_bits"] = bits
+        logits[name] = probe(cfg, params, bits)
+        stats["max_logit_error_vs_16"] = float(
+            np.max(np.abs(logits[name] - logits["wq16"])))
+        stats["top1_agreement_vs_16"] = float(np.mean(
+            logits[name].argmax(-1) == logits["wq16"].argmax(-1)))
+        out[name] = stats
+        print(f"weight_quant/{name}: {stats['tokens_per_s']:.1f} tok/s, "
+              f"weights {stats['weight_bytes']:.0f} B resident, "
+              f"max logit err {stats['max_logit_error_vs_16']:.4f}, "
+              f"top-1 agree {stats['top1_agreement_vs_16']:.2f} "
+              f"[{stats['recompiles_after_warmup']} recompiles]",
+              flush=True)
+    out["weight_bytes_ratio_int8"] = (out["wq16"]["weight_bytes"]
+                                      / out["wq8"]["weight_bytes"])
+    out["weight_bytes_ratio_int4"] = (out["wq16"]["weight_bytes"]
+                                      / out["wq4"]["weight_bytes"])
+    print(f"weight_quant: {out['weight_bytes_ratio_int8']:.2f}x fewer "
+          f"resident weight bytes at int8, "
+          f"{out['weight_bytes_ratio_int4']:.2f}x at int4", flush=True)
+
+    # composition: every matmul weight a shifted int4, every KV read a
+    # shifted int4, every attention activation through the GRAU PWLF — the
+    # paper's multiplier-free arithmetic on the whole decode datapath at
+    # once.  Gated on completing the trace with zero recompiles and bounded
+    # teacher-forced error vs the same GRAU model served in raw f32.
+    gcfg = cfg.replace(grau=GRAUConfig())
+    gparams, _ = lm.init_lm(gcfg, jax.random.PRNGKey(0),
+                            dtype=jax.numpy.float32)
+    engine = ServeEngine(gcfg, gparams,
+                         EngineConfig(weight_bits=4, kv_bits=4, **base))
+    warm = engine.warmup()
+    stats = run_trace(engine, trace, SamplingParams())
+    stats["recompiles_after_warmup"] = engine.compile_count() - warm
+    ref = probe(gcfg, gparams, 16)
+    comp = probe(gcfg, gparams, 4, kv_bits=4)
+    stats["max_logit_error_vs_16"] = float(np.max(np.abs(comp - ref)))
+    stats["top1_agreement_vs_16"] = float(np.mean(
+        comp.argmax(-1) == ref.argmax(-1)))
+    out["composition_wq4_kv4_grau"] = stats
+    print(f"weight_quant/composition wq4+kv4+grau: "
+          f"{stats['tokens_per_s']:.1f} tok/s, "
+          f"max logit err {stats['max_logit_error_vs_16']:.4f}, "
+          f"top-1 agree {stats['top1_agreement_vs_16']:.2f} "
+          f"[{stats['recompiles_after_warmup']} recompiles]", flush=True)
+    return out
+
+
 def synth_overload_trace(n: int, mean_interarrival_ticks: float, vocab: int,
                          max_new: int, seed: int, *, big_every: int = 6,
                          big_prompt: int = 60, max_prompt: int = 16):
@@ -1053,6 +1150,11 @@ def main() -> None:
                     help="requests in the quantized-KV (kv_quant) section")
     ap.add_argument("--kv-reps", type=int, default=3,
                     help="repetitions per kv_quant variant (median)")
+    ap.add_argument("--wq-requests", type=int, default=16,
+                    help="requests in the quantized-weight (weight_quant) "
+                         "section")
+    ap.add_argument("--wq-reps", type=int, default=3,
+                    help="repetitions per weight_quant variant (median)")
     ap.add_argument("--telemetry-requests", type=int, default=24,
                     help="requests in the telemetry-overhead section")
     ap.add_argument("--telemetry-reps", type=int, default=3,
@@ -1083,8 +1185,8 @@ def main() -> None:
                          "(the CI durability artifact)")
     ap.add_argument("--sections", default="all",
                     help="comma list of sections to run: runs,decode_scaling,"
-                         "prefix,kv_quant,telemetry,overload,faults,recovery "
-                         "(default all)")
+                         "prefix,kv_quant,weight_quant,telemetry,overload,"
+                         "faults,recovery (default all)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke sizes: fewer requests, smaller capacity")
@@ -1103,11 +1205,14 @@ def main() -> None:
         args.scaling_requests = 32
         args.kv_requests = 12
         args.kv_reps = 2
+        args.wq_requests = 12
+        args.wq_reps = 2
         args.overload_requests = 24
         args.recovery_requests = 4
         args.recovery_crash_ticks = 2
     for name in ("requests", "scaling_requests", "scaling_reps",
                  "prefix_requests", "prefix_reps", "kv_requests", "kv_reps",
+                 "wq_requests", "wq_reps",
                  "telemetry_requests", "telemetry_reps",
                  "overload_requests", "overload_blocks", "faults_requests",
                  "recovery_requests", "recovery_crash_ticks"):
@@ -1116,8 +1221,9 @@ def main() -> None:
     if args.faults_requests < 2:
         ap.error("--faults-requests must be >= 2 (the fault matrix targets "
                  "rid 1)")
-    sections = (("runs", "decode_scaling", "prefix", "kv_quant", "telemetry",
-                 "overload", "faults", "recovery")
+    sections = (("runs", "decode_scaling", "prefix", "kv_quant",
+                 "weight_quant", "telemetry", "overload", "faults",
+                 "recovery")
                 if args.sections == "all"
                 else tuple(s.strip() for s in args.sections.split(",") if s))
 
@@ -1174,6 +1280,8 @@ def main() -> None:
                                                         args)
     if "kv_quant" in sections:
         report["kv_quant"] = bench_kv_quant(base_cfg, params, args)
+    if "weight_quant" in sections:
+        report["weight_quant"] = bench_weight_quant(base_cfg, params, args)
     if "telemetry" in sections:
         report["telemetry"] = bench_telemetry(base_cfg, params, args)
     if "overload" in sections:

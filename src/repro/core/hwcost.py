@@ -19,6 +19,7 @@ model matches Table VI within a few percent and are reported alongside.
 from __future__ import annotations
 
 import dataclasses
+import math
 
 
 DATAPATH_BITS = 24  # MAC outputs of 8-bit QNNs reach ~[-1e5, 1e5] (paper §I-B)
@@ -151,6 +152,97 @@ def kv_cache_cost(*, num_layers: int, kv_heads: int, head_dim: int,
         pool_bytes=num_blocks * block_size * per_token_layer * num_layers,
         gather_bytes_per_step=(slots * live_blocks * block_size
                                * per_token_layer * num_layers),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Weight memory / bandwidth accounting (weight-only serving quantization)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WeightCostReport:
+    """Per-precision serving-weight storage terms, all in bytes.
+
+    Covers the packable matmul tensors (attention projections, MLP, embedding,
+    untied head) at ``weight_bits``.  16-bit rows model the raw f32 serving
+    tree (4 bytes/element, no scale planes); 8/4-bit rows model the packed
+    power-of-two layout of quant/weights.py: 1 or 0.5 payload bytes per
+    element plus one int8 exponent per (contraction tile, out-channel).
+    Norms and biases stay f32 at every width and are excluded — they are
+    constant across rows and orders of magnitude smaller than the matmuls.
+    ``bytes_per_decode_step`` equals ``total_bytes``: decode streams every
+    weight once per token, so total weight bytes IS the model-bytes/step
+    bandwidth term (the quantity decode_cost measures from the compiled HLO
+    as param_bytes_by_dtype).
+    """
+    weight_bits: int
+    payload_bytes: float
+    scale_bytes: float
+    layer_bytes: float             # all decoder layers together
+    embed_bytes: float             # embedding (+ head when untied)
+    total_bytes: float
+    bytes_per_decode_step: float
+
+
+def _wq_tensor_bytes(k: int, out: int, bits: int, tile_k: int) -> tuple:
+    """(payload, scale) bytes for one packed tensor with contraction length
+    ``k`` and ``out`` output elements — mirrors quant/weights.pack_tensor:
+    payload k*out elements at bits/8 bytes, one exponent byte per
+    (tile, out-channel) with the same largest-divisor tile rule."""
+    if bits == 16:
+        return 4.0 * k * out, 0.0
+    t = k if k <= tile_k else math.gcd(k, tile_k)
+    return k * out * bits / 8, (k // t) * out
+
+
+def weight_cost(*, num_layers: int, d_model: int, num_heads: int,
+                kv_heads: int, head_dim: int, d_ff: int, gated: bool,
+                vocab_size: int, tied: bool, weight_bits: int,
+                tile_k: int = 512) -> WeightCostReport:
+    """Analytical serving-weight memory model as f(weight_bits).
+
+    The weight-side sibling of :func:`kv_cache_cost`: one place computes the
+    startup table launch/serve.py logs (expected bytes at 16/8/4 bits) and
+    the floors benchmarks/serving_bench.py's weight_quant section gates its
+    measured ``weight_bytes`` ratios against.
+    """
+    if weight_bits not in (16, 8, 4):
+        raise ValueError(f"weight_bits must be 16, 8 or 4, got {weight_bits}")
+    # (contraction length, out elements) per tensor.  wo's shape is
+    # (heads, head_dim, d_model) with the tile axis on head_dim — each head
+    # carries its own scale rows, so its contraction length for the scale
+    # plane is head_dim, not heads*head_dim (payload bytes are identical
+    # either way; only the exponent count differs).
+    qkvo = [(d_model, num_heads * head_dim),        # wq
+            (d_model, kv_heads * head_dim),         # wk
+            (d_model, kv_heads * head_dim),         # wv
+            (head_dim, num_heads * d_model)]        # wo
+    mlp = ([(d_model, d_ff)] * (2 if gated else 1)  # w_gate / w_up
+           + [(d_ff, d_model)])                     # w_down
+    payload = scale = 0.0
+    for k, out in qkvo + mlp:
+        p, s = _wq_tensor_bytes(k, out, weight_bits, tile_k)
+        payload += p * num_layers
+        scale += s * num_layers
+    layer_bytes = payload + scale
+    # embedding packs along d_model (row gather stays packed); the untied
+    # head packs along its own contraction axis d_model as well
+    embed_tensors = [(d_model, vocab_size)] * (1 if tied else 2)
+    embed_bytes = 0.0
+    for k, out in embed_tensors:
+        p, s = _wq_tensor_bytes(k, out, weight_bits, tile_k)
+        payload += p
+        scale += s
+        embed_bytes += p + s
+    total = layer_bytes + embed_bytes
+    return WeightCostReport(
+        weight_bits=weight_bits,
+        payload_bytes=payload,
+        scale_bytes=scale,
+        layer_bytes=layer_bytes,
+        embed_bytes=embed_bytes,
+        total_bytes=total,
+        bytes_per_decode_step=total,
     )
 
 

@@ -14,6 +14,7 @@ import numpy as np
 
 from repro.kernels import grau as grau_kernel
 from repro.kernels import matmul_grau as mm_kernel
+from repro.kernels import matmul_wq as wq_kernel
 from repro.pwlf.spec import GRAUSpec, MAX_EXPONENTS
 
 
@@ -79,4 +80,39 @@ def matmul_grau(
         num_exponents=spec.num_exponents, qmin=spec.qmin, qmax=spec.qmax,
         tiles=tiles, interpret=interpret,
     )
+    return out[:m, :n].reshape(*orig_shape[:-1], n)
+
+
+def matmul_wq(x, w, spec: GRAUSpec = None, *, s_in: float = 1.0,
+              tiles=None, interpret=None) -> jax.Array:
+    """Weight-quantized GEMM: f32 x (..., K) against a packed 2-D
+    quant/weights.QuantWeight (caxis -2), dequantized per tile in VMEM.
+    With a GRAUSpec the fused epilogue emits the 8-bit activation bus.
+
+    K never needs padding — the pack tile divides it by construction; M/N
+    pad to block multiples like matmul_grau (payload pads with zero bytes,
+    which dequantize to exact zeros at any exponent).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    tiles = tiles or wq_kernel.DEFAULT_TILES
+    x2, orig_shape = _to_2d(x)
+    m = x2.shape[0]
+    n = w.q.shape[-1]
+    bm, bn = min(tiles[0], m), min(tiles[1], n)
+    pm, pn = (-m) % bm, (-n) % bn
+    xp = jnp.pad(x2, ((0, pm), (0, 0))) if pm else x2
+    qw, e = w.q, w.e
+    if pn:
+        qw = jnp.pad(qw, ((0, 0), (0, pn)))
+        e = jnp.pad(e, ((0, 0), (0, pn)))
+    kwargs = {}
+    if spec is not None:
+        bp, encp, sign, bias, pre = pack_spec(spec)
+        kwargs = dict(bp=bp, enc_packed=encp, sign=sign, bias=bias,
+                      pre_shift=pre, num_exponents=spec.num_exponents,
+                      qmin=spec.qmin, qmax=spec.qmax, s_in=s_in)
+    out = wq_kernel.matmul_wq_pallas(
+        xp, qw, e, bits=w.bits, kdim=w.kdim, tiles=(bm, bn),
+        interpret=interpret, **kwargs)
     return out[:m, :n].reshape(*orig_shape[:-1], n)

@@ -63,6 +63,23 @@ def attn_output_quant(o: jax.Array, spec: GRAUSpec, s_in: float) -> jax.Array:
     return grau_apply_int(xq, spec).astype(_out_dtype(spec))
 
 
+def matmul_wq_ref(x: jax.Array, w, spec: Optional[GRAUSpec] = None,
+                  s_in: float = 1.0) -> jax.Array:
+    """Oracle for kernels/matmul_wq.py: f32 activations x packed weight.
+
+    ``w`` is a quant/weights.QuantWeight (or a raw array, making this plain
+    dense).  Dequantizes through the same quant/weights.dense fallback every
+    CPU/mesh forward uses — exp2i-constructed scales, so oracle, fallback
+    and kernel agree bit-for-bit — then optionally composes the GRAU
+    epilogue exactly as attn_output_quant does.
+    """
+    from repro.quant import weights as wq
+    out = x.astype(jnp.float32) @ wq.dense(w)
+    if spec is None:
+        return out
+    return attn_output_quant(out, spec, s_in)
+
+
 def paged_attention_ref(
     q: jax.Array,             # (slots, h, d)
     k_pool: jax.Array,        # (num_blocks, block_size, kvh, d)

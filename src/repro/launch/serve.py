@@ -45,6 +45,11 @@ def main() -> None:
                     help="KV-cache precision: 16 = float pools, 8/4 = packed "
                          "int pools with per-block power-of-two scale "
                          "exponents (paged backend only)")
+    ap.add_argument("--weight-bits", type=int, choices=[16, 8, 4], default=16,
+                    help="serving-weight precision: 16 = raw f32 params, "
+                         "8/4 = matmul weights packed once at startup into "
+                         "power-of-two-scaled int planes (quant/weights.py); "
+                         "composes with --kv-bits")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="radix-tree shared-prefix KV reuse (paged only)")
     ap.add_argument("--prefill-chunk", type=int, default=None,
@@ -132,6 +137,8 @@ def main() -> None:
                         page_size=args.page_size, policy=args.policy,
                         num_blocks=args.num_blocks,
                         kv_bits=args.kv_bits if args.kv_bits != 16 else None,
+                        weight_bits=(args.weight_bits
+                                     if args.weight_bits != 16 else None),
                         prefix_cache=args.prefix_cache,
                         prefill_chunk=args.prefill_chunk,
                         prefill_token_budget=args.prefill_budget,
@@ -187,6 +194,28 @@ def main() -> None:
                   f"pool {r.pool_bytes / 1e6:8.3f} MB, "
                   f"gather {r.gather_bytes_per_step / 1e3:8.1f} KB/step"
                   f"{mark}")
+
+    # startup weight table: the other half of the serving memory budget —
+    # packable matmul bytes at each --weight-bits setting from the same
+    # analytic cost model family (core/hwcost.weight_cost). Decode streams
+    # every weight per token, so total bytes IS the model-bytes/step term.
+    from repro.core.hwcost import weight_cost
+    wq_layers = sum(sum(1 for spec in period
+                        if spec.kind == "attn" and spec.mlp == "dense")
+                    * repeats for period, repeats in cfg.groups)
+    print(f"serving weights (attn+dense-mlp layers={wq_layers}):")
+    for bits in (16, 8, 4):
+        w = weight_cost(num_layers=wq_layers, d_model=cfg.d_model,
+                        num_heads=cfg.num_heads, kv_heads=cfg.kv_heads_phys,
+                        head_dim=cfg.head_dim, d_ff=cfg.d_ff,
+                        gated=cfg.gated_mlp, vocab_size=cfg.vocab_size,
+                        tied=cfg.tie_embeddings, weight_bits=bits)
+        mark = " <- serving" if bits == args.weight_bits else ""
+        print(f"  weight_bits={bits:2d}: {w.total_bytes / 1e6:8.3f} MB total "
+              f"(layers {w.layer_bytes / 1e6:8.3f} MB, "
+              f"embed {w.embed_bytes / 1e6:8.3f} MB, "
+              f"scales {w.scale_bytes / 1e3:7.1f} KB)"
+              f"{mark}")
 
     sampling = SamplingParams(temperature=args.temperature,
                               top_k=args.top_k, top_p=args.top_p)

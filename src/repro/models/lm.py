@@ -20,6 +20,7 @@ from repro.nn.blocks import LayerSpec
 from repro.nn.common import (ParamBuilder, act_fn, make_activation, stack_axes,
                              stack_params)
 from repro.nn.mamba2 import SSMState
+from repro.quant import weights as wq_lib
 
 
 # ---------------------------------------------------------------------------
@@ -210,7 +211,8 @@ def apply_lm(
 ) -> Tuple[jax.Array, Any, jax.Array]:
     """Returns (logits, new_caches, aux_loss)."""
     act = act or make_act(cfg)
-    x = jnp.take(params["embed"], tokens, axis=0)
+    # gathers packed rows + exponent rows when the vocab table is quantized
+    x = wq_lib.take_rows(params["embed"], tokens)
     x = shard_ctx.constrain(x, "batch", "seq", "embed")
 
     if patch_embeds is not None:
@@ -241,9 +243,9 @@ def apply_lm(
 
     x = blocks.apply_norm(params, "ln_f", x, cfg.norm, cfg.norm_eps)
     if cfg.tie_embeddings:
-        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+        logits = jnp.einsum("bsd,vd->bsv", x, wq_lib.dense(params["embed"]))
     else:
-        logits = jnp.einsum("bsd,dv->bsv", x, params["head"])
+        logits = jnp.einsum("bsd,dv->bsv", x, wq_lib.dense(params["head"]))
     logits = shard_ctx.constrain(logits, "batch", "seq", "vocab")
     return logits, (tuple(new_caches) if caches is not None else None), aux_total
 

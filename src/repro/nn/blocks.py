@@ -20,6 +20,7 @@ from repro.nn.common import ParamBuilder, layernorm, rmsnorm
 from repro.nn.mamba2 import SSMConfig, SSMState, apply_mamba2, decode_mamba2, init_mamba2
 from repro.nn.moe import MoEConfig, apply_moe, init_moe
 from repro.nn.rope import apply_rope
+from repro.quant import weights as wq_lib
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,9 +84,11 @@ def init_attention(pb: ParamBuilder, cfg) -> None:
 
 
 def _qkv(params, x, cfg):
-    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
-    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
-    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    # wq_lib.dense is identity on raw arrays and the exact dequant fallback
+    # on packed QuantWeight leaves (weight-quantized serving)
+    q = jnp.einsum("bsd,dhk->bshk", x, wq_lib.dense(params["wq"]))
+    k = jnp.einsum("bsd,dhk->bshk", x, wq_lib.dense(params["wk"]))
+    v = jnp.einsum("bsd,dhk->bshk", x, wq_lib.dense(params["wv"]))
     if cfg.qkv_bias:
         q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
     return q, k, v
@@ -98,9 +101,9 @@ def apply_attention(
 ) -> Tuple[jax.Array, Optional[KVCache]]:
     """Training/prefill path (full sequence). Returns (out, prefill_cache)."""
     src = x if kv_source is None else kv_source
-    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
-    k = jnp.einsum("bsd,dhk->bshk", src, params["wk"])
-    v = jnp.einsum("bsd,dhk->bshk", src, params["wv"])
+    q = jnp.einsum("bsd,dhk->bshk", x, wq_lib.dense(params["wq"]))
+    k = jnp.einsum("bsd,dhk->bshk", src, wq_lib.dense(params["wk"]))
+    v = jnp.einsum("bsd,dhk->bshk", src, wq_lib.dense(params["wv"]))
     if cfg.qkv_bias:
         q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
     if kv_source is None:  # self-attention: rope
@@ -109,7 +112,7 @@ def apply_attention(
     o = attn_lib.chunked_attention(
         q, k, v, causal=causal and kv_source is None,
         q_chunk=q_chunk, kv_chunk=kv_chunk)
-    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+    out = jnp.einsum("bshk,hkd->bsd", o, wq_lib.dense(params["wo"]))
     new_cache = None
     if cache is not None:
         # prefill: write k/v into the pre-allocated max-seq cache buffers
@@ -146,14 +149,15 @@ def decode_attention_block(
         cache = attn_lib.paged_update(cache, k, v, paged)
         o = attn_lib.paged_decode_attention(q, cache, paged, impl=paged_impl,
                                             quant=attn_quant)
-        return jnp.einsum("bshk,hkd->bsd", o, params["wo"]), cache
+        return jnp.einsum("bshk,hkd->bsd", o,
+                          wq_lib.dense(params["wo"])), cache
     pos = cache.length[:, None]                                  # (b,1)
     q = apply_rope(q, pos, cfg.rope_theta)
     k = apply_rope(k, pos, cfg.rope_theta)
     cache = attn_lib.update_cache(cache, k.astype(cache.k.dtype),
                                   v.astype(cache.v.dtype))
     o = attn_lib.decode_attention(q, cache)
-    return jnp.einsum("bshk,hkd->bsd", o, params["wo"]), cache
+    return jnp.einsum("bshk,hkd->bsd", o, wq_lib.dense(params["wo"])), cache
 
 
 def paged_prefill_attention_block(
@@ -174,7 +178,7 @@ def paged_prefill_attention_block(
     cache = attn_lib.paged_prefill_update(cache, k, v, paged)
     o = attn_lib.paged_prefill_attention(q, cache, paged, impl=paged_impl,
                                          quant=attn_quant)
-    return jnp.einsum("bshk,hkd->bsd", o, params["wo"]), cache
+    return jnp.einsum("bshk,hkd->bsd", o, wq_lib.dense(params["wo"])), cache
 
 
 # ---------------------------------------------------------------------------
@@ -284,12 +288,16 @@ def init_mlp(pb: ParamBuilder, d_model: int, d_ff: int, gated: bool = True):
 
 
 def apply_mlp(params, x, act: Callable, gated: bool = True):
+    # wq_lib.matmul is plain `@` on raw arrays; on packed QuantWeight leaves
+    # it dispatches to the in-VMEM dequant Pallas kernel on TPU and to the
+    # exact dense fallback on CPU / under a mesh
     if gated:
-        h = act(x @ params["w_gate"]) * (x @ params["w_up"])
+        h = (act(wq_lib.matmul(x, params["w_gate"]))
+             * wq_lib.matmul(x, params["w_up"]))
     else:
-        h = act(x @ params["w_up"])
+        h = act(wq_lib.matmul(x, params["w_up"]))
     h = shard_ctx.constrain(h, "batch", "seq", "mlp")
-    return h @ params["w_down"]
+    return wq_lib.matmul(h, params["w_down"])
 
 
 # ---------------------------------------------------------------------------
@@ -373,19 +381,21 @@ def apply_layer(
         p_x = params["xattn"]
         if mode == "decode" and cross_cache is not None:
             # cached cross K/V: only the query projection runs per token
-            q = jnp.einsum("bsd,dhk->bshk", h, p_x["wq"])
+            q = jnp.einsum("bsd,dhk->bshk", h, wq_lib.dense(p_x["wq"]))
             o = attn_lib.chunked_attention(
                 q, cross_cache.k, cross_cache.v, causal=False,
                 q_chunk=q_chunk, kv_chunk=kv_chunk)
-            a = jnp.einsum("bshk,hkd->bsd", o, p_x["wo"])
+            a = jnp.einsum("bshk,hkd->bsd", o, wq_lib.dense(p_x["wo"]))
         else:
             assert encoder_out is not None
             a, _ = apply_attention(p_x, h, cfg, positions=positions,
                                    kv_source=encoder_out, causal=False,
                                    q_chunk=q_chunk, kv_chunk=kv_chunk)
             if cross_cache is not None:   # prefill: fill the cross cache
-                ck = jnp.einsum("bsd,dhk->bshk", encoder_out, p_x["wk"])
-                cv = jnp.einsum("bsd,dhk->bshk", encoder_out, p_x["wv"])
+                ck = jnp.einsum("bsd,dhk->bshk", encoder_out,
+                                wq_lib.dense(p_x["wk"]))
+                cv = jnp.einsum("bsd,dhk->bshk", encoder_out,
+                                wq_lib.dense(p_x["wv"]))
                 cross_cache = CrossKV(k=ck.astype(cross_cache.k.dtype),
                                       v=cv.astype(cross_cache.v.dtype))
         x = x + a

@@ -1,6 +1,6 @@
 """Mixed-precision policies — the one object that assigns bits end-to-end.
 
-A :class:`PrecisionPolicy` carries two rule sets:
+A :class:`PrecisionPolicy` carries three rule sets:
 
 * ``rules`` — weight/activation bit-widths per *stage* of the network (the
   paper's Table I mixed-precision protocol: VGG16/ResNet18 at 8/4/2/4/8 over
@@ -10,11 +10,16 @@ A :class:`PrecisionPolicy` carries two rule sets:
   see quant/kv.py).  The serving engine (serve/engine.py), the pool builder
   (serve/kv_cache.init_paged_caches) and both attention read paths consume
   *this* object — there is no per-module dtype knob anywhere downstream.
+* ``weight_rules`` — serving *weight* bit-widths per transformer layer
+  (16 = raw float params, 8/4 = packed int planes with per-(tile,
+  out-channel) power-of-two scale exponents, see quant/weights.py).  The
+  engine packs the parameter tree once at construction from these rules.
 
-Both rule sets are ordered (pattern, bits) lists matched against layer names
-(first match wins) with a default.  Serving layer names follow the cache tree
-structure: ``group{gi}.l{li}`` — e.g. ``("group0", 8)`` pins group 0's KV to
-int8 while everything else follows ``kv_default_bits``.
+All rule sets are ordered (pattern, bits) lists matched against layer names
+(first match wins) with a default.  Serving layer names follow the cache/
+param tree structure: ``group{gi}.l{li}`` — e.g. ``("group0", 8)`` pins
+group 0 to int8 while everything else follows the default; weight rules
+additionally see the ``embed`` and ``head`` tensors by those names.
 """
 from __future__ import annotations
 
@@ -25,6 +30,10 @@ from typing import Sequence, Tuple
 from repro.quant.kv import KV_BITS
 from repro.quant.quantizers import QConfig
 
+# serving weight plane widths: 16 = raw float params (engine dtype), 8/4 =
+# packed int8/int4 planes with power-of-two scale exponents
+WEIGHT_BITS = (16, 8, 4)
+
 
 @dataclasses.dataclass(frozen=True)
 class PrecisionPolicy:
@@ -32,6 +41,8 @@ class PrecisionPolicy:
     default_bits: int = 8
     kv_rules: Tuple[Tuple[str, int], ...] = ()   # (regex, kv_bits) per layer
     kv_default_bits: int = 16                    # 16 = unquantized KV pools
+    weight_rules: Tuple[Tuple[str, int], ...] = ()  # (regex, weight_bits)
+    weight_default_bits: int = 16                # 16 = raw float weights
 
     def __post_init__(self):
         for pattern, bits in self.kv_rules + (("<default>", self.kv_default_bits),):
@@ -39,6 +50,12 @@ class PrecisionPolicy:
                 raise ValueError(
                     f"kv rule {pattern!r}: kv_bits must be one of {KV_BITS}, "
                     f"got {bits}")
+        for pattern, bits in (self.weight_rules
+                              + (("<default>", self.weight_default_bits),)):
+            if bits not in WEIGHT_BITS:
+                raise ValueError(
+                    f"weight rule {pattern!r}: weight_bits must be one of "
+                    f"{WEIGHT_BITS}, got {bits}")
 
     def bits_for(self, layer_name: str) -> int:
         for pattern, bits in self.rules:
@@ -56,15 +73,34 @@ class PrecisionPolicy:
                 return bits
         return self.kv_default_bits
 
+    def weight_bits_for(self, layer_name: str) -> int:
+        """Serving weight bits for one layer (names: ``group{gi}.l{li}``,
+        plus ``embed`` / ``head`` for the vocabulary tensors)."""
+        for pattern, bits in self.weight_rules:
+            if re.search(pattern, layer_name):
+                return bits
+        return self.weight_default_bits
+
     @property
     def kv_quantized(self) -> bool:
         """True if any layer's KV cache stores packed integers (< 16 bits)."""
         return (self.kv_default_bits < 16
                 or any(b < 16 for _, b in self.kv_rules))
 
+    @property
+    def weights_quantized(self) -> bool:
+        """True if any layer's weights store packed integers (< 16 bits)."""
+        return (self.weight_default_bits < 16
+                or any(b < 16 for _, b in self.weight_rules))
+
     def with_kv(self, bits: int, rules: Tuple[Tuple[str, int], ...] = ()
                 ) -> "PrecisionPolicy":
         return dataclasses.replace(self, kv_default_bits=bits, kv_rules=rules)
+
+    def with_weights(self, bits: int, rules: Tuple[Tuple[str, int], ...] = ()
+                     ) -> "PrecisionPolicy":
+        return dataclasses.replace(self, weight_default_bits=bits,
+                                   weight_rules=rules)
 
 
 def unified(bits: int) -> PrecisionPolicy:
@@ -74,6 +110,11 @@ def unified(bits: int) -> PrecisionPolicy:
 def kv_policy(kv_bits: int) -> PrecisionPolicy:
     """Uniform KV-cache precision (the --kv-bits serving knob)."""
     return PrecisionPolicy(kv_default_bits=kv_bits)
+
+
+def weight_policy(weight_bits: int) -> PrecisionPolicy:
+    """Uniform serving-weight precision (the --weight-bits serving knob)."""
+    return PrecisionPolicy(weight_default_bits=weight_bits)
 
 
 def stage_policy(stage_bits: Sequence[int], fc_bits: int = 8) -> PrecisionPolicy:

@@ -1,0 +1,123 @@
+"""Power-of-two scale arithmetic shared by every packed-integer datapath.
+
+The KV cache (quant/kv.py) and the weight planes (quant/weights.py) store the
+same thing: int8 words — one value per byte at 8 bits, two split-halves
+nibbles per byte at 4 bits — scaled by a per-group *exponent* ``e`` so a
+stored ``q`` represents ``q * 2**e``.  Dequantization is an exponent add (a
+shift in fixed-point hardware), never a float multiply by an arbitrary
+calibrated scale; that is the paper's PoT convention, and both consumers
+must implement it bit-identically.  This module is the single home for that
+discipline — KV and weight code import it rather than copying it.
+
+Three properties are load-bearing (pinned by tests/test_weight_quant.py):
+
+* ``exp2i`` *constructs* 2^e from the f32 exponent field by bitcast.
+  ``jnp.exp2`` lowers to a polynomial approximation on some backends (XLA
+  CPU returns 8192.0039 for exp2(13.0)); an approximate power of two would
+  silently break the shift-only dequant contract.  The helper is jnp-only
+  (integer add + shift + bitcast) so it runs unchanged inside Pallas
+  kernel bodies.
+* ``pot_exponent`` is frexp-based integer arithmetic on the float's exponent
+  field — no log2/ceil rounding hazard, so identical values always produce
+  identical exponents (serving bit-exactness rides on this).
+* int4 packing is split-halves along the packed axis: byte ``i`` holds
+  element ``i`` in its low nibble and element ``i + n//2`` in its high
+  nibble, so unpacking is a sign-extend + concat, never an interleave
+  (lane-friendly inside kernels).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# exponent-plane init: far below any write-time exponent, so the first write
+# always sets (never inherits) the scale; 2.0**EXP_EMPTY is still a normal
+# f32, so dequantizing never-written storage stays finite
+EXP_EMPTY = -126
+
+
+def pot_qmax(bits: int) -> int:
+    """Symmetric integer range: +/- (2^(bits-1) - 1); -2^(bits-1) is unused
+    (the GRAU MAC convention — keeps negation closed under the bit width)."""
+    return (1 << (bits - 1)) - 1
+
+
+def exp2i(e: jax.Array) -> jax.Array:
+    """Exact 2^e for integer e in [-126, 126], built from the f32 exponent
+    field by bitcast.  jnp.exp2 lowers to a polynomial approximation on some
+    backends (XLA CPU returns 8192.0039 for exp2(13.0)) — an *approximate*
+    power of two would silently break the shift-only dequant contract, so
+    scales are constructed, not computed.  Works inside Pallas kernel bodies
+    (integer shift + bitcast only)."""
+    bits = (e.astype(jnp.int32) + 127) << 23
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def pot_exponent(amax: jax.Array, bits: int) -> jax.Array:
+    """Smallest power-of-two exponent e with amax representable as q * 2^e.
+
+    frexp gives amax = m * 2^f with m in [0.5, 1), i.e. amax <= 2^f; storing
+    at e = f - (bits - 1) puts the quantization grid's top step at
+    (2^(b-1) - 1) * 2^e — within one LSB of amax (the edge case clips by one
+    step in ``quantize_pot``).  Pure integer arithmetic on the float's
+    exponent field: no log2/ceil rounding hazards, bit-deterministic.
+    """
+    _, f = jnp.frexp(amax.astype(jnp.float32))
+    e = f.astype(jnp.int32) - (bits - 1)
+    return jnp.clip(e, EXP_EMPTY, 126).astype(jnp.int8)
+
+
+def quantize_pot(x: jax.Array, e: jax.Array, bits: int) -> jax.Array:
+    """Symmetric round-to-nearest onto the 2^e grid -> int8 (unpacked)."""
+    qmax = pot_qmax(bits)
+    s = exp2i(-e.astype(jnp.int32))
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) * s), -qmax, qmax)
+    return q.astype(jnp.int8)
+
+
+def dequantize_pot(q: jax.Array, e: jax.Array) -> jax.Array:
+    """q * 2^e in f32 — multiplying by an exact power of two is an exponent
+    add, the shift-only dequant the paper's datapath assumes."""
+    return q.astype(jnp.float32) * exp2i(e)
+
+
+def requant_shift(q: jax.Array, delta: jax.Array, bits: int) -> jax.Array:
+    """Re-express stored integers at an exponent raised by ``delta`` >= 0.
+
+    q * 2^e == (q >> delta) * 2^(e + delta): a rounding (round-half-up)
+    arithmetic right shift in int32, clipped back to the symmetric range.
+    Shift counts are clamped to 31 (int32 shift semantics); any delta that
+    large zeroes an int8 payload anyway.
+    """
+    qmax = pot_qmax(bits)
+    d = jnp.minimum(delta.astype(jnp.int32), 31)
+    shifted = jnp.where(
+        d > 0,
+        (q.astype(jnp.int32) + (1 << jnp.maximum(d - 1, 0))) >> d,
+        q.astype(jnp.int32))
+    return jnp.clip(shifted, -qmax, qmax).astype(jnp.int8)
+
+
+def pack_int4(q: jax.Array) -> jax.Array:
+    """(..., n) int8 nibbles -> (..., n//2) packed bytes.
+
+    Byte i = low nibble element i | high nibble element i + n//2
+    (split-halves layout: unpack is a concat, not an interleave).
+    """
+    n = q.shape[-1]
+    lo = q[..., : n // 2].astype(jnp.uint8) & 0xF
+    hi = q[..., n // 2:].astype(jnp.uint8) & 0xF
+    return (lo | (hi << 4)).astype(jnp.int8)
+
+
+def unpack_int4(p: jax.Array) -> jax.Array:
+    """(..., n//2) packed bytes -> (..., n) sign-extended int8.
+
+    ``(p << 4) >> 4`` sign-extends the low nibble; the arithmetic ``>> 4``
+    sign-extends the high one.  Concat restores the split-halves layout.
+    jnp-only, so the same helper runs inside Pallas kernel bodies.
+    """
+    p8 = p.astype(jnp.int8)
+    lo = (p8 << 4) >> 4
+    hi = p8 >> 4
+    return jnp.concatenate([lo, hi], axis=-1)

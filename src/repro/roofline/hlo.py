@@ -83,6 +83,16 @@ class Totals:
     # traffic, independent of full-pool-shaped in-place scatter outputs that
     # donation aliases away at runtime (serve/engine.decode_cost uses this)
     bytes_by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # entry-computation parameter bytes: what the compiled step *receives*
+    # from HBM-resident state (params + caches + decode state). Counted only
+    # at the entry computation — inner computations' parameters are call
+    # plumbing of the same arrays, and would multiply-count under trip
+    # counts. The dtype breakdown makes weight quantization visible: packing
+    # the param tree to int8/int4 planes moves bytes from f32 into s8
+    # (serve/engine.decode_cost reports this as the model-bytes/step term).
+    param_bytes: float = 0.0
+    param_bytes_by_dtype: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
 
     def add(self, other: "Totals", mult: float = 1.0):
         self.flops += other.flops * mult
@@ -93,6 +103,10 @@ class Totals:
             self.collective_by_op[k] = self.collective_by_op.get(k, 0.0) + v * mult
         for k, v in other.bytes_by_op.items():
             self.bytes_by_op[k] = self.bytes_by_op.get(k, 0.0) + v * mult
+        self.param_bytes += other.param_bytes * mult
+        for k, v in other.param_bytes_by_dtype.items():
+            self.param_bytes_by_dtype[k] = (
+                self.param_bytes_by_dtype.get(k, 0.0) + v * mult)
 
 
 class HLOModule:
@@ -181,6 +195,17 @@ class HLOModule:
         self._memo[comp] = t  # break cycles defensively
         for ins in self.computations.get(comp, []):
             op = ins.op
+            if op == "parameter" and comp == self.entry:
+                for dt, dims in _dims(ins.shape):
+                    if dt not in _DTYPE_BYTES:
+                        continue
+                    n = 1
+                    for d in dims:
+                        n *= d
+                    b = n * _DTYPE_BYTES[dt]
+                    t.param_bytes += b
+                    t.param_bytes_by_dtype[dt] = (
+                        t.param_bytes_by_dtype.get(dt, 0.0) + b)
             if op == "while":
                 trip = 1
                 tm = _TRIP.search(ins.rest)

@@ -96,6 +96,7 @@ from repro.models.config import ModelConfig
 from repro.nn.attention import (AttnQuant, CrossKV, KVCache, MLACache,
                                 PagedState)
 from repro.nn.mamba2 import SSMState
+from repro.quant import weights as wq_lib
 from repro.serve import faults as faults_lib
 from repro.serve import kv_cache as kvc
 from repro.serve import sampling as samp_lib
@@ -164,6 +165,12 @@ class EngineConfig:
     # datapath consumes — pools, kernels, gather fallback, COW all follow it
     kv_bits: Optional[int] = None     # shorthand: uniform KV precision
     # (builds kv_policy(kv_bits)); mutually exclusive with `precision`
+    weight_bits: Optional[int] = None  # shorthand: uniform serving-weight
+    # precision (16/8/4). <16 packs the parameter tree once at construction
+    # into power-of-two-scaled int planes (quant/weights.py) that every
+    # jitted step consumes directly. Composes with kv_bits (the two
+    # shorthands build one PrecisionPolicy); mutually exclusive with
+    # `precision`
     policy: str = "fcfs"          # "fcfs" | "prefill" (see serve/scheduler.py)
     max_prefills_per_tick: Optional[int] = None
     max_pending_ticks: int = 32   # force a host drain after this many
@@ -373,13 +380,22 @@ class ServeEngine:
         if ecfg.precision is not None and ecfg.kv_bits is not None:
             raise ValueError("pass either precision (a PrecisionPolicy) or "
                              "kv_bits (uniform shorthand), not both")
-        if ecfg.kv_bits is not None:
-            from repro.quant.policy import kv_policy
-            self.precision = kv_policy(ecfg.kv_bits)
+        if ecfg.precision is not None and ecfg.weight_bits is not None:
+            raise ValueError("pass either precision (a PrecisionPolicy) or "
+                             "weight_bits (uniform shorthand), not both")
+        if ecfg.kv_bits is not None or ecfg.weight_bits is not None:
+            from repro.quant.policy import PrecisionPolicy
+            self.precision = PrecisionPolicy(
+                kv_default_bits=(16 if ecfg.kv_bits is None
+                                 else ecfg.kv_bits),
+                weight_default_bits=(16 if ecfg.weight_bits is None
+                                     else ecfg.weight_bits))
         else:
             self.precision = ecfg.precision
         self._kv_quant = (self.precision is not None
                           and self.precision.kv_quantized)
+        self._wq = (self.precision is not None
+                    and self.precision.weights_quantized)
         if self._kv_quant and not self.paged:
             raise ValueError("quantized KV (kv_bits < 16) requires the paged "
                              "backend: dense/SSM/MLA caches stay float")
@@ -448,6 +464,15 @@ class ServeEngine:
                                          dtype=dtype)
             self.decode_buckets = ()
             self.radix = None
+
+        if self._wq:
+            # pack the parameter tree once at construction (validates int4
+            # evenness eagerly); QuantWeight leaves carry bits/axis/K/tile
+            # as static pytree aux, so every jitted step below traces once
+            # per shape exactly as with raw float params — zero extra
+            # compiles at any width
+            self.params = wq_lib.pack_params(self.params, cfg,
+                                             self.precision)
 
         if mesh is not None:
             from repro.serve import sharding as shard_lib
@@ -598,9 +623,14 @@ class ServeEngine:
         # static metric entries are computed once; metrics() is then a cheap
         # merge of running aggregates — no per-call recomputation (and no
         # side effects), so callers may poll it freely
+        wbits = sorted(set(wq_lib.weight_bits_by_layer(
+            self.cfg, self.precision).values()))
         self._static_metrics: Dict[str, Any] = {
             "backend": "paged" if self.paged else "dense",
             "telemetry": self.telemetry_enabled,
+            "weight_bits": wbits[0] if len(wbits) == 1 else list(wbits),
+            "weights_quantized": self._wq,
+            "weight_bytes": wq_lib.packed_param_bytes(self.params),
         }
         if self.paged:
             bits_tree = kvc.kv_bits_by_layer(self.cfg, self.precision)
@@ -2236,7 +2266,17 @@ class ServeEngine:
         t = analyze_hlo(hlo)
         return {"flops": t.flops, "bytes": t.bytes,
                 "dot_bytes": t.dot_bytes,
-                "gather_bytes": t.bytes_by_op.get("gather", 0.0)}
+                "gather_bytes": t.bytes_by_op.get("gather", 0.0),
+                # model-bytes/step: what the parameter tree streams per tick
+                # as stored (packed payloads + exponent planes at
+                # weight_bits < 16); weight_bytes is the host-side leaf sum,
+                # param_bytes the HLO entry-parameter cross-check (it also
+                # includes caches/state — the dtype split isolates the
+                # packed planes)
+                "weight_bytes": float(
+                    wq_lib.packed_param_bytes(self.params)),
+                "param_bytes": t.param_bytes,
+                "param_bytes_by_dtype": dict(t.param_bytes_by_dtype)}
 
     def metrics(self) -> Dict[str, Any]:
         """Snapshot of the engine's serving metrics (merged over the

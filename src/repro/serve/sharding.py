@@ -41,6 +41,7 @@ Everything resolves through the same logical-axis rules as training
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 import numpy as np
@@ -54,6 +55,7 @@ from repro.launch.mesh import (make_serve_mesh, named_shardings,  # noqa: F401
                                parse_mesh_spec)
 from repro.models.config import ModelConfig
 from repro.nn.attention import PagedKVCache, QuantPagedKVCache
+from repro.quant.weights import QuantWeight
 
 
 def _axis_size(mesh: Mesh, axis: str) -> int:
@@ -72,9 +74,58 @@ def with_shard_ctx(fn, mesh: Mesh, cfg: ModelConfig):
     return steps_lib._with_shard_ctx(fn, mesh, activation_overrides(cfg, mesh))
 
 
+def _axis_prod(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    names = entry if isinstance(entry, tuple) else (entry,)
+    out = 1
+    for name in names:
+        out *= _axis_size(mesh, name)
+    return out
+
+
+def _wq_leaf_spec(spec, w: QuantWeight, mesh: Mesh):
+    """Spec pair for one packed weight (quant/weights.QuantWeight).
+
+    Packing preserves rank, so the payload keeps the unpacked tensor's TP
+    placement on every *non-contraction* axis.  The contraction axis always
+    replicates: dequantization reshapes it into (tiles, tile) in place, and
+    XLA's SPMD partitioner miscompiles that axis-splitting reshape on
+    sharded int8 payloads (wrong nibble-shift results on the CPU backend
+    despite value-equal inputs) — replicating the one axis sidesteps it,
+    and only w_down (whose TP axis IS its contraction axis) pays with full
+    replication.  The exponent plane shards alongside the payload with its
+    tile-count axis replicated (negligible bytes).  The result is a
+    QuantWeight *of PartitionSpecs* carrying the same static aux as the
+    array leaf, so the sharding tree's treedef matches the param tree's
+    for device_put.
+    """
+    nd = w.q.ndim
+    entries = list(spec) + [None] * (nd - len(spec))
+    pos = nd + w.caxis
+    entries[pos] = None
+    for i, entry in enumerate(entries):
+        if i != pos and w.q.shape[i] % _axis_prod(mesh, entry):
+            entries[i] = None
+    e_entries = list(entries)
+    return dataclasses.replace(w, q=P(*entries), e=P(*e_entries))
+
+
 def place_params(params, cfg: ModelConfig, mesh: Mesh):
-    """Tensor-parallel placement (no FSDP): returns the committed param tree."""
+    """Tensor-parallel placement (no FSDP): returns the committed param tree.
+
+    Weight-quantized trees place packed leaves natively: the base pspecs
+    (built from the unpacked tree structure — P leaves pair with whole
+    QuantWeight subtrees under flatten_up_to) are refined per packed leaf
+    by _wq_leaf_spec, so payload and exponent planes shard together and no
+    dense materialization ever happens on the way to the devices.
+    """
     _, pspecs = steps_lib.param_pspecs(cfg, mesh, fsdp=False)
+    pspecs = jax.tree.map(
+        lambda spec, leaf: (_wq_leaf_spec(spec, leaf, mesh)
+                            if isinstance(leaf, QuantWeight) else spec),
+        pspecs, params,
+        is_leaf=lambda x: isinstance(x, P))
     return jax.device_put(params, named_shardings(mesh, pspecs))
 
 
